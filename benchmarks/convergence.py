@@ -1,0 +1,59 @@
+"""Fig. 2: convergence speedup of BlendAvg over FedAvg.
+
+Measures rounds needed to reach a target multimodal AUROC for both
+aggregators at varying local-epoch intervals under non-IID clients
+(Dirichlet label skew — the heterogeneous setting BlendAvg is built for:
+performance-weighting discards degrading client updates).
+
+    Speedup = rounds_to_target(FedAvg) / rounds_to_target(BlendAvg)
+
+Paper: speedup grows with the interval, peaking ~46% at 6 local epochs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ExpConfig, run_blendfl, setup
+
+
+def rounds_to_target(history, target: float):
+    for h in history:
+        if h["multimodal_auroc"] >= target:
+            return h["round"] + 1
+    return None
+
+
+def run(intervals=(1, 2, 4, 6), target: float = 0.78, rounds: int = 60,
+        seeds=(0, 1), alpha: float = 0.3):
+    print(f"target multimodal AUROC = {target}, dirichlet alpha = {alpha}")
+    print(f"{'interval':>8s} {'fedavg':>8s} {'blendavg':>9s} {'speedup':>8s}")
+    rows = []
+    for k in intervals:
+        per = {"fedavg": [], "blendavg": []}
+        for seed in seeds:
+            exp = ExpConfig(task="smnist", rounds=rounds, seed=seed,
+                            dirichlet_alpha=alpha)
+            te = setup(exp)[3]
+            for agg in per:
+                _, hist, _ = run_blendfl(exp, history_test=te, aggregator=agg,
+                                         local_epochs=k)
+                r = rounds_to_target(hist, target)
+                per[agg].append(r if r is not None else rounds * 2)  # censored
+        nf = float(np.mean(per["fedavg"]))
+        nb = float(np.mean(per["blendavg"]))
+        speedup = nf / nb
+        rows.append((k, nf, nb, speedup))
+        print(f"{k:8d} {nf:8.1f} {nb:9.1f} {speedup:8.2f}", flush=True)
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    print("\n=== Fig. 2: BlendAvg vs FedAvg convergence (non-IID) ===")
+    if quick:
+        run(intervals=(1, 4), target=0.72, rounds=25, seeds=(0,))
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""§Roofline report: renders the dry-run sweep (dryrun.jsonl) into the
+per-(arch x shape x mesh) table EXPERIMENTS.md embeds.
+
+Run the sweep first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes \
+        --out benchmarks/results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+
+
+def load(path: str = RESULTS) -> list:
+    if not os.path.exists(path):
+        return []
+    recs = []
+    for line in open(path):
+        recs.append(json.loads(line))
+    # keep the LAST record per (arch, shape, mesh) — reruns append
+    dedup = {}
+    for r in recs:
+        dedup[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return list(dedup.values())
+
+
+def render(recs: list, mesh: str = "16x16") -> str:
+    lines = [
+        f"{'arch':20s} {'shape':12s} {'tc_ms':>9s} {'tm_ms':>10s} {'tx_ms':>10s} "
+        f"{'bottleneck':>10s} {'useful':>7s} {'collMB/dev':>11s}"]
+    for r in sorted(recs, key=lambda r: (r.get("arch", ""), r.get("shape", ""))):
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skip":
+            lines.append(f"{r['arch']:20s} {r['shape']:12s} "
+                         f"{'SKIP (see DESIGN.md)':>60s}")
+            continue
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"{r['arch']:20s} {r['shape']:12s} {ro['t_compute_ms']:9.2f} "
+            f"{ro['t_memory_ms']:10.1f} {ro['t_collective_ms']:10.1f} "
+            f"{ro['bottleneck']:>10s} {ro['useful_ratio']:7.2f} "
+            f"{ro['coll_mb_per_dev']:11.0f}")
+    return "\n".join(lines)
+
+
+def main(quick: bool = False) -> None:
+    recs = load()
+    if not recs:
+        print("\n=== roofline: no dryrun.jsonl found (run the dry-run sweep) ===")
+        return
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    sk = sum(1 for r in recs if r.get("status") == "skip")
+    print(f"\n=== §Roofline (from compiled dry-run; {ok} ok / {sk} skip) ===")
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n-- mesh {mesh} --")
+        print(render(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

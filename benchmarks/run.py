@@ -1,0 +1,69 @@
+"""Benchmark driver — one section per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+
+Sections: tables (I-III), convergence (Fig 2), ablations (Fig 3-4),
+kernels, roofline, inference (decentralized-inference cost).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def run_inference_bench(quick: bool = False) -> None:
+    """Decentralized vs server-mediated inference (paper contribution #2)."""
+    import jax
+    import numpy as np
+
+    from benchmarks.common import ExpConfig, run_blendfl, timeit
+    from repro.core.inference import (InferenceRequest, communication_cost,
+                                      local_predict, vfl_server_inference)
+
+    print("\n=== decentralized inference vs VFL serving ===")
+    exp = ExpConfig(task="smnist", rounds=4 if quick else 8)
+    _, _, (fed, te) = run_blendfl(exp)
+    m, ecfg, kind = fed.global_models, fed.ecfg, fed.spec.kind
+    req = InferenceRequest(te.x_a[:32], te.x_b[:32])
+
+    t_local = timeit(lambda: jax.block_until_ready(
+        local_predict(m, req, ecfg, kind)[0]), n=10)
+    t_server = timeit(lambda: jax.block_until_ready(
+        vfl_server_inference(m, fed.server_gmv, req, ecfg, kind)[0]), n=10)
+    c_local = communication_cost(32, ecfg.d_hidden, "decentralized")
+    c_server = communication_cost(32, ecfg.d_hidden, "vfl")
+    print(f"{'mode':16s} {'us_per_batch':>12s} {'net_msgs':>9s} {'net_bytes':>10s}")
+    print(f"{'decentralized':16s} {t_local:12.0f} {c_local['messages']:9d} "
+          f"{c_local['bytes']:10d}")
+    print(f"{'vfl_server':16s} {t_server:12.0f} {c_server['messages']:9d} "
+          f"{c_server['bytes']:10d}")
+    print("--> BlendFL serves locally with zero network traffic; conventional "
+          "VFL pays 2 uploads + 1 download per request and needs a live server")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    choices=["tables", "convergence", "ablations", "kernels",
+                             "roofline", "inference"])
+    args = ap.parse_args()
+    t0 = time.time()
+
+    sections = {}
+    from benchmarks import ablations, convergence, kernels_bench, roofline_report, tables
+    sections["tables"] = tables.main
+    sections["convergence"] = convergence.main
+    sections["ablations"] = ablations.main
+    sections["kernels"] = kernels_bench.main
+    sections["roofline"] = roofline_report.main
+    sections["inference"] = run_inference_bench
+
+    todo = [args.only] if args.only else list(sections)
+    for name in todo:
+        sections[name](quick=args.quick)
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fig. 2 in miniature: BlendAvg vs FedAvg convergence under non-IID
+clients, printed as an ASCII curve.
+
+    PYTHONPATH=src python examples/convergence_speedup.py
+"""
+import jax
+
+from repro.core import FedConfig, Federation, evaluate_global, partition
+from repro.core.encoders import EncoderConfig
+from repro.data.synthetic import make_task, train_val_test
+
+
+def curve(aggregator: str, rounds: int = 30):
+    spec = make_task("smnist")
+    train, val, test = train_val_test(spec, 500, 300, 400, seed=0)
+    clients = partition(train, 3, dirichlet_alpha=0.3, seed=1)
+    fed = Federation.init(
+        jax.random.PRNGKey(0),
+        FedConfig(n_clients=3, rounds=rounds, lr=1e-2, aggregator=aggregator,
+                  local_epochs=2),
+        spec, EncoderConfig(d_hidden=48), clients, val)
+    points = []
+    for r in range(rounds):
+        fed.round()
+        if (r + 1) % 3 == 0:
+            points.append((r + 1, evaluate_global(fed, test)["multimodal_auroc"]))
+    return points
+
+
+def main() -> None:
+    print("multimodal AUROC vs round (non-IID, 2 local epochs/round)\n")
+    curves = {agg: curve(agg) for agg in ("fedavg", "blendavg")}
+    print(f"{'round':>6s} {'fedavg':>8s} {'blendavg':>9s}")
+    for (r, fa), (_, ba) in zip(*curves.values()):
+        bar_f = "#" * int((fa - 0.4) * 50)
+        bar_b = "*" * int((ba - 0.4) * 50)
+        print(f"{r:6d} {fa:8.3f} {ba:9.3f}  {bar_f}\n{'':26s}{bar_b}")
+    best_f = max(v for _, v in curves["fedavg"])
+    first_b = next((r for r, v in curves["blendavg"] if v >= best_f), None)
+    last_f = curves["fedavg"][-1][0]
+    if first_b:
+        print(f"\nBlendAvg reaches FedAvg's best ({best_f:.3f}) at round "
+              f"{first_b} vs {last_f} -> speedup {last_f/first_b:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Decentralized inference demo (paper contribution #2).
+
+Trains a small federation, then serves three request types from a
+hospital's LOCAL blended models — multimodal, unimodal-A, unimodal-B —
+and contrasts latency/communication with conventional VFL serving
+(features up to the server, predictions back).
+
+    PYTHONPATH=src python examples/decentralized_inference.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core import FedConfig, Federation, partition
+from repro.core.encoders import EncoderConfig
+from repro.core.inference import (InferenceRequest, communication_cost,
+                                  local_predict, vfl_server_inference)
+from repro.data.synthetic import make_task, train_val_test
+from repro.metrics import auroc
+
+
+def main() -> None:
+    spec = make_task("smnist")
+    train, val, test = train_val_test(spec, 500, 300, 400, seed=0)
+    clients = partition(train, 3, seed=1)
+    fed = Federation.init(jax.random.PRNGKey(0),
+                          FedConfig(n_clients=3, rounds=25, lr=1e-2),
+                          spec, EncoderConfig(d_hidden=48), clients, val)
+    print("training 25 BlendFL rounds...")
+    fed.fit()
+    models, ecfg, kind = fed.global_models, fed.ecfg, fed.spec.kind
+
+    print("\n-- decentralized serving at hospital 2 (no server round-trip) --")
+    for req, label, y in [
+        (InferenceRequest(test.x_a[:64], test.x_b[:64]), "both modalities", test.y[:64]),
+        (InferenceRequest(test.x_a[:64], None), "only EHR/audio (A)", test.y[:64]),
+        (InferenceRequest(None, test.x_b[:64]), "only CXR/image (B)", test.y[:64]),
+    ]:
+        t0 = time.perf_counter()
+        scores, mode = local_predict(models, req, ecfg, kind)
+        jax.block_until_ready(scores)
+        dt = (time.perf_counter() - t0) * 1e3
+        print(f"  {label:22s} -> {mode:12s} auroc={auroc(y, np.asarray(scores)):.3f} "
+              f"{dt:6.1f} ms, {communication_cost(64, ecfg.d_hidden, 'decentralized')}")
+
+    print("\n-- conventional VFL serving (server required, both modalities) --")
+    req = InferenceRequest(test.x_a[:64], test.x_b[:64])
+    t0 = time.perf_counter()
+    scores, msgs = vfl_server_inference(models, fed.server_gmv, req, ecfg, kind)
+    jax.block_until_ready(scores)
+    dt = (time.perf_counter() - t0) * 1e3
+    print(f"  both modalities        -> server       auroc={auroc(test.y[:64], np.asarray(scores)):.3f} "
+          f"{dt:6.1f} ms, {communication_cost(64, ecfg.d_hidden, 'vfl')}")
+    print("\nconventional VFL cannot serve the unimodal requests at all — "
+          "and every request costs a server round-trip.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end driver: the paper's clinical scenario (Fig. 1).
+
+Three hospitals hold heterogeneous multimodal data (EHR time-series +
+imaging embeddings): hospital 1 is multimodal (paired), hospitals 2-3
+mostly unimodal (partial + fragmented). They collaboratively train
+clinical-conditions and mortality predictors with BlendFL, compare
+against FedAvg and centralized learning, and checkpoint the global
+models.
+
+    PYTHONPATH=src python examples/federated_hospitals.py [--rounds 60]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.checkpoint import save_checkpoint
+from repro.core import FedConfig, Federation, evaluate_global, partition
+from repro.core.baselines import run_centralized, run_fedavg
+from repro.core.encoders import EncoderConfig
+from repro.data.synthetic import make_task, train_val_test
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--task", default="mortality", choices=["mortality", "conditions"])
+    ap.add_argument("--ckpt-dir", default="/tmp/blendfl_ckpt")
+    args = ap.parse_args()
+
+    spec = make_task(args.task)
+    train, val, test = train_val_test(spec, 600, 400, 600, seed=0)
+    # fig-1 style asymmetry: hospital 1 multimodal-heavy, 2-3 unimodal
+    clients = partition(train, 3, frac_paired=0.35, frac_fragmented=0.30,
+                        frac_partial=0.35, seed=1)
+    for i, c in enumerate(clients):
+        print(f"hospital {i+1}: paired={len(c.paired_a)} "
+              f"frag_A={len(c.frag_a)} frag_B={len(c.frag_b)} "
+              f"partial_A={len(c.partial_a)} partial_B={len(c.partial_b)}")
+
+    ecfg = EncoderConfig(d_hidden=48, n_layers=2, enc_type="mlp")
+    fcfg = FedConfig(n_clients=3, rounds=args.rounds, lr=1e-2, batch_size=64)
+
+    t0 = time.time()
+    fed = Federation.init(jax.random.PRNGKey(0), fcfg, spec, ecfg, clients, val)
+    for r in range(args.rounds):
+        logs = fed.round()
+        if (r + 1) % 10 == 0:
+            res = evaluate_global(fed, test)
+            print(f"round {r+1:3d}  mm_auroc={res['multimodal_auroc']:.3f} "
+                  f"A={res['uni_a_auroc']:.3f} B={res['uni_b_auroc']:.3f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+
+    blendfl = evaluate_global(fed, test)
+    fedavg, _ = run_fedavg(jax.random.PRNGKey(0), spec, ecfg, clients, val,
+                           test, fcfg)
+    central, _ = run_centralized(jax.random.PRNGKey(0), spec, ecfg, clients,
+                                 val, test, fcfg)
+    print("\nfinal multimodal AUROC:")
+    for name, res in (("blendfl", blendfl), ("fedavg", fedavg),
+                      ("centralized", central)):
+        print(f"  {name:12s} {res['multimodal_auroc']:.3f}")
+
+    path = save_checkpoint(args.ckpt_dir, args.rounds, fed.global_models,
+                           {"task": args.task, **{k: float(v) for k, v in blendfl.items()}})
+    print(f"\nblended global models checkpointed to {path}")
+
+
+if __name__ == "__main__":
+    main()

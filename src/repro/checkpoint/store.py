@@ -1,0 +1,77 @@
+"""Checkpointing: pytree <-> .npz + JSON manifest (no orbax offline).
+
+Layout:  <dir>/step_<N>/arrays.npz   flattened leaves keyed by path string
+         <dir>/step_<N>/manifest.json  treedef + shapes/dtypes + metadata
+
+On restore we fetch to host then (optionally) device_put with the target
+sharding, which is how a multi-host restore distributes shards.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        items[key] = np.asarray(leaf)
+    return items, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: dict | None = None) -> str:
+    out = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    items, _ = _flatten_with_paths(tree)
+    np.savez(os.path.join(out, "arrays.npz"), **items)
+    manifest = {
+        "step": step,
+        "keys": sorted(items.keys()),
+        "shapes": {k: list(v.shape) for k, v in items.items()},
+        "dtypes": {k: str(v.dtype) for k, v in items.items()},
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return out
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, target_tree, step: int | None = None, sharding=None):
+    """Restore into the structure of ``target_tree`` (values replaced)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    # `items` preserves tree-flatten order (dict insertion order), so the
+    # restored leaves line up with the target treedef.
+    items, _ = _flatten_with_paths(target_tree)
+    out_leaves = []
+    for key, want in items.items():
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(f"shape mismatch for {key!r}: {arr.shape} vs {want.shape}")
+        if sharding is not None:
+            arr = jax.device_put(arr, sharding)
+        out_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(target_tree), out_leaves)

@@ -1,0 +1,26 @@
+"""Common utilities: pytree helpers, dtype policies, rng helpers."""
+from repro.common.tree import (
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_weighted_sum,
+    tree_l2_norm,
+    tree_size,
+    tree_cast,
+    tree_stack,
+    tree_unstack,
+    tree_index,
+)
+
+__all__ = [
+    "tree_zeros_like",
+    "tree_add",
+    "tree_scale",
+    "tree_weighted_sum",
+    "tree_l2_norm",
+    "tree_size",
+    "tree_cast",
+    "tree_stack",
+    "tree_unstack",
+    "tree_index",
+]

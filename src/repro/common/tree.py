@@ -1,0 +1,60 @@
+"""Pytree arithmetic helpers (we do not depend on optax/chex)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_weighted_sum(trees, weights):
+    """sum_i weights[i] * trees[i] for a list of pytrees."""
+    out = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = jax.tree.map(lambda o, x, w=w: o + w * x, out, t)
+    return out
+
+
+def tree_l2_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar parameters."""
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def tree_stack(trees):
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree, n: int):
+    """Inverse of tree_stack: a stacked pytree -> list of n pytrees."""
+    return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def tree_index(tree, i):
+    """Dynamic index into the leading (stacked) axis of every leaf."""
+    return jax.tree.map(lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False), tree)

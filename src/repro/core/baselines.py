@@ -1,0 +1,492 @@
+"""The paper's seven FL baselines + centralized learning (§IV-C).
+
+Every baseline consumes the same partitioned clients and returns the same
+metric dict as ``federation.evaluate_global``, so Tables I-III are
+apples-to-apples. HFL baselines train local models on ALL locally held
+data (fragmented rows are only usable unimodally without a VFL exchange);
+VFL baselines train on the cross-client aligned sample set.
+
+Implementation notes (documented deviations, all favorable to baselines):
+- FedMA: greedy neuron matching on hidden-layer weights (the full
+  Hungarian/BBP-MAP of the paper is replaced by greedy best-match, which
+  is the standard light implementation); non-matchable leaves are plain
+  averaged.
+- One-Shot VFL: the local semi-supervised stage is supervised here (our
+  synthetic clients all hold labels), followed by the single feature
+  upload and server-side head training on frozen latents.
+- HFCL: clients are split half/half into FL-capable and data-sharing; the
+  server trains a surrogate model on the pooled shared data and joins the
+  FedAvg average.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vfl
+from repro.core.blendavg import blend_trees, fedavg
+from repro.core.encoders import (
+    EncoderConfig,
+    encoder_apply,
+    fusion_apply,
+    init_client_models,
+    task_loss,
+)
+from repro.core.federation import (
+    FedConfig,
+    _client_bwd_update,
+    _client_fwd,
+    _paired_sgd_step,
+    _server_fwd_bwd,
+    _unimodal_sgd_step,
+    eval_multimodal,
+    eval_unimodal,
+)
+from repro.core.partitioner import ClientData, ModalView
+from repro.data.synthetic import SyntheticMultimodal, TaskSpec
+from repro.models.common import dense
+
+
+def _evaluate(models: dict, test: SyntheticMultimodal, ecfg, kind) -> dict:
+    out = {}
+    for metric in ("auroc", "auprc"):
+        out[f"multimodal_{metric}"] = eval_multimodal(
+            models["f_A"], models["f_B"], models["g_M"],
+            test.x_a, test.x_b, test.y, ecfg, kind, metric)
+        out[f"uni_a_{metric}"] = eval_unimodal(
+            models["f_A"], models["g_A"], test.x_a, test.y, ecfg, kind, metric)
+        out[f"uni_b_{metric}"] = eval_unimodal(
+            models["f_B"], models["g_B"], test.x_b, test.y, ecfg, kind, metric)
+    return out
+
+
+# ---------------------------------------------------------------- helpers --
+
+def _batches(view: ModalView, bs: int, rng):
+    idx = rng.permutation(len(view))
+    for i in range(0, len(idx), bs):
+        sel = idx[i : i + bs]
+        yield jnp.asarray(view.x[sel]), jnp.asarray(view.y[sel])
+
+
+def _paired_batches(cd: ClientData, bs: int, rng):
+    idx = rng.permutation(len(cd.paired_a))
+    for i in range(0, len(idx), bs):
+        sel = idx[i : i + bs]
+        yield (jnp.asarray(cd.paired_a.x[sel]), jnp.asarray(cd.paired_b.x[sel]),
+               jnp.asarray(cd.paired_a.y[sel]))
+
+
+@functools.partial(jax.jit, static_argnames=("ecfg", "kind", "lr", "modality", "mu"))
+def _unimodal_prox_step(f, g, x, y, f0, g0, *, ecfg, kind, lr, modality, mu):
+    """FedProx local step: + mu/2 ||w - w_global||^2."""
+    del modality
+
+    def loss_fn(f_, g_):
+        h = encoder_apply(f_, x, ecfg)
+        base = task_loss(dense(g_, h), y, kind)
+        sq = lambda t, t0: sum(jnp.sum(jnp.square(a - b)) for a, b in
+                               zip(jax.tree.leaves(t), jax.tree.leaves(t0)))
+        return base + 0.5 * mu * (sq(f_, f0) + sq(g_, g0))
+
+    loss, (gf, gg) = jax.value_and_grad(loss_fn, argnums=(0, 1))(f, g)
+    f = jax.tree.map(lambda p, gr: p - lr * gr, f, gf)
+    g = jax.tree.map(lambda p, gr: p - lr * gr, g, gg)
+    return f, g, loss
+
+
+def _local_train(models: dict, cd: ClientData, ecfg, kind, lr, bs, epochs, rng,
+                 prox_mu: float = 0.0, global_ref: dict | None = None) -> int:
+    """Local training on all local data (HFL client). Returns #local steps."""
+    steps = 0
+    for _ in range(epochs):
+        for mod, view in (("A", cd.all_a()), ("B", cd.all_b())):
+            if len(view) == 0:
+                continue
+            f, g = models[f"f_{mod}"], models[f"g_{mod}"]
+            for x, y in _batches(view, bs, rng):
+                if prox_mu > 0:
+                    f, g, _ = _unimodal_prox_step(
+                        f, g, x, y, global_ref[f"f_{mod}"], global_ref[f"g_{mod}"],
+                        ecfg=ecfg, kind=kind, lr=lr, modality=mod, mu=prox_mu)
+                else:
+                    f, g, _ = _unimodal_sgd_step(f, g, x, y, ecfg=ecfg, kind=kind,
+                                                 lr=lr, modality=mod)
+                steps += 1
+            models[f"f_{mod}"], models[f"g_{mod}"] = f, g
+        if cd.has_paired:
+            f_a, f_b, g_m = models["f_A"], models["f_B"], models["g_M"]
+            for x_a, x_b, y in _paired_batches(cd, bs, rng):
+                f_a, f_b, g_m, _ = _paired_sgd_step(f_a, f_b, g_m, x_a, x_b, y,
+                                                    ecfg=ecfg, kind=kind, lr=lr)
+                steps += 1
+            models["f_A"], models["f_B"], models["g_M"] = f_a, f_b, g_m
+    return steps
+
+
+# --------------------------------------------------------------- HFL core --
+
+def _hfl_train(key, spec, ecfg, clients, test, cfg: FedConfig, *,
+               aggregate, prox_mu: float = 0.0, track_steps: bool = False,
+               history_test=None):
+    """Shared HFL loop: local train -> aggregate(weights, n_samples, taus)."""
+    base = init_client_models(key, spec, ecfg)
+    global_m = jax.tree.map(jnp.copy, base)
+    rng = np.random.default_rng(cfg.seed)
+    kind = spec.kind
+    history = []
+    for r in range(cfg.rounds):
+        local = [jax.tree.map(jnp.copy, global_m) for _ in clients]
+        taus = []
+        for k, cd in enumerate(clients):
+            taus.append(_local_train(local[k], cd, ecfg, kind, cfg.lr,
+                                     cfg.batch_size, cfg.local_epochs, rng,
+                                     prox_mu=prox_mu, global_ref=global_m))
+        global_m = aggregate(global_m, local, clients, taus)
+        if history_test is not None:
+            history.append(dict(_evaluate(global_m, history_test, ecfg, kind), round=r))
+    return global_m, history
+
+
+def _group_avg(global_m, local, clients, weight_fn):
+    """Average per model group over the clients that hold that modality."""
+    out = dict(global_m)
+    groups = {
+        "A": (["f_A", "g_A"], [k for k, c in enumerate(clients) if c.has_a]),
+        "B": (["f_B", "g_B"], [k for k, c in enumerate(clients) if c.has_b]),
+        "M": (["g_M"], [k for k, c in enumerate(clients) if c.has_paired]),
+    }
+    for _, (keys, members) in groups.items():
+        if not members:
+            continue
+        w = weight_fn(members)
+        for gk in keys:
+            out[gk] = blend_trees([local[k][gk] for k in members], w)
+    return out
+
+
+def run_fedavg(key, spec, ecfg, clients, val, test, cfg: FedConfig, history_test=None):
+    del val
+
+    def aggregate(global_m, local, clients_, taus):
+        def weight_fn(members):
+            ns = np.asarray([clients_[k].n_samples() for k in members], np.float64)
+            return ns / ns.sum()
+        return _group_avg(global_m, local, clients_, weight_fn)
+
+    gm, hist = _hfl_train(key, spec, ecfg, clients, test, cfg, aggregate=aggregate,
+                          history_test=history_test)
+    return _evaluate(gm, test, ecfg, spec.kind), hist
+
+
+def run_fedprox(key, spec, ecfg, clients, val, test, cfg: FedConfig, mu: float = 0.01,
+                history_test=None):
+    del val
+
+    def aggregate(global_m, local, clients_, taus):
+        def weight_fn(members):
+            ns = np.asarray([clients_[k].n_samples() for k in members], np.float64)
+            return ns / ns.sum()
+        return _group_avg(global_m, local, clients_, weight_fn)
+
+    gm, hist = _hfl_train(key, spec, ecfg, clients, test, cfg, aggregate=aggregate,
+                          prox_mu=mu, history_test=history_test)
+    return _evaluate(gm, test, ecfg, spec.kind), hist
+
+
+def run_fednova(key, spec, ecfg, clients, val, test, cfg: FedConfig, history_test=None):
+    """Normalized averaging: updates d_k = (w_g - w_k)/tau_k, combined with
+    data weights p_k and effective step count tau_eff = sum p_k tau_k."""
+    del val
+
+    def aggregate(global_m, local, clients_, taus):
+        out = dict(global_m)
+        groups = {
+            "A": (["f_A", "g_A"], [k for k, c in enumerate(clients_) if c.has_a]),
+            "B": (["f_B", "g_B"], [k for k, c in enumerate(clients_) if c.has_b]),
+            "M": (["g_M"], [k for k, c in enumerate(clients_) if c.has_paired]),
+        }
+        for _, (keys, members) in groups.items():
+            if not members:
+                continue
+            ns = np.asarray([clients_[k].n_samples() for k in members], np.float64)
+            p = ns / ns.sum()
+            tk = np.asarray([max(taus[k], 1) for k in members], np.float64)
+            tau_eff = float(np.sum(p * tk))
+            for gk in keys:
+                # w <- w_g - tau_eff * sum_k p_k (w_g - w_k)/tau_k
+                deltas = [jax.tree.map(lambda g, l: (g - l) / tk[i],
+                                       global_m[gk], local[k][gk])
+                          for i, k in enumerate(members)]
+                comb = blend_trees(deltas, p)
+                out[gk] = jax.tree.map(lambda g, d: g - tau_eff * d, global_m[gk], comb)
+        return out
+
+    gm, hist = _hfl_train(key, spec, ecfg, clients, test, cfg, aggregate=aggregate,
+                          history_test=history_test)
+    return _evaluate(gm, test, ecfg, spec.kind), hist
+
+
+def _greedy_match(ref: np.ndarray, cand: np.ndarray) -> np.ndarray:
+    """Greedy permutation aligning cand's rows to ref's rows by cosine sim."""
+    n = ref.shape[0]
+    sim = (ref / (np.linalg.norm(ref, axis=1, keepdims=True) + 1e-9)) @ (
+        cand / (np.linalg.norm(cand, axis=1, keepdims=True) + 1e-9)).T
+    perm = np.full(n, -1)
+    used = np.zeros(n, bool)
+    for _ in range(n):
+        i, j = np.unravel_index(np.argmax(np.where(used[None, :], -np.inf,
+                                                   np.where(perm[:, None] >= 0, -np.inf, sim))),
+                                sim.shape)
+        perm[i] = j
+        used[j] = True
+    return perm
+
+
+def run_fedma(key, spec, ecfg, clients, val, test, cfg: FedConfig, history_test=None):
+    """Matched averaging (greedy variant) on the encoder hidden layers."""
+    del val
+    assert ecfg.enc_type == "mlp", "FedMA matching implemented for mlp encoders"
+
+    def match_encoder(ref_f, f):
+        """Permute f's hidden units (rows of out-dim) to align with ref."""
+        f = jax.tree.map(np.asarray, f)
+        for li in range(len(f["hidden"])):
+            ref_w = np.asarray(ref_f["hidden"][li]["w"])  # (d, d)
+            perm = _greedy_match(ref_w.T, f["hidden"][li]["w"].T)
+            f["hidden"][li]["w"] = f["hidden"][li]["w"][:, perm]
+            f["hidden"][li]["b"] = f["hidden"][li]["b"][perm]
+            # note: residual MLP keeps the feature basis, so downstream
+            # layers need no inverse permutation (h + gelu(Wh) form)
+        return jax.tree.map(jnp.asarray, f)
+
+    def aggregate(global_m, local, clients_, taus):
+        out = dict(global_m)
+        groups = {
+            "A": ("f_A", "g_A", [k for k, c in enumerate(clients_) if c.has_a]),
+            "B": ("f_B", "g_B", [k for k, c in enumerate(clients_) if c.has_b]),
+        }
+        for _, (fk, gk, members) in groups.items():
+            if not members:
+                continue
+            ns = np.asarray([clients_[k].n_samples() for k in members], np.float64)
+            w = ns / ns.sum()
+            ref = local[members[0]][fk]
+            matched = [ref] + [match_encoder(ref, local[k][fk]) for k in members[1:]]
+            out[fk] = blend_trees(matched, w)
+            out[gk] = blend_trees([local[k][gk] for k in members], w)
+        mm = [k for k, c in enumerate(clients_) if c.has_paired]
+        if mm:
+            ns = np.asarray([clients_[k].n_samples() for k in mm], np.float64)
+            out["g_M"] = blend_trees([local[k]["g_M"] for k in mm], ns / ns.sum())
+        return out
+
+    gm, hist = _hfl_train(key, spec, ecfg, clients, test, cfg, aggregate=aggregate,
+                          history_test=history_test)
+    return _evaluate(gm, test, ecfg, spec.kind), hist
+
+
+def run_hfcl(key, spec, ecfg, clients, val, test, cfg: FedConfig, history_test=None):
+    """Hybrid federated/centralized: the low-compute half of the clients
+    ship raw data to the server; the server trains a surrogate client."""
+    del val
+    n = len(clients)
+    fl_ids = list(range(0, n, 2))  # odd-indexed clients share data
+    shared = [clients[k] for k in range(n) if k not in fl_ids]
+
+    def pool(views):
+        views = [v for v in views if len(v)]
+        return ModalView.concat(views) if views else None
+
+    pooled = ClientData(
+        partial_a=pool([c.partial_a for c in shared]) or ModalView.empty(
+            spec.seq_a, spec.feat_a, spec.out_dim),
+        partial_b=pool([c.partial_b for c in shared]) or ModalView.empty(
+            spec.seq_b, spec.feat_b, spec.out_dim),
+        frag_a=pool([c.frag_a for c in shared]) or ModalView.empty(
+            spec.seq_a, spec.feat_a, spec.out_dim),
+        frag_b=pool([c.frag_b for c in shared]) or ModalView.empty(
+            spec.seq_b, spec.feat_b, spec.out_dim),
+        paired_a=pool([c.paired_a for c in shared]) or ModalView.empty(
+            spec.seq_a, spec.feat_a, spec.out_dim),
+        paired_b=pool([c.paired_b for c in shared]) or ModalView.empty(
+            spec.seq_b, spec.feat_b, spec.out_dim),
+    )
+    eff_clients = [clients[k] for k in fl_ids] + [pooled]
+
+    def aggregate(global_m, local, clients_, taus):
+        def weight_fn(members):
+            ns = np.asarray([clients_[k].n_samples() for k in members], np.float64)
+            return ns / ns.sum()
+        return _group_avg(global_m, local, clients_, weight_fn)
+
+    gm, hist = _hfl_train(key, spec, ecfg, eff_clients, test, cfg, aggregate=aggregate,
+                          history_test=history_test)
+    return _evaluate(gm, test, ecfg, spec.kind), hist
+
+
+# --------------------------------------------------------------- VFL side --
+
+def _aligned_vertical_rows(clients, include_paired: bool = False):
+    """Samples usable by conventional (fixed-party) VFL: the CROSS-CLIENT
+    fragmented overlap. A client's locally-paired rows are NOT vertically
+    trainable under the conventional protocol — the party structure is
+    fixed per modality, and a client cannot act as both parties for a
+    subset of rows (exactly the 'restrictive assumptions' the paper
+    criticizes; BlendFL uses those rows in its paired phase instead).
+    ``include_paired=True`` gives the permissive variant (used as an
+    upper-bound ablation)."""
+    xa, xb, ya = [], [], []
+    batches = vfl.build_vfl_batches(clients, 10**9, np.random.default_rng(0))
+    if batches:
+        xa.append(batches[0].x_a); xb.append(batches[0].x_b); ya.append(batches[0].y)
+    if include_paired:
+        for c in clients:
+            if len(c.paired_a):
+                xa.append(c.paired_a.x); xb.append(c.paired_b.x); ya.append(c.paired_a.y)
+    if not xa:
+        return None
+    return np.concatenate(xa), np.concatenate(xb), np.concatenate(ya)
+
+
+def run_splitnn(key, spec, ecfg, clients, val, test, cfg: FedConfig, history_test=None):
+    """Pure VFL: split training of shared encoders + a server fusion head
+    on the vertically aligned sample set. Unimodal columns come from
+    server-side unimodal heads on the same latents (the conventional-VFL
+    serving path; no decentralized inference exists here)."""
+    del val
+    rows = _aligned_vertical_rows(clients)
+    kind = spec.kind
+    models = init_client_models(key, spec, ecfg)
+    rng = np.random.default_rng(cfg.seed)
+    history = []
+    if rows is None:
+        return _evaluate(models, test, ecfg, kind), history
+    xa, xb, y = rows
+    for r in range(cfg.rounds * cfg.local_epochs):
+        idx = rng.permutation(len(y))
+        for i in range(0, len(idx), cfg.batch_size):
+            sel = idx[i : i + cfg.batch_size]
+            b = vfl.VflBatch(xa[sel], xb[sel], y[sel], np.zeros(len(sel)), np.zeros(len(sel)))
+            x_a, x_b = jnp.asarray(b.x_a), jnp.asarray(b.x_b)
+            h_a = _client_fwd(models["f_A"], x_a, ecfg=ecfg)
+            h_b = _client_fwd(models["f_B"], x_b, ecfg=ecfg)
+            _, g_srv, g_ha, g_hb = _server_fwd_bwd(models["g_M"], h_a, h_b,
+                                                   jnp.asarray(b.y), kind=kind)
+            models["g_M"] = jax.tree.map(lambda p, gr: p - cfg.lr * gr,
+                                         models["g_M"], g_srv)
+            models["f_A"] = _client_bwd_update(models["f_A"], x_a, g_ha,
+                                               ecfg=ecfg, lr=cfg.lr)
+            models["f_B"] = _client_bwd_update(models["f_B"], x_b, g_hb,
+                                               ecfg=ecfg, lr=cfg.lr)
+            # server-side unimodal heads on the (detached) latents
+            for mod, h in (("A", h_a), ("B", h_b)):
+                def head_loss(g):
+                    return task_loss(dense(g, h), jnp.asarray(b.y), kind)
+                gg = jax.grad(head_loss)(models[f"g_{mod}"])
+                models[f"g_{mod}"] = jax.tree.map(lambda p, gr: p - cfg.lr * gr,
+                                                  models[f"g_{mod}"], gg)
+        if history_test is not None:
+            history.append(dict(_evaluate(models, history_test, ecfg, kind), round=r))
+    return _evaluate(models, test, ecfg, kind), history
+
+
+def run_oneshot_vfl(key, spec, ecfg, clients, val, test, cfg: FedConfig,
+                    history_test=None):
+    """One-Shot VFL: local (supervised) encoder training, ONE feature
+    upload, then server-side fusion-head training on frozen latents."""
+    del val
+    kind = spec.kind
+    rng = np.random.default_rng(cfg.seed)
+    models = init_client_models(key, spec, ecfg)
+    locals_ = [jax.tree.map(jnp.copy, models) for _ in clients]
+    # stage 1: purely local training
+    for k, cd in enumerate(clients):
+        _local_train(locals_[k], cd, ecfg, kind, cfg.lr, cfg.batch_size,
+                     cfg.rounds * cfg.local_epochs, rng)
+    # one-shot aggregation of unimodal models (single communication)
+    has_a = [k for k, c in enumerate(clients) if c.has_a]
+    has_b = [k for k, c in enumerate(clients) if c.has_b]
+    if has_a:
+        na = np.asarray([clients[k].n_samples() for k in has_a], np.float64)
+        models["f_A"] = blend_trees([locals_[k]["f_A"] for k in has_a], na / na.sum())
+        models["g_A"] = blend_trees([locals_[k]["g_A"] for k in has_a], na / na.sum())
+    if has_b:
+        nb = np.asarray([clients[k].n_samples() for k in has_b], np.float64)
+        models["f_B"] = blend_trees([locals_[k]["f_B"] for k in has_b], nb / nb.sum())
+        models["g_B"] = blend_trees([locals_[k]["g_B"] for k in has_b], nb / nb.sum())
+    # stage 2: single latent upload, server trains the fusion head
+    rows = _aligned_vertical_rows(clients)
+    history = []
+    if rows is not None:
+        xa, xb, y = rows
+        h_a = _client_fwd(models["f_A"], jnp.asarray(xa), ecfg=ecfg)
+        h_b = _client_fwd(models["f_B"], jnp.asarray(xb), ecfg=ecfg)
+        for r in range(cfg.rounds):
+            idx = rng.permutation(len(y))
+            for i in range(0, len(idx), cfg.batch_size):
+                sel = idx[i : i + cfg.batch_size]
+
+                def head_loss(gm):
+                    return task_loss(fusion_apply(gm, h_a[sel], h_b[sel]),
+                                     jnp.asarray(y[sel]), kind)
+
+                gg = jax.grad(head_loss)(models["g_M"])
+                models["g_M"] = jax.tree.map(lambda p, gr: p - cfg.lr * gr,
+                                             models["g_M"], gg)
+            if history_test is not None:
+                history.append(dict(_evaluate(models, history_test, ecfg, kind), round=r))
+    return _evaluate(models, test, ecfg, kind), history
+
+
+# ------------------------------------------------------------- centralized --
+
+def run_centralized(key, spec, ecfg, clients, val, test, cfg: FedConfig,
+                    history_test=None):
+    """Upper bound: pool ALL raw data centrally. Fragmented samples become
+    paired (the center can join them), so the multimodal model trains on
+    paired + fragmented-joined rows; unimodal models train on everything."""
+    del val
+    kind = spec.kind
+    rng = np.random.default_rng(cfg.seed)
+    models = init_client_models(key, spec, ecfg)
+    all_a = ModalView.concat([c.all_a() for c in clients])
+    all_b = ModalView.concat([c.all_b() for c in clients])
+    rows = _aligned_vertical_rows(clients)
+    history = []
+    for r in range(cfg.rounds * cfg.local_epochs):
+        for mod, view in (("A", all_a), ("B", all_b)):
+            f, g = models[f"f_{mod}"], models[f"g_{mod}"]
+            for x, y in _batches(view, cfg.batch_size, rng):
+                f, g, _ = _unimodal_sgd_step(f, g, x, y, ecfg=ecfg, kind=kind,
+                                             lr=cfg.lr, modality=mod)
+            models[f"f_{mod}"], models[f"g_{mod}"] = f, g
+        if rows is not None:
+            xa, xb, y = rows
+            idx = rng.permutation(len(y))
+            f_a, f_b, g_m = models["f_A"], models["f_B"], models["g_M"]
+            for i in range(0, len(idx), cfg.batch_size):
+                sel = idx[i : i + cfg.batch_size]
+                f_a, f_b, g_m, _ = _paired_sgd_step(
+                    f_a, f_b, g_m, jnp.asarray(xa[sel]), jnp.asarray(xb[sel]),
+                    jnp.asarray(y[sel]), ecfg=ecfg, kind=kind, lr=cfg.lr)
+            models["f_A"], models["f_B"], models["g_M"] = f_a, f_b, g_m
+        if history_test is not None:
+            history.append(dict(_evaluate(models, history_test, ecfg, kind), round=r))
+    return _evaluate(models, test, ecfg, kind), history
+
+
+BASELINES = {
+    "centralized": run_centralized,
+    "fedavg": run_fedavg,
+    "fedma": run_fedma,
+    "fedprox": run_fedprox,
+    "fednova": run_fednova,
+    "oneshot_vfl": run_oneshot_vfl,
+    "hfcl": run_hfcl,
+    "splitnn": run_splitnn,
+}

@@ -1,0 +1,83 @@
+"""BlendAvg — performance-weighted global aggregation (paper §III-B).
+
+Given the previous global model and L candidate (locally trained) models:
+
+1. score every candidate and the global model on the server's private
+   representative validation set              (A_i, A_global)
+2. Δ_i = A_i − A_global; discard Δ_i ≤ 0      (Eq. 9)
+3. ω_i = Δ_i / Σ_{Δ_j>0} Δ_j                  (Eq. 10)
+4. W_blended = Σ ω_i · W_i                    (Eq. 11)
+
+If no candidate improves, the previous global model is kept unchanged
+(the paper: "promoting updates only if the validation performance
+improves, thereby preventing model degradation").
+
+The weighted sum runs through the fused Pallas ``blend_params`` kernel
+(one HBM pass over the stacked models) — see repro/kernels/blendavg.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.tree import tree_stack
+from repro.kernels.blendavg.ops import blend_params
+
+
+def blendavg_weights(scores: Sequence[float], global_score: float) -> np.ndarray:
+    """Eq. 9-10: masked, normalized improvement weights. Zero vector if no
+    candidate improves on the global model."""
+    deltas = np.asarray(scores, np.float64) - float(global_score)
+    deltas = np.where(np.isnan(deltas), -np.inf, deltas)
+    mask = deltas > 0
+    if not mask.any():
+        return np.zeros(len(deltas), np.float64)
+    w = np.where(mask, deltas, 0.0)
+    return w / w.sum()
+
+
+def blend_trees(trees: Sequence, omega: np.ndarray):
+    """Eq. 11 via the fused kernel over the stacked client models."""
+    stacked = tree_stack(list(trees))
+    return blend_params(stacked, jnp.asarray(omega, jnp.float32))
+
+
+def blendavg(
+    global_params,
+    candidates: Sequence,
+    eval_fn: Callable[[object], float],
+    *,
+    global_score: float | None = None,
+):
+    """Full BlendAvg step for one model group.
+
+    eval_fn(params) -> validation score (higher is better, e.g. AUROC).
+    Returns (blended_params, info dict).
+    """
+    if global_score is None:
+        global_score = eval_fn(global_params)
+    scores = [eval_fn(c) for c in candidates]
+    omega = blendavg_weights(scores, global_score)
+    if omega.sum() == 0:  # no improvement anywhere -> keep global model
+        return global_params, {
+            "scores": scores, "global_score": global_score,
+            "omega": omega, "kept_global": True,
+        }
+    blended = blend_trees(candidates, omega)
+    return blended, {
+        "scores": scores, "global_score": global_score,
+        "omega": omega, "kept_global": False,
+    }
+
+
+def fedavg(candidates: Sequence, n_samples: Sequence[int] | None = None):
+    """FedAvg baseline: data-volume (or uniform) weighted average."""
+    l = len(candidates)
+    if n_samples is None:
+        w = np.full(l, 1.0 / l)
+    else:
+        tot = float(sum(n_samples))
+        w = np.asarray(n_samples, np.float64) / max(tot, 1.0)
+    return blend_trees(candidates, w)

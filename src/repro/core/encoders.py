@@ -1,0 +1,136 @@
+"""Per-modality encoders and classifiers for the BlendFL federation.
+
+The paper's clinical arch is MedFuse-style (LSTM over EHR + ResNet-34 over
+CXR); its S-MNIST arch is two ResNet-18s. Our federation instantiates the
+same *roles* with JAX encoders sized for the experiment:
+
+    f_m : (B, S_m, F_m) -> h (B, d)        modality encoder
+    g_m : h -> logits                       unimodal classifier
+    g_M : (h_A, h_B) -> logits              multimodal (fusion) classifier
+
+``enc_type``: 'mlp' (fast, CPU experiments), 'recurrent' (sLSTM cell — the
+LSTM role), 'transformer' (attention block — the ResNet role stand-in for
+patch embeddings). Any of the 10 assigned backbones can also serve as f_m
+via ``repro.models`` (see configs/blendfl_paper.py); the federation logic
+is encoder-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import TaskSpec
+from repro.models.common import dense, dense_init, rmsnorm, rmsnorm_init, sigmoid_bce, softmax_cross_entropy
+from repro.models.recurrent import slstm_init, slstm_scan
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    d_hidden: int = 64
+    n_layers: int = 2
+    enc_type: str = "mlp"  # mlp | recurrent | transformer
+    n_heads: int = 4
+
+
+def encoder_init(key, feat_dim: int, ecfg: EncoderConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, ecfg.n_layers + 2)
+    d = ecfg.d_hidden
+    p = {"in": dense_init(ks[0], feat_dim, d, dtype, bias=True)}
+    if ecfg.enc_type == "mlp":
+        p["hidden"] = [dense_init(ks[i + 1], d, d, dtype, bias=True)
+                       for i in range(ecfg.n_layers)]
+    elif ecfg.enc_type == "recurrent":
+        p["cell"] = slstm_init(ks[1], d, ecfg.n_heads, dtype)
+    elif ecfg.enc_type == "transformer":
+        p["ln"] = rmsnorm_init(d, dtype)
+        p["wq"] = dense_init(ks[1], d, d, dtype)
+        p["wk"] = dense_init(ks[2], d, d, dtype)
+        p["wv"] = dense_init(ks[3], d, d, dtype)
+        p["ff"] = dense_init(ks[4], d, d, dtype, bias=True)
+    else:
+        raise ValueError(ecfg.enc_type)
+    p["norm"] = rmsnorm_init(d, dtype)
+    return p
+
+
+def encoder_apply(p, x, ecfg: EncoderConfig):
+    """x (B, S, F) -> h (B, d)."""
+    h = jnp.tanh(dense(p["in"], x))
+    if ecfg.enc_type == "mlp":
+        h = jnp.mean(h, axis=1)
+        for layer in p["hidden"]:
+            h = h + jax.nn.gelu(dense(layer, h))
+    elif ecfg.enc_type == "recurrent":
+        seq, _ = slstm_scan(p["cell"], h, ecfg.n_heads)
+        h = seq[:, -1]
+    elif ecfg.enc_type == "transformer":
+        hn = rmsnorm(p["ln"], h)
+        b, s, d = hn.shape
+        nh = ecfg.n_heads
+        hd = d // nh
+        q = dense(p["wq"], hn).reshape(b, s, nh, hd)
+        k = dense(p["wk"], hn).reshape(b, s, nh, hd)
+        v = dense(p["wv"], hn).reshape(b, s, nh, hd)
+        att = jax.nn.softmax(
+            jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(hd), axis=-1)
+        h = h + jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+        h = h + jax.nn.gelu(dense(p["ff"], h))
+        h = jnp.mean(h, axis=1)
+    return rmsnorm(p["norm"], h)
+
+
+def head_init(key, d_in: int, n_out: int, dtype=jnp.float32):
+    return dense_init(key, d_in, n_out, dtype, bias=True)
+
+
+def fusion_init(key, d: int, n_out: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"mix": dense_init(k1, 2 * d, d, dtype, bias=True),
+            "out": dense_init(k2, d, n_out, dtype, bias=True)}
+
+
+def fusion_apply(p, h_a, h_b):
+    h = jax.nn.gelu(dense(p["mix"], jnp.concatenate([h_a, h_b], axis=-1)))
+    return dense(p["out"], h)
+
+
+# ------------------------------------------------------- model container ----
+
+def init_client_models(key, spec: TaskSpec, ecfg: EncoderConfig, dtype=jnp.float32):
+    """Full per-client model set {f_A, f_B, g_A, g_B, g_M}."""
+    ks = jax.random.split(key, 5)
+    d = ecfg.d_hidden
+    return {
+        "f_A": encoder_init(ks[0], spec.feat_a, ecfg, dtype),
+        "f_B": encoder_init(ks[1], spec.feat_b, ecfg, dtype),
+        "g_A": head_init(ks[2], d, spec.out_dim, dtype),
+        "g_B": head_init(ks[3], d, spec.out_dim, dtype),
+        "g_M": fusion_init(ks[4], d, spec.out_dim, dtype),
+    }
+
+
+def predict_unimodal(models, x, modality: str, ecfg: EncoderConfig):
+    h = encoder_apply(models[f"f_{modality}"], x, ecfg)
+    return dense(models[f"g_{modality}"], h)
+
+
+def predict_multimodal(models, x_a, x_b, ecfg: EncoderConfig):
+    h_a = encoder_apply(models["f_A"], x_a, ecfg)
+    h_b = encoder_apply(models["f_B"], x_b, ecfg)
+    return fusion_apply(models["g_M"], h_a, h_b)
+
+
+def task_loss(logits, y, kind: str):
+    if kind == "multiclass":
+        labels = jnp.argmax(y, axis=-1)
+        return jnp.mean(softmax_cross_entropy(logits, labels))
+    return jnp.mean(sigmoid_bce(logits, y))  # binary / multilabel
+
+
+def task_scores(logits, kind: str):
+    """Probability scores for AUROC/AUPRC computation."""
+    if kind == "multiclass":
+        return jax.nn.softmax(logits, axis=-1)
+    return jax.nn.sigmoid(logits)

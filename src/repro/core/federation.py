@@ -1,0 +1,343 @@
+"""BlendFL federation — Algorithm 1, orchestrated over in-host clients.
+
+One ``blendfl_round`` is the paper's training epoch:
+
+    1. local unimodal training on *partial* data        (lines 3-8)
+    2. split (VFL) training on *fragmented* data        (lines 9-23)
+    3. local multimodal training on *paired* data       (lines 24-29)
+    4. BlendAvg aggregation + broadcast                 (lines 30-32)
+
+Clients are plain Python objects holding model pytrees; every numeric
+step is jitted. The TPU-sharded expression of the same round (clients =
+mesh slices, aggregation = masked psum) lives in federation_sharded.py
+and is what the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import vfl
+from repro.core.blendavg import blendavg, fedavg
+from repro.core.encoders import (
+    EncoderConfig,
+    encoder_apply,
+    fusion_apply,
+    init_client_models,
+    task_loss,
+    task_scores,
+)
+from repro.core.partitioner import ClientData, ModalView
+from repro.data.synthetic import SyntheticMultimodal, TaskSpec
+from repro.metrics import auprc, auroc
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    n_clients: int = 3
+    rounds: int = 20
+    local_epochs: int = 1  # local passes between aggregations (Fig. 2 x-axis)
+    batch_size: int = 64
+    lr: float = 1e-3
+    aggregator: str = "blendavg"  # blendavg | fedavg
+    # Which local rows feed phase-1 unimodal training. "all" (default)
+    # reads Alg. 1's "partial data" as "the unimodal portions of D_m" —
+    # every locally held x_m row (partial + fragmented + paired), matching
+    # the paper's claim that BlendFL "leverages all data available at the
+    # clients". "strict" uses only the partial(D_m) subset (the literal
+    # line-4 reading); both are benchmarked in EXPERIMENTS.md.
+    unimodal_data: str = "all"  # all | partial
+    metric: str = "auroc"
+    seed: int = 0
+
+
+# ------------------------------------------------------------ jitted steps --
+
+@functools.partial(jax.jit, static_argnames=("ecfg", "kind", "lr", "modality"))
+def _unimodal_sgd_step(f, g, x, y, *, ecfg, kind, lr, modality):
+    del modality  # static arg only to keep per-modality cache entries separate
+
+    def loss_fn(f_, g_):
+        h = encoder_apply(f_, x, ecfg)
+        from repro.models.common import dense
+
+        return task_loss(dense(g_, h), y, kind)
+
+    loss, (gf, gg) = jax.value_and_grad(loss_fn, argnums=(0, 1))(f, g)
+    f = jax.tree.map(lambda p, gr: p - lr * gr, f, gf)
+    g = jax.tree.map(lambda p, gr: p - lr * gr, g, gg)
+    return f, g, loss
+
+
+@functools.partial(jax.jit, static_argnames=("ecfg", "kind", "lr"))
+def _paired_sgd_step(f_a, f_b, g_m, x_a, x_b, y, *, ecfg, kind, lr):
+    def loss_fn(fa, fb, gm):
+        h_a = encoder_apply(fa, x_a, ecfg)
+        h_b = encoder_apply(fb, x_b, ecfg)
+        return task_loss(fusion_apply(gm, h_a, h_b), y, kind)
+
+    loss, (gfa, gfb, ggm) = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(f_a, f_b, g_m)
+    upd = lambda p, gr: jax.tree.map(lambda a, b: a - lr * b, p, gr)
+    return upd(f_a, gfa), upd(f_b, gfb), upd(g_m, ggm), loss
+
+
+@functools.partial(jax.jit, static_argnames=("ecfg",))
+def _client_fwd(f, x, *, ecfg):
+    return encoder_apply(f, x, ecfg)
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _server_fwd_bwd(gmv, h_a, h_b, y, *, kind):
+    return vfl.server_forward_backward(gmv, h_a, h_b, y, kind)
+
+
+@functools.partial(jax.jit, static_argnames=("ecfg", "lr"))
+def _client_bwd_update(f, x, h_grad, *, ecfg, lr):
+    g_enc = vfl.client_backward(f, x, h_grad, ecfg)
+    return jax.tree.map(lambda p, gr: p - lr * gr, f, g_enc)
+
+
+# ------------------------------------------------------------- evaluation --
+
+def _metric_fn(name: str) -> Callable:
+    return {"auroc": auroc, "auprc": auprc}[name]
+
+
+def eval_unimodal(f, g, x, y, ecfg: EncoderConfig, kind: str, metric: str = "auroc"):
+    from repro.models.common import dense
+
+    h = _client_fwd(f, jnp.asarray(x), ecfg=ecfg)
+    scores = task_scores(dense(g, h), kind)
+    return float(_metric_fn(metric)(np.asarray(y), np.asarray(scores)))
+
+
+def eval_multimodal(f_a, f_b, g_m, x_a, x_b, y, ecfg: EncoderConfig, kind: str,
+                    metric: str = "auroc"):
+    h_a = _client_fwd(f_a, jnp.asarray(x_a), ecfg=ecfg)
+    h_b = _client_fwd(f_b, jnp.asarray(x_b), ecfg=ecfg)
+    scores = task_scores(fusion_apply(g_m, h_a, h_b), kind)
+    return float(_metric_fn(metric)(np.asarray(y), np.asarray(scores)))
+
+
+# -------------------------------------------------------------- federation --
+
+@dataclasses.dataclass
+class Federation:
+    """Mutable federation state: N clients + the BlendFL server."""
+
+    cfg: FedConfig
+    spec: TaskSpec
+    ecfg: EncoderConfig
+    clients: list  # list[ClientData]
+    models: list  # per-client {f_A, f_B, g_A, g_B, g_M}
+    global_models: dict  # blended {f_A, f_B, g_A, g_B, g_M}
+    server_gmv: dict  # g_M^v split-training head at the server
+    val: SyntheticMultimodal  # server-side representative validation set
+    rng: np.random.Generator
+
+    @staticmethod
+    def init(key, cfg: FedConfig, spec: TaskSpec, ecfg: EncoderConfig,
+             clients: list, val: SyntheticMultimodal) -> "Federation":
+        base = init_client_models(key, spec, ecfg)
+        # all clients start from the same global init (standard FL practice)
+        models = [jax.tree.map(jnp.copy, base) for _ in clients]
+        return Federation(
+            cfg=cfg, spec=spec, ecfg=ecfg, clients=clients, models=models,
+            global_models=jax.tree.map(jnp.copy, base),
+            server_gmv=jax.tree.map(jnp.copy, base["g_M"]),
+            val=val, rng=np.random.default_rng(cfg.seed),
+        )
+
+    # ---- phase 1: local unimodal training (partial data) ----
+
+    def _unimodal_phase(self) -> float:
+        cfg, ecfg, kind = self.cfg, self.ecfg, self.spec.kind
+        losses = []
+        for k, cd in enumerate(self.clients):
+            for mod, view in (("A", self._uni_view(cd, "a")), ("B", self._uni_view(cd, "b"))):
+                if len(view) == 0:
+                    continue
+                f, g = self.models[k][f"f_{mod}"], self.models[k][f"g_{mod}"]
+                for x, y in self._batches(view):
+                    f, g, loss = _unimodal_sgd_step(
+                        f, g, x, y, ecfg=ecfg, kind=kind, lr=cfg.lr, modality=mod)
+                    losses.append(float(loss))
+                self.models[k][f"f_{mod}"], self.models[k][f"g_{mod}"] = f, g
+        return float(np.mean(losses)) if losses else float("nan")
+
+    def _uni_view(self, cd: ClientData, side: str) -> ModalView:
+        if self.cfg.unimodal_data == "all":
+            return cd.all_a() if side == "a" else cd.all_b()
+        return cd.partial_a if side == "a" else cd.partial_b
+
+    # ---- phase 2: split (VFL) training on fragmented data ----
+
+    def _vfl_phase(self) -> float:
+        """One full-batch split exchange per epoch, exactly as Alg. 1: each
+        client uploads features for ALL its fragmented rows once, the server
+        aligns + does one forward/backward of g_M^v, and the decoupled
+        feature gradients come back in a single message. (Full-batch also
+        keeps row counts static, so every jit here compiles once.)"""
+        cfg, ecfg, kind = self.cfg, self.ecfg, self.spec.kind
+        batches = vfl.build_vfl_batches(self.clients, 10**9, self.rng)
+        losses = []
+        for batch in batches:
+            x_a, x_b = jnp.asarray(batch.x_a), jnp.asarray(batch.x_b)
+            n = len(batch.y)
+            # ClientForwardPass, per owning client
+            h_a = jnp.zeros((n, ecfg.d_hidden), jnp.float32)
+            h_b = jnp.zeros((n, ecfg.d_hidden), jnp.float32)
+            for k in range(cfg.n_clients):
+                ra = np.nonzero(batch.owner_a == k)[0]
+                rb = np.nonzero(batch.owner_b == k)[0]
+                if len(ra):
+                    h_a = h_a.at[ra].set(_client_fwd(self.models[k]["f_A"], x_a[ra], ecfg=ecfg))
+                if len(rb):
+                    h_b = h_b.at[rb].set(_client_fwd(self.models[k]["f_B"], x_b[rb], ecfg=ecfg))
+            # ServerForward/BackwardPass on the aligned features
+            loss, g_srv, g_ha, g_hb = _server_fwd_bwd(
+                self.server_gmv, h_a, h_b, jnp.asarray(batch.y), kind=kind)
+            self.server_gmv = jax.tree.map(
+                lambda p, gr: p - cfg.lr * gr, self.server_gmv, g_srv)
+            # ServerSendGradientsToClients -> client encoder updates
+            for k in range(cfg.n_clients):
+                ra = np.nonzero(batch.owner_a == k)[0]
+                rb = np.nonzero(batch.owner_b == k)[0]
+                if len(ra):
+                    self.models[k]["f_A"] = _client_bwd_update(
+                        self.models[k]["f_A"], x_a[ra], g_ha[ra], ecfg=ecfg, lr=cfg.lr)
+                if len(rb):
+                    self.models[k]["f_B"] = _client_bwd_update(
+                        self.models[k]["f_B"], x_b[rb], g_hb[rb], ecfg=ecfg, lr=cfg.lr)
+            losses.append(float(loss))
+        return float(np.mean(losses)) if losses else float("nan")
+
+    # ---- phase 3: local multimodal training on paired data ----
+
+    def _paired_phase(self) -> float:
+        cfg, ecfg, kind = self.cfg, self.ecfg, self.spec.kind
+        losses = []
+        for k, cd in enumerate(self.clients):
+            if not cd.has_paired:
+                continue
+            m = self.models[k]
+            f_a, f_b, g_m = m["f_A"], m["f_B"], m["g_M"]
+            for (x_a, x_b, y) in self._paired_batches(cd):
+                f_a, f_b, g_m, loss = _paired_sgd_step(
+                    f_a, f_b, g_m, x_a, x_b, y, ecfg=ecfg, kind=kind, lr=cfg.lr)
+                losses.append(float(loss))
+            m["f_A"], m["f_B"], m["g_M"] = f_a, f_b, g_m
+        return float(np.mean(losses)) if losses else float("nan")
+
+    # ---- phase 4: aggregation + broadcast ----
+
+    def _aggregate(self) -> dict:
+        cfg, ecfg, kind, metric = self.cfg, self.ecfg, self.spec.kind, self.cfg.metric
+        val = self.val
+        info = {}
+
+        def agg_unimodal(mod: str, x_val):
+            has = [k for k, cd in enumerate(self.clients)
+                   if (cd.has_a if mod == "A" else cd.has_b)]
+            if not has:
+                return
+            cands = [{"f": self.models[k][f"f_{mod}"], "g": self.models[k][f"g_{mod}"]}
+                     for k in has]
+            glob = {"f": self.global_models[f"f_{mod}"], "g": self.global_models[f"g_{mod}"]}
+            ev = lambda m: eval_unimodal(m["f"], m["g"], x_val, val.y, ecfg, kind, metric)
+            if cfg.aggregator == "blendavg":
+                blended, inf = blendavg(glob, cands, ev)
+                info[f"omega_{mod}"] = inf["omega"]
+            else:
+                ns = [self.clients[k].n_samples() for k in has]
+                blended = fedavg(cands, ns)
+            self.global_models[f"f_{mod}"] = blended["f"]
+            self.global_models[f"g_{mod}"] = blended["g"]
+
+        agg_unimodal("A", val.x_a)
+        agg_unimodal("B", val.x_b)
+
+        # multimodal: local g_M^k (paired clients) + the server's g_M^v (Eq. 8)
+        has_m = [k for k, cd in enumerate(self.clients) if cd.has_paired]
+        cands = [self.models[k]["g_M"] for k in has_m] + [self.server_gmv]
+        f_a, f_b = self.global_models["f_A"], self.global_models["f_B"]
+        ev = lambda gm: eval_multimodal(f_a, f_b, gm, val.x_a, val.x_b, val.y,
+                                        ecfg, kind, metric)
+        if cfg.aggregator == "blendavg":
+            blended, inf = blendavg(self.global_models["g_M"], cands, ev)
+            info["omega_M"] = inf["omega"]
+        else:
+            from repro.core.partitioner import fragmented_overlap
+
+            ns = [len(self.clients[k].paired_a) for k in has_m]
+            ns.append(max(1, len(fragmented_overlap(self.clients))))
+            blended = fedavg(cands, ns)
+        self.global_models["g_M"] = blended
+
+        # LocalUpdate: broadcast blended models back (line 32)
+        for k in range(cfg.n_clients):
+            for grp in ("f_A", "g_A", "f_B", "g_B", "g_M"):
+                self.models[k][grp] = jax.tree.map(jnp.copy, self.global_models[grp])
+        self.server_gmv = jax.tree.map(jnp.copy, self.global_models["g_M"])
+        return info
+
+    # ---- round / fit ----
+
+    def round(self) -> dict:
+        """One global training epoch (Algorithm 1 body)."""
+        logs = {}
+        for _ in range(self.cfg.local_epochs):
+            logs["loss_partial"] = self._unimodal_phase()
+            logs["loss_vfl"] = self._vfl_phase()
+            logs["loss_paired"] = self._paired_phase()
+        logs.update(self._aggregate())
+        return logs
+
+    def fit(self, eval_every: int = 0, eval_fn: Callable | None = None) -> list[dict]:
+        history = []
+        for r in range(self.cfg.rounds):
+            logs = self.round()
+            logs["round"] = r
+            if eval_every and eval_fn and (r + 1) % eval_every == 0:
+                logs.update(eval_fn(self))
+            history.append(logs)
+        return history
+
+    # ---- helpers ----
+
+    def _batches(self, view: ModalView):
+        idx = self.rng.permutation(len(view))
+        bs = self.cfg.batch_size
+        for i in range(0, len(idx), bs):
+            sel = idx[i : i + bs]
+            yield jnp.asarray(view.x[sel]), jnp.asarray(view.y[sel])
+
+    def _paired_batches(self, cd: ClientData):
+        n = len(cd.paired_a)
+        idx = self.rng.permutation(n)
+        bs = self.cfg.batch_size
+        for i in range(0, n, bs):
+            sel = idx[i : i + bs]
+            yield (jnp.asarray(cd.paired_a.x[sel]), jnp.asarray(cd.paired_b.x[sel]),
+                   jnp.asarray(cd.paired_a.y[sel]))
+
+
+def evaluate_global(fed: Federation, test: SyntheticMultimodal) -> dict:
+    """Paper-style test metrics of the blended global models: multimodal +
+    both unimodal heads, AUROC and AUPRC."""
+    g, ecfg, kind = fed.global_models, fed.ecfg, fed.spec.kind
+    out = {}
+    for metric in ("auroc", "auprc"):
+        out[f"multimodal_{metric}"] = eval_multimodal(
+            g["f_A"], g["f_B"], g["g_M"], test.x_a, test.x_b, test.y, ecfg, kind, metric)
+        out[f"uni_a_{metric}"] = eval_unimodal(
+            g["f_A"], g["g_A"], test.x_a, test.y, ecfg, kind, metric)
+        out[f"uni_b_{metric}"] = eval_unimodal(
+            g["f_B"], g["g_B"], test.x_b, test.y, ecfg, kind, metric)
+    return out

@@ -1,0 +1,257 @@
+"""BlendFL round as ONE SPMD program — the TPU-pod expression of Alg. 1.
+
+Hardware adaptation (DESIGN.md §2): the paper's federation is N hospital
+GPU boxes + an RPC parameter server. On a TPU pod we map:
+
+    client k            ->  slice k of the mesh "data" axis (stacked
+                            client models: every leaf gains a leading C
+                            axis sharded over "data"; large hidden dims
+                            shard over "model")
+    feature upload      ->  all-gather of latent h over the client axis
+                            (the alignment gather below; its transpose is
+                            the gradient return, from plain autodiff)
+    weight upload +     ->  masked weighted reduction over the client
+    BlendAvg + broadcast    axis: blended = sum_k omega_k * W_k, lowered
+                            by XLA to an all-reduce; the result is already
+                            resident on every slice, so the "broadcast
+                            back" of Alg. 1 line 32 is free.
+
+BlendAvg's validation scoring runs as a vmapped evaluation of all stacked
+client models on a replicated validation shard. Inside the SPMD program
+the score is the (negative) validation LOSS: a monotone on-device
+surrogate for the paper's AUROC (rank statistics don't belong in the hot
+aggregation path; the in-host federation.py uses real AUROC).
+
+Everything below is pure jnp under jit — sharding in_shardings do the
+distribution; no host round-trips inside a federated round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoders import EncoderConfig, encoder_apply, fusion_apply, task_loss
+from repro.models.common import dense
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedFedSpec:
+    """Static description of the sharded federation workload."""
+
+    n_clients: int = 16
+    d_hidden: int = 1024
+    n_layers: int = 2
+    seq_a: int = 64
+    feat_a: int = 128
+    seq_b: int = 64
+    feat_b: int = 128
+    out_dim: int = 25
+    kind: str = "multilabel"
+    n_partial: int = 512  # per client, per modality
+    n_frag: int = 512  # per client (aligned cross-client rows)
+    n_paired: int = 512  # per client
+    n_val: int = 1024  # replicated server validation set
+    # §Perf C.1: BlendAvg only needs the val set to RANK models; scoring
+    # all C client models on the full set dominates the round's HBM bytes
+    # (measured ~75%). Score on a fixed subsample instead.
+    n_val_score: int = 0  # 0 = full n_val
+    lr: float = 1e-3
+
+    @property
+    def ecfg(self) -> EncoderConfig:
+        return EncoderConfig(d_hidden=self.d_hidden, n_layers=self.n_layers,
+                             enc_type="mlp")
+
+
+def init_stacked_models(key, spec: ShardedFedSpec):
+    """Stacked client models: every leaf has leading axis C. All clients
+    start from the same init (standard FL), so we broadcast one init."""
+    from repro.core.encoders import init_client_models
+    from repro.data.synthetic import TaskSpec
+
+    tspec = TaskSpec("sharded", spec.kind, spec.out_dim, spec.seq_a, spec.feat_a,
+                     spec.seq_b, spec.feat_b)
+    base = init_client_models(key, tspec, spec.ecfg)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (spec.n_clients,) + x.shape), base)
+    server_gmv = base["g_M"]
+    global_models = base
+    return stacked, server_gmv, global_models
+
+
+def make_blendfl_round(spec: ShardedFedSpec):
+    """Returns round_fn(stacked, server_gmv, global_models, batch) ->
+    (stacked', server_gmv', global_models', metrics).
+
+    batch keys (leading C = client axis unless noted):
+      partial_a (C,Np,Sa,Fa)  partial_ya (C,Np,O)   partial_b / _yb
+      frag_a    (C,Nf,Sa,Fa)  frag_y    (C,Nf,O)    frag_b (C,Nf,Sb,Fb)
+      perm_b    (C*Nf,) int32 global alignment: row i of gathered h_a
+                pairs with row perm_b[i] of gathered h_b (the PSI output)
+      val_a (Nv,Sa,Fa) val_b (Nv,Sb,Fb) val_y (Nv,O)   [replicated]
+    """
+    ecfg, kind, lr = spec.ecfg, spec.kind, spec.lr
+    C = spec.n_clients
+
+    def uni_loss(f, g, x, y):
+        h = encoder_apply(f, x, ecfg)
+        return task_loss(dense(g, h), y, kind)
+
+    def paired_loss(f_a, f_b, g_m, x_a, x_b, y):
+        h_a = encoder_apply(f_a, x_a, ecfg)
+        h_b = encoder_apply(f_b, x_b, ecfg)
+        return task_loss(fusion_apply(g_m, h_a, h_b), y, kind)
+
+    def sgd(params, grads):
+        return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+    # ---- phase 1: local unimodal training (vmapped over clients) ----
+    def local_unimodal(models, batch):
+        def one(f, g, x, y):
+            loss, (gf, gg) = jax.value_and_grad(uni_loss, argnums=(0, 1))(f, g, x, y)
+            return sgd(f, gf), sgd(g, gg), loss
+
+        fa, ga, la = jax.vmap(one)(models["f_A"], models["g_A"],
+                                   batch["partial_a"], batch["partial_ya"])
+        fb, gb, lb = jax.vmap(one)(models["f_B"], models["g_B"],
+                                   batch["partial_b"], batch["partial_yb"])
+        models = dict(models, f_A=fa, g_A=ga, f_B=fb, g_B=gb)
+        return models, (jnp.mean(la) + jnp.mean(lb)) / 2
+
+    # ---- phase 2: split (VFL) training on fragmented rows ----
+    def vfl_exchange(models, server_gmv, batch):
+        def joint(f_a_stack, f_b_stack, gmv):
+            # ClientForwardPass on every slice, then the alignment gather
+            h_a = jax.vmap(lambda f, x: encoder_apply(f, x, ecfg))(
+                f_a_stack, batch["frag_a"])  # (C, Nf, d)
+            h_b = jax.vmap(lambda f, x: encoder_apply(f, x, ecfg))(
+                f_b_stack, batch["frag_b"])
+            h_a = h_a.reshape(C * spec.n_frag, -1)
+            h_b = h_b.reshape(C * spec.n_frag, -1)[batch["perm_b"]]  # server PSI align
+            y = batch["frag_y"].reshape(C * spec.n_frag, -1)
+            return task_loss(fusion_apply(gmv, h_a, h_b), y, kind)
+
+        loss, (gfa, gfb, gsrv) = jax.value_and_grad(joint, argnums=(0, 1, 2))(
+            models["f_A"], models["f_B"], server_gmv)
+        models = dict(models, f_A=sgd(models["f_A"], gfa), f_B=sgd(models["f_B"], gfb))
+        return models, sgd(server_gmv, gsrv), loss
+
+    # ---- phase 3: local multimodal training on paired rows ----
+    def local_paired(models, batch):
+        def one(f_a, f_b, g_m, x_a, x_b, y):
+            loss, (gfa, gfb, ggm) = jax.value_and_grad(paired_loss, argnums=(0, 1, 2))(
+                f_a, f_b, g_m, x_a, x_b, y)
+            return sgd(f_a, gfa), sgd(f_b, gfb), sgd(g_m, ggm), loss
+
+        fa, fb, gm, losses = jax.vmap(one)(
+            models["f_A"], models["f_B"], models["g_M"],
+            batch["paired_a"], batch["paired_b"], batch["paired_y"])
+        return dict(models, f_A=fa, f_B=fb, g_M=gm), jnp.mean(losses)
+
+    # ---- phase 4: BlendAvg aggregation over the client axis ----
+    def blend(stacked_tree, omega):
+        """sum_k omega_k W_k over the leading client axis (-> all-reduce)."""
+        return jax.tree.map(
+            lambda w: jnp.tensordot(omega.astype(jnp.float32),
+                                    w.astype(jnp.float32), axes=1).astype(w.dtype),
+            stacked_tree)
+
+    def omega_of(scores, global_score):
+        delta = scores - global_score  # improvement = val-loss decrease
+        mask = delta > 0
+        w = jnp.where(mask, delta, 0.0)
+        tot = jnp.sum(w)
+        return jnp.where(tot > 0, w / jnp.maximum(tot, 1e-12), jnp.zeros_like(w)), tot > 0
+
+    def aggregate(models, server_gmv, global_models, batch):
+        val_a, val_b, val_y = batch["val_a"], batch["val_b"], batch["val_y"]
+        if spec.n_val_score and spec.n_val_score < spec.n_val:
+            val_a = val_a[: spec.n_val_score]
+            val_b = val_b[: spec.n_val_score]
+            val_y = val_y[: spec.n_val_score]
+
+        def uni_score(f, g, x):  # higher is better
+            return -uni_loss(f, g, x, val_y)
+
+        def multi_score(g_m, f_a, f_b):
+            h_a = encoder_apply(f_a, val_a, ecfg)
+            h_b = encoder_apply(f_b, val_b, ecfg)
+            return -task_loss(fusion_apply(g_m, h_a, h_b), val_y, kind)
+
+        new_global = dict(global_models)
+        infos = {}
+        for mod, x_val in (("A", val_a), ("B", val_b)):
+            scores = jax.vmap(lambda f, g: uni_score(f, g, x_val))(
+                models[f"f_{mod}"], models[f"g_{mod}"])
+            gscore = uni_score(global_models[f"f_{mod}"], global_models[f"g_{mod}"], x_val)
+            omega, any_up = omega_of(scores, gscore)
+            cand = {"f": models[f"f_{mod}"], "g": models[f"g_{mod}"]}
+            blended = blend(cand, omega)
+            new_global[f"f_{mod}"] = jax.tree.map(
+                lambda b, g: jnp.where(any_up, b, g), blended["f"],
+                global_models[f"f_{mod}"])
+            new_global[f"g_{mod}"] = jax.tree.map(
+                lambda b, g: jnp.where(any_up, b, g), blended["g"],
+                global_models[f"g_{mod}"])
+            infos[f"omega_{mod}"] = omega
+
+        # multimodal: C client heads + the server's g_M^v (Eq. 8)
+        scores_m = jax.vmap(lambda gm: multi_score(gm, new_global["f_A"],
+                                                   new_global["f_B"]))(models["g_M"])
+        score_srv = multi_score(server_gmv, new_global["f_A"], new_global["f_B"])
+        scores_all = jnp.concatenate([scores_m, score_srv[None]])
+        gscore = multi_score(global_models["g_M"], new_global["f_A"], new_global["f_B"])
+        omega, any_up = omega_of(scores_all, gscore)
+        stacked_all = jax.tree.map(lambda s, srv: jnp.concatenate([s, srv[None]]),
+                                   models["g_M"], server_gmv)
+        blended_m = blend(stacked_all, omega)
+        new_global["g_M"] = jax.tree.map(lambda b, g: jnp.where(any_up, b, g),
+                                         blended_m, global_models["g_M"])
+        infos["omega_M"] = omega
+        return new_global, infos
+
+    def broadcast(new_global):
+        """LocalUpdate (line 32): every slice adopts the blended weights."""
+        return jax.tree.map(
+            lambda g: jnp.broadcast_to(g[None], (C,) + g.shape),
+            new_global)
+
+    def round_fn(stacked, server_gmv, global_models, batch):
+        stacked, loss_uni = local_unimodal(stacked, batch)
+        stacked, server_gmv, loss_vfl = vfl_exchange(stacked, server_gmv, batch)
+        stacked, loss_paired = local_paired(stacked, batch)
+        new_global, infos = aggregate(stacked, server_gmv, global_models, batch)
+        stacked = dict(
+            broadcast({k: new_global[k] for k in ("f_A", "g_A", "f_B", "g_B", "g_M")}))
+        server_gmv = new_global["g_M"]
+        metrics = dict(loss_uni=loss_uni, loss_vfl=loss_vfl, loss_paired=loss_paired,
+                       **infos)
+        return stacked, server_gmv, new_global, metrics
+
+    return round_fn
+
+
+def batch_specs(spec: ShardedFedSpec):
+    """ShapeDtypeStructs for one federated round's inputs (dry-run)."""
+    f32 = jnp.float32
+    C = spec.n_clients
+    sds = jax.ShapeDtypeStruct
+    return {
+        "partial_a": sds((C, spec.n_partial, spec.seq_a, spec.feat_a), f32),
+        "partial_ya": sds((C, spec.n_partial, spec.out_dim), f32),
+        "partial_b": sds((C, spec.n_partial, spec.seq_b, spec.feat_b), f32),
+        "partial_yb": sds((C, spec.n_partial, spec.out_dim), f32),
+        "frag_a": sds((C, spec.n_frag, spec.seq_a, spec.feat_a), f32),
+        "frag_b": sds((C, spec.n_frag, spec.seq_b, spec.feat_b), f32),
+        "frag_y": sds((C, spec.n_frag, spec.out_dim), f32),
+        "perm_b": sds((C * spec.n_frag,), jnp.int32),
+        "paired_a": sds((C, spec.n_paired, spec.seq_a, spec.feat_a), f32),
+        "paired_b": sds((C, spec.n_paired, spec.seq_b, spec.feat_b), f32),
+        "paired_y": sds((C, spec.n_paired, spec.out_dim), f32),
+        "val_a": sds((spec.n_val, spec.seq_a, spec.feat_a), f32),
+        "val_b": sds((spec.n_val, spec.seq_b, spec.feat_b), f32),
+        "val_y": sds((spec.n_val, spec.out_dim), f32),
+    }

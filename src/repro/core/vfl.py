@@ -1,0 +1,142 @@
+"""Vertical (split) training for fragmented data — paper Alg. 1 lines 9-23.
+
+The exchange is SplitNN-shaped but expressed JAX-natively:
+
+    client k:  h_m = f_m(x_m)                     ClientForwardPass
+    server:    align h_A, h_B by global sample id ServerAggregateFeatures
+               ŷ = g_M^v(h_A, h_B); L(ŷ, y)       ServerForwardPass
+               ∂L/∂g_M^v, ∂L/∂h_A, ∂L/∂h_B        ServerBackwardPass
+    client k:  ∂L/∂f_m = vjp(f_m, x_m)(∂L/∂h_m)   ReceiveGradients+Backward
+
+Raw data never leaves a client — only latent features go up and feature
+cotangents come down. Because the client backward is the exact ``jax.vjp``
+of the client forward, the split gradients equal end-to-end autodiff of
+the joint model (property-tested in tests/test_vfl.py).
+
+On the TPU mesh, the upload is an all-gather of ``h`` shards over the
+client ("data") axis and the gradient return is its transpose — both
+produced automatically when the joint loss is differentiated under pjit;
+see repro/core/federation_sharded.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoders import EncoderConfig, encoder_apply, fusion_apply, task_loss
+
+
+# --------------------------------------------------------------- alignment --
+
+def align_by_id(ids_a: np.ndarray, ids_b: np.ndarray):
+    """Server-side private-set alignment: row indices (ia, ib) such that
+    ids_a[ia] == ids_b[ib], each id used once, sorted by id."""
+    common, ia, ib = np.intersect1d(ids_a, ids_b, return_indices=True)
+    return common, ia, ib
+
+
+# ------------------------------------------------------------ split passes --
+
+def client_forward(f_params, x, ecfg: EncoderConfig):
+    """ClientForwardPass: latent features h for local fragmented samples."""
+    return encoder_apply(f_params, x, ecfg)
+
+
+def server_loss(gmv_params, h_a, h_b, y, kind: str):
+    logits = fusion_apply(gmv_params, h_a, h_b)
+    return task_loss(logits, y, kind)
+
+
+def server_forward_backward(gmv_params, h_a, h_b, y, kind: str):
+    """ServerForward+BackwardPass: loss, server-head grads, feature grads."""
+    loss, (g_srv, g_ha, g_hb) = jax.value_and_grad(server_loss, argnums=(0, 1, 2))(
+        gmv_params, h_a, h_b, y, kind)
+    return loss, g_srv, g_ha, g_hb
+
+
+def client_backward(f_params, x, h_grad, ecfg: EncoderConfig):
+    """ReceiveGradientsAndBackwardPass: chain the feature cotangent through
+    the local encoder. Exact vjp -> split grads == joint autodiff."""
+    _, vjp = jax.vjp(lambda p: encoder_apply(p, x, ecfg), f_params)
+    (g_enc,) = vjp(h_grad)
+    return g_enc
+
+
+# ------------------------------------------------------- one VFL iteration --
+
+@dataclasses.dataclass
+class VflBatch:
+    """Aligned fragmented batch: rows of x_a / x_b refer to the same global
+    samples; owner_a[i] / owner_b[i] are the holding clients' indices."""
+
+    x_a: np.ndarray
+    x_b: np.ndarray
+    y: np.ndarray
+    owner_a: np.ndarray
+    owner_b: np.ndarray
+
+
+def build_vfl_batches(clients, batch_size: int, rng: np.random.Generator):
+    """Server-side alignment of all fragmented rows (Private Set
+    Intersection stand-in, per the paper's assumption)."""
+    xa, ia, oa = [], [], []
+    xb, ib, ob = [], [], []
+    for k, c in enumerate(clients):
+        if len(c.frag_a):
+            xa.append(c.frag_a.x); ia.append(c.frag_a.ids)
+            oa.append(np.full(len(c.frag_a), k))
+        if len(c.frag_b):
+            xb.append(c.frag_b.x); ib.append(c.frag_b.ids)
+            ob.append(np.full(len(c.frag_b), k))
+    if not xa or not xb:
+        return []
+    xa = np.concatenate(xa); ia = np.concatenate(ia); oa = np.concatenate(oa)
+    xb = np.concatenate(xb); ib = np.concatenate(ib); ob = np.concatenate(ob)
+    _, ra, rb = align_by_id(ia, ib)
+    if len(ra) == 0:
+        return []
+    ya = np.concatenate([c.frag_a.y for c in clients if len(c.frag_a)])
+    order = rng.permutation(len(ra))
+    ra, rb = ra[order], rb[order]
+    batches = []
+    for i in range(0, len(ra), batch_size):
+        sa, sb = ra[i : i + batch_size], rb[i : i + batch_size]
+        batches.append(VflBatch(xa[sa], xb[sb], ya[sa], oa[sa], ob[sb]))
+    return batches
+
+
+def vfl_step(f_a_params, f_b_params, gmv_params, batch: VflBatch, ecfg: EncoderConfig,
+             kind: str):
+    """One split-training step over an aligned batch, assuming per-client
+    encoders have already been gathered into f_a_params/f_b_params *for the
+    rows of this batch* (the federation layer slices per-owner params).
+
+    Returns (loss, grads dict). All three grads come from ONE joint vjp —
+    definitionally identical to the split exchange (see module docstring),
+    while letting XLA fuse the whole round trip.
+    """
+
+    def joint(fa, fb, gmv):
+        h_a = encoder_apply(fa, jnp.asarray(batch.x_a), ecfg)
+        h_b = encoder_apply(fb, jnp.asarray(batch.x_b), ecfg)
+        return server_loss(gmv, h_a, h_b, jnp.asarray(batch.y), kind)
+
+    loss, (g_fa, g_fb, g_srv) = jax.value_and_grad(joint, argnums=(0, 1, 2))(
+        f_a_params, f_b_params, gmv_params)
+    return loss, {"f_A": g_fa, "f_B": g_fb, "g_M_v": g_srv}
+
+
+def vfl_step_split(f_a_params, f_b_params, gmv_params, batch: VflBatch,
+                   ecfg: EncoderConfig, kind: str):
+    """The literal wire protocol (forward up / cotangent down), used by the
+    gradient-equivalence test and the decentralized-latency benchmark."""
+    x_a, x_b, y = jnp.asarray(batch.x_a), jnp.asarray(batch.x_b), jnp.asarray(batch.y)
+    h_a = client_forward(f_a_params, x_a, ecfg)
+    h_b = client_forward(f_b_params, x_b, ecfg)
+    loss, g_srv, g_ha, g_hb = server_forward_backward(gmv_params, h_a, h_b, y, kind)
+    g_fa = client_backward(f_a_params, x_a, g_ha, ecfg)
+    g_fb = client_backward(f_b_params, x_b, g_hb, ecfg)
+    return loss, {"f_A": g_fa, "f_B": g_fb, "g_M_v": g_srv}

@@ -1,0 +1,4 @@
+from repro.data.synthetic import SyntheticMultimodal, TaskSpec, make_task
+from repro.data.pipeline import Batcher, token_batches
+
+__all__ = ["SyntheticMultimodal", "TaskSpec", "make_task", "Batcher", "token_batches"]

@@ -1,0 +1,48 @@
+"""Batching pipelines.
+
+``Batcher`` serves the federated experiments (numpy in, dict-of-arrays out).
+``token_batches`` serves the LM examples (synthetic token streams).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Batcher:
+    """Deterministic shuffling batcher over dict-of-arrays datasets."""
+
+    def __init__(self, arrays: dict, batch_size: int, seed: int = 0, drop_remainder: bool = False):
+        self.arrays = {k: np.asarray(v) for k, v in arrays.items()}
+        lens = {len(v) for v in self.arrays.values()}
+        assert len(lens) == 1, f"ragged arrays: { {k: len(v) for k, v in self.arrays.items()} }"
+        self.n = lens.pop()
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self.drop_remainder = drop_remainder
+
+    def __len__(self):
+        if self.drop_remainder:
+            return self.n // self.batch_size
+        return (self.n + self.batch_size - 1) // self.batch_size
+
+    def epoch(self, shuffle: bool = True):
+        idx = np.arange(self.n)
+        if shuffle:
+            self.rng.shuffle(idx)
+        stop = self.n - (self.n % self.batch_size) if self.drop_remainder else self.n
+        for i in range(0, stop, self.batch_size):
+            sel = idx[i : i + self.batch_size]
+            if self.drop_remainder and len(sel) < self.batch_size:
+                break
+            yield {k: v[sel] for k, v in self.arrays.items()}
+
+
+def token_batches(vocab_size: int, batch: int, seq: int, n_batches: int, seed: int = 0):
+    """Synthetic LM token stream with Zipf-ish marginals + copy structure so a
+    model can actually reduce loss (used by the e2e training example)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_batches):
+        base = rng.zipf(1.3, size=(batch, seq + 1)).astype(np.int64) % vocab_size
+        # inject predictable bigram structure: even positions repeat previous token
+        base[:, 2::2] = base[:, 1:-1:2]
+        yield {"tokens": base[:, :-1].astype(np.int32), "labels": base[:, 1:].astype(np.int32)}

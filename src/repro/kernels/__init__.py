@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel ships as a subpackage:  <name>/<name>.py (pl.pallas_call +
+BlockSpec VMEM tiling), <name>/ops.py (jit'd public wrapper), and
+<name>/ref.py (pure-jnp oracle used by the sweep tests).
+
+On the CPU backend (this container) kernels execute with interpret=True
+(the kernel body runs in Python), which is how correctness is validated;
+on TPU the same pallas_call lowers through Mosaic.
+"""
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.blendavg.ops import blend_params
+from repro.kernels.mlstm_scan.ops import mlstm_scan
+
+__all__ = ["flash_attention", "blend_params", "mlstm_scan"]

@@ -1,0 +1,3 @@
+from repro.kernels.blendavg.ops import blend_params
+
+__all__ = ["blend_params"]

@@ -1,0 +1,49 @@
+"""BlendAvg fused parameter blend as a Pallas TPU kernel.
+
+The server-side hot-spot of the paper's technique: blending L client
+models (Eq. 11) is a purely memory-bound streaming reduction over up to
+132 B parameters. A naive implementation issues L scaled-add passes
+(reading N*L + writing N*L intermediates); this kernel streams each
+(L, block_n) tile through VMEM exactly once and writes each output element
+once — the roofline-optimal single-pass schedule.
+
+Grid: (num_blocks,) over the flattened parameter axis. Per program, VMEM
+holds an (L, block_n) tile of the stacked models and the (L, 1) weight
+vector; the output tile is the f32-accumulated weighted sum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, omega_ref, o_ref):
+    tile = w_ref[...].astype(jnp.float32)  # (L, block_n)
+    om = omega_ref[...].astype(jnp.float32)  # (L, 1)
+    o_ref[...] = jnp.sum(tile * om, axis=0, keepdims=True).astype(o_ref.dtype)
+
+
+def blend_params_pallas(stacked, omega, *, block_n: int = 2048, interpret: bool = False):
+    """stacked (L, N); omega (L,) -> (N,)."""
+    l, n = stacked.shape
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    n_padded = n + pad
+    grid = (n_padded // block_n,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l, block_n), lambda i: (0, i)),
+            pl.BlockSpec((l, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_padded), stacked.dtype),
+        interpret=interpret,
+    )(stacked, omega[:, None])
+    return out[0, :n]

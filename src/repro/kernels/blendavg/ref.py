@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the BlendAvg parameter-blend kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def blend_params_ref(stacked, omega):
+    """stacked (L, N) client parameters; omega (L,) blend weights
+    (already masked: discarded models carry omega=0). Returns (N,) f32-
+    accumulated weighted sum cast back to the input dtype."""
+    w = omega.astype(jnp.float32)[:, None]
+    return jnp.sum(stacked.astype(jnp.float32) * w, axis=0).astype(stacked.dtype)

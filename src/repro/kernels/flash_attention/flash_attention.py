@@ -1,0 +1,123 @@
+"""Flash attention (online softmax) as a Pallas TPU kernel.
+
+Schedule: grid = (B*Hq, num_q_blocks, num_k_blocks) with the K axis
+innermost/sequential; the (m, l, acc) running statistics live in VMEM
+scratch and persist across K iterations (standard TPU flash schedule).
+Per program instance, VMEM holds one (block_q, d) Q tile and one
+(block_k, d) K/V tile — MXU-aligned when block_q/block_k are multiples of
+128 and d in {64, 128, 256}.
+
+Supports GQA (K/V indexed by q_head // group via the BlockSpec index_map,
+so kv heads are never materialized repeated), causal masking, and
+sliding-window masking. Queries are end-aligned with keys (decode-style
+suffix attention when Sq < Sk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_q: int, block_k: int, sq: int, sk: int,
+            causal: bool, window: int, num_kb: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (block_k, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    # zero padded K/V rows: out-of-bounds block reads return garbage (NaN
+    # in interpret mode) and 0 * NaN would poison the masked accumulation
+    kv_valid = (kb * block_k
+                + jax.lax.broadcasted_iota(jnp.int32, (block_k, 1), 0)) < sk
+    k = jnp.where(kv_valid, k, 0.0)
+    v = jnp.where(kv_valid, v, 0.0)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qi = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + (sk - sq)
+    ki = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = (qi < sk) & (ki < sk)
+    if causal:
+        mask = mask & (ki <= qi)
+    if window > 0:
+        mask = mask & (ki > qi - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (block_q, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # rows with no visible key yet keep m = -inf; make exp well-defined
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(mask, jnp.exp(s - safe_m), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(kb == num_kb - 1)
+    def _done():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q (B,Hq,Sq,d); k,v (B,Hkv,Sk,d) -> (B,Hq,Sq,d)."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    group = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    num_qb = pl.cdiv(sq, block_q)
+    num_kb = pl.cdiv(sk, block_k)
+
+    qf = q.reshape(b * hq, sq, d)
+    grid = (b * hq, num_qb, num_kb)
+
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, sq=sq, sk=sk,
+        causal=causal, window=window, num_kb=num_kb)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qb, kb: (bh, qb, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bh, qb, kb, group=group, hq=hq:
+                         (bh // hq, (bh % hq) // group, kb, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bh, qb, kb, group=group, hq=hq:
+                         (bh // hq, (bh % hq) // group, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qb, kb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, k, v)
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,25 @@
+"""Public jit'd wrapper for the flash attention kernel.
+
+On non-TPU backends the pallas_call runs in interpret mode (kernel body
+executed in Python) so correctness is CPU-testable; on TPU it lowers via
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=not _on_tpu())

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA + causal + SWA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B, Hq, Sq, d); k, v (B, Hkv, Sk, d); Hq % Hkv == 0.
+
+    window > 0 restricts each query to the last `window` keys (inclusive of
+    itself) — sliding-window attention.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qi = jnp.arange(sq)[:, None] + (sk - sq)  # queries end-aligned with keys
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = ki <= qi
+    if window > 0:
+        mask = mask & (ki > qi - window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

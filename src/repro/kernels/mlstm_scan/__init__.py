@@ -1,0 +1,3 @@
+from repro.kernels.mlstm_scan.ops import mlstm_scan
+
+__all__ = ["mlstm_scan"]

@@ -1,0 +1,13 @@
+"""Sequential oracle for the chunkwise mLSTM/SSD scan kernel."""
+from __future__ import annotations
+
+from repro.models.recurrent import gated_linear_scan_ref
+
+
+def mlstm_scan_ref(q, k, v, log_f, *, normalize: bool = True):
+    """q,k (B,H,S,dk); v (B,H,S,dv); log_f (B,H,S). Step-by-step recurrence:
+
+        C_t = exp(lf_t) C_{t-1} + k_t v_t^T ;  n_t = exp(lf_t) n_{t-1} + k_t
+        h_t = q_t C_t [/ max(|q_t.n_t|, 1)]
+    """
+    return gated_linear_scan_ref(q, k, v, log_f, normalize=normalize)

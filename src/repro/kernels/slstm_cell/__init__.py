@@ -1,0 +1,3 @@
+from repro.kernels.slstm_cell.ops import slstm_cell
+
+__all__ = ["slstm_cell"]

@@ -1,0 +1,17 @@
+"""Public jit'd wrapper for the fused sLSTM cell kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.slstm_cell.slstm_cell import slstm_cell_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def slstm_cell(pre_x, r, *, chunk: int = 256):
+    return slstm_cell_pallas(pre_x, r, chunk=chunk, interpret=not _on_tpu())

@@ -1,0 +1,32 @@
+"""Pure-jnp sequential oracle for the fused sLSTM cell kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_cell_ref(pre_x, r):
+    """pre_x (B, H, S, 4, hd); r (H, hd, 4hd) -> h (B, H, S, hd)."""
+    b, h, s, _, hd = pre_x.shape
+    zero = jnp.zeros((b, h, hd), jnp.float32)
+    state0 = (zero, zero, zero - 1e30, zero)  # c, n, m, h_prev
+
+    def step(carry, pre_t):
+        c, n, m, h_prev = carry
+        rec = jnp.einsum("bhi,hij->bhj", h_prev, r.astype(jnp.float32))
+        rec = rec.reshape(b, h, 4, hd)
+        pre = pre_t.astype(jnp.float32)  # (B, H, 4, hd)
+        z = jnp.tanh(pre[:, :, 0] + rec[:, :, 0])
+        log_i = pre[:, :, 1] + rec[:, :, 1]
+        log_f = jax.nn.log_sigmoid(pre[:, :, 2] + rec[:, :, 2])
+        o = jax.nn.sigmoid(pre[:, :, 3] + rec[:, :, 3])
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_g = jnp.exp(log_i - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c_new = f_g * c + i_g * z
+        n_new = f_g * n + i_g
+        h_t = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        return (c_new, n_new, m_new, h_t), h_t
+
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(pre_x, 2, 0))
+    return jnp.moveaxis(hs, 0, 2).astype(pre_x.dtype)

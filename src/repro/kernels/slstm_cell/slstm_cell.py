@@ -1,0 +1,104 @@
+"""Fused sLSTM recurrence as a Pallas TPU kernel.
+
+Motivation (EXPERIMENTS.md §Perf A): under XLA, the sLSTM time-scan
+re-reads the recurrent weights r (H, hd, 4hd) from HBM every time step —
+the dominant HBM stream of xlstm-350m training even after the A.1/A.3
+fixes. This kernel pins r_h in VMEM for the whole sequence and streams
+only the per-step pre-activations and outputs:
+
+    HBM traffic: S * (pre chunk + h out)  +  r ONCE            (kernel)
+                 S * (pre + h + r + state spills)              (XLA scan)
+
+Schedule: grid = (B, H, num_chunks) with the chunk axis innermost and
+sequential; the (c, n, m, h) state lives in VMEM scratch and persists
+across chunks; within a chunk a fori_loop steps the recurrence, doing
+the (1, hd) x (hd, 4hd) recurrent matmul on the MXU.
+
+Stabilized update (Beck et al.):
+    rec   = h_{t-1} @ r_h                       (4hd,)
+    z     = tanh(pre_z + rec_z)
+    m_t   = max(log_f + m, log_i);  i = exp(log_i - m_t)
+    f     = exp(log_f + m - m_t)
+    c_t   = f*c + i*z ; n_t = f*n + i ; h_t = o * c_t / max(|n_t|, 1)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pre_ref, r_ref, o_ref, c_scr, n_scr, m_scr, h_scr, *,
+            chunk: int, hd: int):
+    cb = pl.program_id(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    r = r_ref[0].astype(jnp.float32)  # (hd, 4hd) — resident across chunks
+
+    def step(t, _):
+        pre = pre_ref[0, 0, t].astype(jnp.float32)  # (4, hd)
+        h_prev = h_scr[...]  # (1, hd)
+        rec = jax.lax.dot_general(h_prev, r, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        rec = rec.reshape(4, hd)
+        z = jnp.tanh(pre[0] + rec[0])
+        log_i = pre[1] + rec[1]
+        log_f = jax.nn.log_sigmoid(pre[2] + rec[2])
+        o = jax.nn.sigmoid(pre[3] + rec[3])
+        m_new = jnp.maximum(log_f + m_scr[0], log_i)
+        i_g = jnp.exp(log_i - m_new)
+        f_g = jnp.exp(log_f + m_scr[0] - m_new)
+        c_new = f_g * c_scr[0] + i_g * z
+        n_new = f_g * n_scr[0] + i_g
+        h = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        c_scr[0] = c_new
+        n_scr[0] = n_new
+        m_scr[0] = m_new
+        h_scr[0] = h
+        o_ref[0, 0, t] = h.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+
+def slstm_cell_pallas(pre_x, r, *, chunk: int = 256, interpret: bool = False):
+    """pre_x (B, H, S, 4, hd) pre-activations [z, i, f, o]; r (H, hd, 4hd).
+
+    Returns h (B, H, S, hd). State starts at zero (m at -inf)."""
+    b, h, s, four, hd = pre_x.shape
+    assert four == 4
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        pre_x = jnp.pad(pre_x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk, hd=hd)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, 4, hd), lambda bi, hi, cb: (bi, hi, cb, 0, 0)),
+            pl.BlockSpec((1, hd, 4 * hd), lambda bi, hi, cb: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, hd), lambda bi, hi, cb: (bi, hi, cb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sp, hd), pre_x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pre_x, r)
+    return out[:, :, :s]

@@ -1,0 +1,409 @@
+"""While-loop-aware cost analysis over post-SPMD scheduled HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts every computation ONCE:
+anything inside a ``while`` body (every ``lax.scan`` — our layer stack,
+microbatch loop, recurrent cells) is under-counted by its trip count.
+This walker parses ``compiled.as_text()`` and recursively multiplies
+``while`` bodies by their ``backend_config known_trip_count``, giving:
+
+    flops        MXU work (dot ops; elementwise ignored — transformers
+                 are >99% matmul flops)
+    bytes        HBM traffic proxy: operand+result bytes of every
+                 scheduled (post-fusion) op — each fusion reads its
+                 inputs and writes its outputs exactly once
+    coll_bytes   per-collective-kind result-buffer bytes (the shard each
+                 device emits; ring-transfer approximation)
+    coll_counts  collective op counts (loop-multiplied)
+
+Shapes in the post-SPMD module are PER-DEVICE, so all numbers are
+per-device. The roofline layer scales by chip count where a global figure
+is needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,
+    "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s+->\s+.*\{\s*$")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[list[int]]:
+    """All array shapes in a type string (first = the result array)."""
+    out = []
+    for _, dims in _SHAPE_RE.findall(type_str):
+        out.append([int(d) for d in dims.split(",") if d])
+    return out
+
+
+def _split_type(rest: str) -> tuple[str, str]:
+    """Split 'TYPE op(...)' -> (TYPE, remainder). Handles tuple types."""
+    rest = rest.strip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rest[: i + 1], rest[i + 1 :].strip()
+    i = rest.find(" ")
+    return rest[:i], rest[i + 1 :].strip()
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str  # everything after the kind word
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    params: dict
+    ops: list
+    types: dict  # local symbol -> type string
+
+
+def parse_hlo(text: str) -> dict:
+    comps: dict[str, _Comp] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            name = m.group(2)
+            params = {}
+            # split header params respecting nesting
+            depth = 0
+            tok = ""
+            items = []
+            for ch in m.group(3):
+                if ch in "([":
+                    depth += 1
+                elif ch in ")]":
+                    depth -= 1
+                if ch == "," and depth == 0:
+                    items.append(tok)
+                    tok = ""
+                else:
+                    tok += ch
+            if tok.strip():
+                items.append(tok)
+            for it in items:
+                if ":" in it:
+                    pname, ptype = it.split(":", 1)
+                    params[pname.strip().lstrip("%")] = ptype.strip()
+            cur = _Comp(name, params, [], dict(params))
+            comps[name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        type_str, remainder = _split_type(rest)
+        kind = remainder.split("(")[0].strip()
+        cur.types[name] = type_str
+        cur.ops.append(_Op(name, type_str, kind, remainder))
+    return comps
+
+
+def _dot_flops(op: _Op, comp: _Comp) -> float:
+    """2 * prod(result dims) * prod(lhs contracting dims)."""
+    result_shapes = _shape_dims(op.type_str)
+    result = result_shapes[0] if result_shapes else []
+    operands = _OPERAND_RE.findall(op.rest.split("),")[0] + ")")
+    lhs_type = comp.types.get(operands[0], "") if operands else ""
+    lhs_shapes = _shape_dims(lhs_type)
+    lhs = lhs_shapes[0] if lhs_shapes else []
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    if m and lhs:
+        for d in m.group(1).split(","):
+            if d:
+                contract *= lhs[int(d)]
+    n = 1
+    for d in result:
+        n *= d
+    return 2.0 * n * contract
+
+
+def _site_of(op: _Op) -> str:
+    m = re.search(r'op_name="([^"]*)"', op.rest)
+    return m.group(1) if m else op.name
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLLECTIVES})
+    dot_flops_by_site: dict = dataclasses.field(default_factory=dict)
+    bytes_by_site: dict = dataclasses.field(default_factory=dict)
+    coll_by_site: dict = dataclasses.field(default_factory=dict)
+
+    def _bump(self, d: dict, k: str, v: float):
+        d[k] = d.get(k, 0.0) + v
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in _COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+            self.coll_counts[k] += int(other.coll_counts[k] * mult)
+        for src, dst in ((other.dot_flops_by_site, self.dot_flops_by_site),
+                         (other.bytes_by_site, self.bytes_by_site),
+                         (other.coll_by_site, self.coll_by_site)):
+            for k, v in src.items():
+                dst[k] = dst.get(k, 0.0) + v * mult
+
+
+def _operand_names(op: _Op) -> list:
+    args = op.rest[op.rest.find("(") + 1 :]
+    depth = 1
+    end = 0
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERAND_RE.findall(args[:end])
+
+
+_SLICE_OPS = {"dynamic-slice", "gather"}
+
+
+def _fusion_param_reads(callee: _Comp) -> dict:
+    """param index -> bytes actually read from HBM for that parameter
+    (absent = full tensor).
+
+    - consumed ONLY as the sliced operand of dynamic-slice/gather: read
+      slice-wise (lax.scan per-iteration parameter slicing is O(slice))
+    - consumed ONLY as the TARGET (operand 0) of the root
+      dynamic-update-slice: 0 bytes — the buffer is updated in place
+      (aliased), only the updated region moves
+    """
+    if hasattr(callee, "_param_reads"):
+        return callee._param_reads
+    reads = {}
+    pnames = list(callee.params)
+    root = callee.ops[-1] if callee.ops else None
+    for i, pname in enumerate(pnames):
+        sliced_bytes = 0.0
+        ok = None
+        for op in callee.ops:
+            if op.kind == "parameter":
+                continue
+            names = _operand_names(op)
+            if pname not in names:
+                continue
+            if op.kind in _SLICE_OPS and names and names[0] == pname:
+                sliced_bytes += _type_bytes(op.type_str)
+                ok = True if ok is None else ok
+            elif (op is root and op.kind == "dynamic-update-slice"
+                  and names and names[0] == pname and names.count(pname) == 1):
+                ok = True if ok is None else ok  # in-place target: free
+            else:
+                ok = False
+        if ok:
+            reads[i] = sliced_bytes
+    callee._param_reads = reads
+    return reads
+
+
+def _fusion_result_bytes(callee: _Comp) -> float | None:
+    """Result bytes of a fusion: update-size when the root is a
+    dynamic-update-slice (output aliases the target buffer), else None
+    (= use the full result type)."""
+    if not callee.ops:
+        return None
+    root = callee.ops[-1]
+    if root.kind == "dynamic-update-slice":
+        names = _operand_names(root)
+        if len(names) >= 2:
+            return float(2.0 * _type_bytes(callee.types.get(names[1], "")))
+    return None
+
+
+def _op_operand_bytes(op: _Op, comp: _Comp, comps: dict | None = None) -> float:
+    names = _operand_names(op)
+    if op.kind == "fusion" and comps is not None:
+        m = _CALLS_RE.search(op.rest)
+        callee = comps.get(m.group(1)) if m else None
+        if callee is not None:
+            reads = _fusion_param_reads(callee)
+            total = 0.0
+            for i, n in enumerate(names):
+                if i in reads:
+                    total += reads[i]
+                else:
+                    total += _type_bytes(comp.types.get(n, ""))
+            return float(total)
+    if op.kind == "copy":
+        # loop-carried layout copies: read + write the buffer once; the
+        # operand IS the result size (avoid double counting via generic)
+        return float(_type_bytes(op.type_str))
+    if op.kind in _SLICE_OPS and names:
+        # read = slice size (result), not the full operand
+        others = sum(_type_bytes(comp.types.get(n, "")) for n in names[1:])
+        return float(_type_bytes(op.type_str) + min(others, _type_bytes(op.type_str)))
+    if op.kind in ("dynamic-update-slice", "scatter") and len(names) >= 2:
+        # in-place: read update + write region; the big buffer is aliased
+        upd = _type_bytes(comp.types.get(names[1], ""))
+        return float(2.0 * upd)
+    return float(sum(_type_bytes(comp.types.get(n, "")) for n in names))
+
+
+def analyze_computation(comp_name: str, comps: dict, memo: dict) -> Cost:
+    if comp_name in memo:
+        return memo[comp_name]
+    comp = comps.get(comp_name)
+    cost = Cost()
+    memo[comp_name] = cost  # break cycles defensively
+    if comp is None:
+        return cost
+    for op in comp.ops:
+        kind = op.kind
+        if kind in _FREE_OPS:
+            continue
+        base_kind = kind.removesuffix("-start").removesuffix("-done")
+        if base_kind in _COLLECTIVES:
+            if kind.endswith("-done"):
+                continue
+            b = float(_type_bytes(op.type_str))
+            cost.coll_bytes[base_kind] += b
+            cost.coll_counts[base_kind] += 1
+            cost.bytes += b + _op_operand_bytes(op, comp)
+            cost._bump(cost.coll_by_site, f"{base_kind}:{_site_of(op)}", b)
+            continue
+        if kind == "while":
+            m = _TRIP_RE.search(op.rest)
+            trips = int(m.group(1)) if m else 1
+            mcb = _COND_BODY_RE.search(op.rest)
+            if mcb:
+                cond, body = mcb.group(1), mcb.group(2)
+                cost.add(analyze_computation(body, comps, memo), trips)
+                cost.add(analyze_computation(cond, comps, memo), trips)
+            continue
+        if kind == "conditional":
+            m = _BRANCHES_RE.search(op.rest)
+            if m:
+                branch_costs = [analyze_computation(b.strip().lstrip("%"), comps, memo)
+                                for b in m.group(1).split(",")]
+                if branch_costs:
+                    # upper bound: the most expensive branch
+                    best = max(branch_costs, key=lambda c: c.flops + c.bytes)
+                    cost.add(best)
+            cost.bytes += _type_bytes(op.type_str) + _op_operand_bytes(op, comp)
+            continue
+        # generic op: HBM traffic = operands + result
+        if kind in ("dynamic-update-slice", "scatter"):
+            # result aliases the input buffer; only the updated region moves
+            op_bytes = _op_operand_bytes(op, comp, comps)
+        else:
+            result_bytes = _type_bytes(op.type_str)
+            if kind == "fusion":
+                m = _CALLS_RE.search(op.rest)
+                callee = comps.get(m.group(1)) if m else None
+                if callee is not None:
+                    rb = _fusion_result_bytes(callee)
+                    if rb is not None:
+                        result_bytes = rb
+            op_bytes = result_bytes + _op_operand_bytes(op, comp, comps)
+        cost.bytes += op_bytes
+        cost._bump(cost.bytes_by_site, _site_of(op), op_bytes)
+        if kind == "dot":
+            f = _dot_flops(op, comp)
+            cost.flops += f
+            site = _site_of(op)
+            cost.dot_flops_by_site[site] = cost.dot_flops_by_site.get(site, 0.0) + f
+        elif kind in ("fusion", "call", "custom-call", "reduce", "sort", "map",
+                      "scatter", "select-and-scatter", "reduce-window"):
+            m = _CALLS_RE.search(op.rest) or _TO_APPLY_RE.search(op.rest)
+            if m:
+                sub = analyze_computation(m.group(1), comps, memo)
+                # flops recurse (dots can hide in fusions); bytes already
+                # counted at this call site — internal traffic is on-chip
+                cost.flops += sub.flops
+                for k in _COLLECTIVES:
+                    cost.coll_bytes[k] += sub.coll_bytes[k]
+                    cost.coll_counts[k] += sub.coll_counts[k]
+                for k, v in sub.dot_flops_by_site.items():
+                    cost.dot_flops_by_site[k] = cost.dot_flops_by_site.get(k, 0.0) + v
+    return cost
+
+
+def analyze(hlo_text: str) -> dict:
+    """Per-device cost of the ENTRY computation, loop-multiplied."""
+    comps = parse_hlo(hlo_text)
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.MULTILINE)
+    if m:
+        entry = m.group(1)
+    else:  # fall back: last computation
+        entry = list(comps)[-1] if comps else ""
+    memo: dict = {}
+    cost = analyze_computation(entry, comps, memo)
+
+    def top(d, n=25):
+        return dict(sorted(d.items(), key=lambda kv: -kv[1])[:n])
+
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "coll_bytes": dict(cost.coll_bytes),
+        "coll_counts": dict(cost.coll_counts),
+        "coll_total": float(sum(cost.coll_bytes.values())),
+        "top_dot_sites": top(cost.dot_flops_by_site),
+        "top_bytes_sites": top(cost.bytes_by_site),
+        "top_coll_sites": top(cost.coll_by_site),
+    }

@@ -1,0 +1,136 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+    compute term    = HLO_FLOPs / (chips x peak)
+    memory term     = HLO_bytes / (chips x hbm_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+``cost_analysis()`` reports the pre-partitioning (global) module, so the
+FLOP/byte totals divide by chip count. Collective bytes are NOT in
+cost_analysis: we parse the POST-partitioning HLO (``compiled.as_text()``)
+whose shapes are per-device, sum the result-buffer sizes of every
+collective op, and scale by chips to get the global figure the formula
+expects (ring-transfer approximation: each chip moves ~the shard it
+emits per collective).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _buffer_bytes(shape_str: str) -> int:
+    """Total bytes of all tensors in an HLO result type string (handles
+    tuples by summing every typed buffer that appears)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind (result-size sum)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match ops like:  %all-reduce.5 = f32[...] all-reduce(...)
+        m = re.match(r"%?[\w.-]+ = (.+?) (all-gather|all-reduce|reduce-scatter|"
+                     r"all-to-all|collective-permute)", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        # skip -start/-done duplicates (count the -start only)
+        if f"{kind}-done" in s:
+            continue
+        out[kind] += _buffer_bytes(m.group(1))
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # global
+    hlo_bytes: float  # global
+    coll_bytes_per_dev: float
+    model_flops: float
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        self.t_compute = self.hlo_flops / (self.chips * PEAK_FLOPS)
+        self.t_memory = self.hlo_bytes / (self.chips * HBM_BW)
+        # per-dev coll bytes / link bw == global/(chips*link_bw)
+        self.t_collective = self.coll_bytes_per_dev / ICI_BW
+        return self
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap roofline estimate of one step."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_gflops": self.hlo_flops / 1e9,
+            "hlo_gbytes": self.hlo_bytes / 1e9,
+            "coll_mb_per_dev": self.coll_bytes_per_dev / 1e6,
+            "t_compute_ms": self.t_compute * 1e3,
+            "t_memory_ms": self.t_memory * 1e3,
+            "t_collective_ms": self.t_collective * 1e3,
+            "bottleneck": self.bottleneck,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def model_flops(cfg, shape_kind: str, batch: int, seq: int) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N_active·B (decode, per token)."""
+    n_active = cfg.n_active_params
+    if shape_kind == "train":
+        return 6.0 * n_active * batch * seq
+    if shape_kind == "prefill":
+        return 2.0 * n_active * batch * seq
+    return 2.0 * n_active * batch  # one token per sequence

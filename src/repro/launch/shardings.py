@@ -1,0 +1,173 @@
+"""Sharding rules: pytree-of-NamedSharding factories for params, optimizer
+state, batches and decode caches.
+
+Baseline policy (the §Perf loop iterates from here):
+
+- weights: Megatron-style tensor parallel over "model" (column-parallel
+  for input projections / up, row-parallel for output projections /
+  down) + FSDP over "data" on the other matrix dim — so a 132 B MoE
+  shards over all 256 chips of a pod. "pod" replicates params (pods are
+  DP replicas; gradients all-reduce over "pod").
+- MoE experts: expert-parallel over "model", FSDP over "data" on d_model.
+- batch: data-parallel over ("pod",) + "data".
+- decode caches: batch over "data", everything else replicated
+  (long_500k has batch 1 -> fully replicated, model-parallel compute).
+
+Rules are matched by parameter path NAME, with a size-aware fallback, so
+new modules get a sane default instead of a silent replicate.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# name fragment -> spec template for the trailing (non-stack) dims.
+# "S" = FSDP axis ("data"), "M" = tensor axis ("model"), None = replicate.
+_MATRIX_RULES = [
+    # attention projections
+    ("attn/wq/w", ("S", "M")),
+    ("attn/wk/w", ("S", "M")),
+    ("attn/wv/w", ("S", "M")),
+    ("attn/wo/w", ("M", "S")),
+    ("cross/wq/w", ("S", "M")),
+    ("cross/wk/w", ("S", "M")),
+    ("cross/wv/w", ("S", "M")),
+    ("cross/wo/w", ("M", "S")),
+    # dense mlp
+    ("mlp/up/w", ("S", "M")),
+    ("mlp/gate/w", ("S", "M")),
+    ("mlp/down/w", ("M", "S")),
+    # moe experts: handled dynamically in _spec_for (size-aware, §Perf B.1)
+    ("moe/shared/up/w", ("S", "M")),
+    ("moe/shared/gate/w", ("S", "M")),
+    ("moe/shared/down/w", ("M", "S")),
+    ("moe/router/w", (None, None)),
+    # mamba (hybrid)
+    ("mamba/wxz/w", ("S", "M")),
+    ("mamba/wbc/w", ("S", "M")),
+    ("mamba/down/w", ("M", "S")),
+    ("mamba/wdt/w", (None, None)),
+    # mLSTM
+    ("mlstm/up/w", ("S", "M")),
+    ("mlstm/wq/w", ("S", "M")),
+    ("mlstm/wk/w", ("S", "M")),
+    ("mlstm/wv/w", ("S", "M")),
+    ("mlstm/down/w", ("M", "S")),
+    ("mlstm/wg/w", (None, None)),
+    # sLSTM
+    ("slstm/wx", ("S", "M")),
+    ("sdown/w", ("S", "M")),
+    # top level — embedding table keeps vocab replicated over "data":
+    # a gather from a vocab-sharded table forces SPMD full
+    # rematerialization (observed); sharding d_model on "model" keeps
+    # the gather local per shard instead.
+    ("embed/table", (None, "M")),
+    ("lm_head/w", (None, "M")),
+    ("pos_emb", (None, "M")),
+    ("enc_pos_emb", (None, "M")),
+    ("frontend/proj/w", (None, "M")),
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _axis(tag, mesh, fsdp: bool):
+    if tag == "M":
+        return "model"
+    if tag == "S":
+        return "data" if (fsdp and "data" in mesh.axis_names) else None
+    return None
+
+
+def _spec_for(path: str, shape, mesh, fsdp: bool) -> P:
+    # MoE experts (leaf (L, E, din, dout)): experts on "model"; the second
+    # shard axis goes on the LARGER matrix dim (§Perf B.1): for coarse
+    # experts (ff >= d, e.g. dbrx) shard ff — a d-sharded contraction
+    # partial-sums EVERY expert matmul (measured 1.7 TB/dev/step); for
+    # fine-grained experts (ff < d, e.g. deepseek-moe) the ff shards are
+    # too thin and d-sharding measures cheaper overall.
+    if "moe/experts/" in path and path.endswith("/w") and len(shape) >= 3:
+        din, dout = shape[-2], shape[-1]
+        is_down = "/down/" in path
+        ff = din if is_down else dout
+        d = dout if is_down else din
+        if ff >= d:
+            dims = ("M", "S", None) if is_down else ("M", None, "S")
+        else:
+            dims = ("M", None, "S") if is_down else ("M", "S", None)
+        lead = len(shape) - 3
+        spec = [None] * lead + [_axis(t, mesh, fsdp) for t in dims]
+        for i, ax in enumerate(spec):
+            if ax is not None and shape[i] % mesh.shape[ax] != 0:
+                spec[i] = None
+        return P(*spec)
+    for frag, dims in _MATRIX_RULES:
+        if frag in path:
+            lead = len(shape) - len(dims)
+            if lead < 0:  # rule written for stacked form; unstacked leaf
+                dims = dims[-len(shape):]
+                lead = 0
+            spec = [None] * lead + [_axis(t, mesh, fsdp) for t in dims]
+            # drop shardings that don't divide AND would be uneven by >0
+            for i, ax in enumerate(spec):
+                if ax is not None and shape[i] % mesh.shape[ax] != 0:
+                    spec[i] = None
+            return P(*spec)
+    return P()  # biases, norms, gates, scalars: replicate
+
+
+def param_shardings(mesh, params_shape, fsdp: bool = True):
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+
+    def leaf(path, sds):
+        return NamedSharding(mesh, _spec_for(_path_str(path), sds.shape, mesh, fsdp))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def opt_shardings(mesh, opt_shape, fsdp: bool = True):
+    """Optimizer state mirrors the params tree under 'mu'/'nu'; scalars
+    replicate. The same name rules apply because paths contain the
+    parameter names."""
+    return param_shardings(mesh, opt_shape, fsdp)
+
+
+def batch_shardings(mesh, batch_shape, batch_sharded: bool = True):
+    """Leading dim of every batch leaf is the global batch."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+
+    def leaf(path, sds):
+        if not batch_sharded or sds.shape == () or sds.shape[0] % _prod_axes(mesh, dp):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dp, *([None] * (len(sds.shape) - 1))))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_shape)
+
+
+def cache_shardings(mesh, cache_shape, batch: int):
+    """Decode caches: (L, B, ...) leaves shard B over 'data' when it
+    divides; recurrent states likewise. Everything else replicated."""
+    dp = "data"
+    n_dp = mesh.shape[dp]
+
+    def leaf(path, sds):
+        shp = sds.shape
+        if len(shp) >= 2 and shp[1] == batch and batch % n_dp == 0:
+            return NamedSharding(mesh, P(None, dp, *([None] * (len(shp) - 2))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+
+def replicated(mesh, tree_shape):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree_shape)
+
+
+def _prod_axes(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,252 @@
+"""Assigned input shapes -> lowered entry points + ShapeDtypeStruct specs.
+
+Each (arch, shape) pair resolves to:
+  - a config VARIANT (dry-run uses bf16 compute + remat; long_500k swaps
+    full attention for the sliding-window variant on quadratic archs),
+  - an entry function (train_step / prefill_step / serve_step),
+  - argument ShapeDtypeStructs (no allocation; weak-type-correct),
+  - NamedSharding in_shardings for the production mesh.
+
+``applicability(arch, shape)`` encodes the DESIGN.md skip table:
+  whisper-medium x long_500k        SKIP (enc-dec, no sub-quadratic form)
+  dense/moe/vlm  x long_500k        swa variant (beyond-paper, marked)
+  ssm/hybrid     x long_500k        native
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import get_config
+from repro.launch import shardings as sh
+from repro.models import backbone as bb
+from repro.models.config import ArchConfig
+
+ENC_FRAMES = 1500  # whisper encoder frames (30 s clip)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicability(cfg: ArchConfig, shape: ShapeSpec) -> str:
+    """'native' | 'swa' (sliding-window variant) | 'skip'."""
+    if shape.name != "long_500k":
+        return "native"
+    if cfg.is_encdec:
+        return "skip"  # whisper: no sensible sub-quadratic variant
+    if cfg.subquadratic:
+        return "native"  # ssm / hybrid / already-sliding archs
+    return "swa"  # dense / moe / vlm: beyond-paper sliding-window variant
+
+
+def dryrun_config(arch: str, shape: ShapeSpec, multi_pod: bool = False) -> ArchConfig | None:
+    """Config variant lowered for this (arch, shape); None -> skip."""
+    cfg = get_config(arch)
+    app = applicability(cfg, shape)
+    if app == "skip":
+        return None
+    if app == "swa":
+        cfg = cfg.replace(attn_kind="sliding", window=4096)
+    # activation batch constraint: data-parallel axes (skip batch-1 decode)
+    dp = ("pod", "data") if multi_pod else ("data",)
+    act = dp if shape.batch >= 16 else ()
+    # grouped MoE dispatch: one group per data shard (§Perf B.2)
+    groups = (32 if multi_pod else 16) if (cfg.n_experts and act) else 0
+    # production numerics: bf16 activations, f32 params, remat for training
+    return cfg.replace(compute_dtype="bfloat16", act_shard=act,
+                       moe_groups=groups, remat=(shape.kind == "train"))
+
+
+#: per-(arch, shape) grad-accumulation overrides, set by the §Perf loop.
+#: Recurrent stacks (xlstm) pay per-TIME-STEP weight re-reads in every
+#: microbatch's scan; their activations are tiny (no attention scores),
+#: so one big microbatch amortizes weight traffic ~8x (EXPERIMENTS.md §Perf).
+MICROBATCH_OVERRIDES = {
+    ("xlstm_350m", "train_4k"): 1,
+    ("hymba_1p5b", "train_4k"): 2,
+}
+
+
+def default_microbatches(arch: str, shape) -> int:
+    name = shape.name if hasattr(shape, "name") else shape
+    return MICROBATCH_OVERRIDES.get((arch, name), 8)
+
+
+# FSDP threshold (§Perf A.4): ZeRO-3 weight gathers dominate collectives
+# for models whose (params + Adam state) ALREADY fit per-device under
+# plain 16-way tensor parallelism. 12 bytes/param (f32 p+mu+nu) / 16-way
+# TP must stay well under the 16 GB HBM budget -> FSDP only above ~8B.
+FSDP_MIN_PARAMS = 8e9
+
+
+def use_fsdp(cfg: ArchConfig) -> bool:
+    return cfg.n_params >= FSDP_MIN_PARAMS
+
+
+# ------------------------------------------------------------ input specs --
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec):
+    b, s = shape.batch, shape.seq
+    i32, f32 = jnp.int32, jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "vision_stub":
+        s_text = s - cfg.vision_tokens
+        return {
+            "patches": sds((b, cfg.vision_tokens, cfg.frontend_dim), f32),
+            "tokens": sds((b, s_text), i32),
+            "labels": sds((b, s_text), i32),
+        }
+    if cfg.is_encdec:
+        return {
+            "frames": sds((b, ENC_FRAMES, cfg.frontend_dim), f32),
+            "tokens": sds((b, s), i32),
+            "labels": sds((b, s), i32),
+        }
+    return {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec):
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec, cache_dtype=jnp.bfloat16):
+    b = shape.batch
+    sds = jax.ShapeDtypeStruct
+    cache_shape = jax.eval_shape(
+        lambda: bb.init_cache(cfg, b, shape.seq, cache_dtype, enc_len=ENC_FRAMES))
+    return {
+        "tokens": sds((b, 1), jnp.int32),
+        "cache": cache_shape,
+        "index": sds((), jnp.int32),
+    }
+
+
+def params_specs(cfg: ArchConfig):
+    return jax.eval_shape(lambda: bb.init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ----------------------------------------------------------- entry points --
+
+def make_entry(cfg: ArchConfig, shape: ShapeSpec, microbatches: int = 8):
+    """Returns (fn, args_specs tuple, in_shardings_fn(mesh) -> tuple)."""
+    p_specs = params_specs(cfg)
+    # decode streams the whole weight set per token: 2-D weight sharding
+    # (FSDP) splits that stream across "data" and measures better there
+    # even for small models (§Perf follow-up to A.4)
+    fsdp = use_fsdp(cfg) or shape.kind == "decode"
+
+    if shape.kind == "train":
+        opt = optim.adamw(1e-4)
+        step = bb.make_train_step(cfg, opt, microbatches=microbatches)
+        o_specs = jax.eval_shape(opt.init, p_specs)
+        b_specs = train_batch_specs(cfg, shape)
+
+        def fn(params, opt_state, batch):
+            return step(params, opt_state, batch)
+
+        args = (p_specs, o_specs, b_specs)
+
+        def in_sh(mesh):
+            return (sh.param_shardings(mesh, p_specs, fsdp=fsdp),
+                    sh.opt_shardings(mesh, o_specs, fsdp=fsdp),
+                    sh.batch_shardings(mesh, b_specs))
+
+        return fn, args, in_sh
+
+    if shape.kind == "prefill":
+        b_specs = prefill_batch_specs(cfg, shape)
+
+        def fn(params, batch):
+            return bb.prefill(params, cfg, batch, max_len=shape.seq,
+                              cache_dtype=jnp.bfloat16)
+
+        args = (p_specs, b_specs)
+
+        def in_sh(mesh):
+            return (sh.param_shardings(mesh, p_specs, fsdp=fsdp),
+                    sh.batch_shardings(mesh, b_specs))
+
+        return fn, args, in_sh
+
+    # decode
+    d_specs = decode_specs(cfg, shape)
+
+    def fn(params, tokens, cache, index):
+        return bb.decode_step(params, cfg, tokens, cache, index)
+
+    args = (p_specs, d_specs["tokens"], d_specs["cache"], d_specs["index"])
+
+    def in_sh(mesh):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return (sh.param_shardings(mesh, p_specs, fsdp=fsdp),
+                sh.batch_shardings(mesh, d_specs["tokens"]),
+                sh.cache_shardings(mesh, d_specs["cache"], shape.batch),
+                NamedSharding(mesh, P()))
+
+    return fn, args, in_sh
+
+
+# ------------------------------------------------- blendfl federated round --
+
+def make_blendfl_entry(n_clients: int = 16):
+    """The paper's own technique as a dry-run entry: one full BlendFL
+    round (3 training phases + BlendAvg psum aggregation) as one SPMD
+    program over client slices."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import federation_sharded as fs
+
+    spec = fs.ShardedFedSpec(n_clients=n_clients, d_hidden=1024, n_layers=4,
+                             seq_a=64, feat_a=128, seq_b=64, feat_b=128,
+                             out_dim=25, n_partial=512, n_frag=512,
+                             n_paired=512, n_val=2048, n_val_score=512)
+    round_fn = fs.make_blendfl_round(spec)
+    stacked_s, gmv_s, glob_s = jax.eval_shape(
+        lambda: fs.init_stacked_models(jax.random.PRNGKey(0), spec))
+    batch_s = fs.batch_specs(spec)
+    args = (stacked_s, gmv_s, glob_s, batch_s)
+
+    def in_sh(mesh):
+        def stacked_leaf(sds):
+            spec_dims = [None] * (len(sds.shape) - 1)
+            # shard the largest trailing dim over "model" when divisible
+            if len(sds.shape) >= 2:
+                cand = max(range(1, len(sds.shape)), key=lambda i: sds.shape[i])
+                if sds.shape[cand] % mesh.shape["model"] == 0 and sds.shape[cand] >= 256:
+                    spec_dims[cand - 1] = "model"
+            return NamedSharding(mesh, P("data", *spec_dims))
+
+        def rep_leaf(sds):
+            return NamedSharding(mesh, P())
+
+        def batch_leaf(path, sds):
+            name = sh._path_str(path)
+            if name.startswith("val_") or name == "perm_b":
+                return NamedSharding(mesh, P())
+            return NamedSharding(mesh, P("data", *([None] * (len(sds.shape) - 1))))
+
+        return (jax.tree.map(stacked_leaf, stacked_s),
+                jax.tree.map(rep_leaf, gmv_s),
+                jax.tree.map(rep_leaf, glob_s),
+                jax.tree_util.tree_map_with_path(batch_leaf, batch_s))
+
+    return round_fn, args, in_sh, spec

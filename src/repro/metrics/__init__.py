@@ -1,0 +1,3 @@
+from repro.metrics.classification import auroc, auprc, accuracy, bootstrap_ci
+
+__all__ = ["auroc", "auprc", "accuracy", "bootstrap_ci"]

@@ -1,0 +1,101 @@
+"""Classification metrics in pure numpy (no sklearn in this environment).
+
+The paper reports AUROC and AUPRC with 95% bootstrap confidence intervals
+(Tables I-III). For multilabel / multiclass tasks, scores are macro-averaged
+over label columns, matching the paper's per-task reporting.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _binary_auroc(y_true: np.ndarray, y_score: np.ndarray) -> float:
+    """AUROC via the Mann-Whitney U statistic (handles ties by mid-ranks)."""
+    y_true = np.asarray(y_true).astype(np.float64).ravel()
+    y_score = np.asarray(y_score).astype(np.float64).ravel()
+    n_pos = float(y_true.sum())
+    n_neg = float(len(y_true) - n_pos)
+    if n_pos == 0 or n_neg == 0:
+        return float("nan")
+    order = np.argsort(y_score, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    sorted_scores = y_score[order]
+    # mid-ranks for ties
+    i = 0
+    r = 1.0
+    n = len(sorted_scores)
+    while i < n:
+        j = i
+        while j + 1 < n and sorted_scores[j + 1] == sorted_scores[i]:
+            j += 1
+        mid = (r + (r + (j - i))) / 2.0
+        ranks[order[i : j + 1]] = mid
+        r += j - i + 1
+        i = j + 1
+    rank_sum_pos = ranks[y_true == 1].sum()
+    u = rank_sum_pos - n_pos * (n_pos + 1) / 2.0
+    return float(u / (n_pos * n_neg))
+
+
+def _binary_auprc(y_true: np.ndarray, y_score: np.ndarray) -> float:
+    """Average precision (step-wise interpolation, sklearn-compatible)."""
+    y_true = np.asarray(y_true).astype(np.float64).ravel()
+    y_score = np.asarray(y_score).astype(np.float64).ravel()
+    n_pos = y_true.sum()
+    if n_pos == 0:
+        return float("nan")
+    order = np.argsort(-y_score, kind="mergesort")
+    y = y_true[order]
+    tp = np.cumsum(y)
+    fp = np.cumsum(1 - y)
+    precision = tp / (tp + fp)
+    recall = tp / n_pos
+    # AP = sum over thresholds of (R_k - R_{k-1}) * P_k
+    prev_recall = np.concatenate([[0.0], recall[:-1]])
+    return float(np.sum((recall - prev_recall) * precision))
+
+
+def _macro(metric_fn, y_true, y_score) -> float:
+    y_true = np.asarray(y_true)
+    y_score = np.asarray(y_score)
+    if y_true.ndim == 1:
+        return metric_fn(y_true, y_score)
+    vals = [metric_fn(y_true[:, c], y_score[:, c]) for c in range(y_true.shape[1])]
+    vals = [v for v in vals if not np.isnan(v)]
+    return float(np.mean(vals)) if vals else float("nan")
+
+
+def auroc(y_true, y_score) -> float:
+    """Binary or macro-averaged multilabel AUROC."""
+    return _macro(_binary_auroc, y_true, y_score)
+
+
+def auprc(y_true, y_score) -> float:
+    """Binary or macro-averaged multilabel average precision."""
+    return _macro(_binary_auprc, y_true, y_score)
+
+
+def accuracy(y_true, y_pred) -> float:
+    y_true = np.asarray(y_true)
+    y_pred = np.asarray(y_pred)
+    return float(np.mean(y_true == y_pred))
+
+
+def bootstrap_ci(metric_fn, y_true, y_score, n_boot: int = 200, seed: int = 0,
+                 alpha: float = 0.05) -> tuple[float, float, float]:
+    """(point, lo, hi) 95% percentile-bootstrap CI, as reported in the paper."""
+    rng = np.random.default_rng(seed)
+    y_true = np.asarray(y_true)
+    y_score = np.asarray(y_score)
+    point = metric_fn(y_true, y_score)
+    n = len(y_true)
+    vals = []
+    for _ in range(n_boot):
+        idx = rng.integers(0, n, size=n)
+        v = metric_fn(y_true[idx], y_score[idx])
+        if not np.isnan(v):
+            vals.append(v)
+    if not vals:
+        return point, float("nan"), float("nan")
+    lo, hi = np.percentile(vals, [100 * alpha / 2, 100 * (1 - alpha / 2)])
+    return float(point), float(lo), float(hi)

@@ -1,0 +1,25 @@
+from repro.models.config import ArchConfig
+from repro.models.backbone import (
+    init_params,
+    forward,
+    loss_fn,
+    prefill,
+    decode_step,
+    init_cache,
+    make_train_step,
+    make_serve_step,
+    n_scan_layers,
+)
+
+__all__ = [
+    "ArchConfig",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "make_train_step",
+    "make_serve_step",
+    "n_scan_layers",
+]

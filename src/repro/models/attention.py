@@ -1,0 +1,239 @@
+"""Multi-head attention with GQA, causal/bidirectional/sliding-window masks,
+and a decode path against a (ring-buffer) KV cache.
+
+Two XLA execution paths (the Pallas flash kernel in
+``repro.kernels.flash_attention`` is the TPU Mosaic hot-path, validated
+against the same math):
+
+- ``gqa_sdpa``          one-shot einsum attention. K/V heads are NEVER
+                        repeated to Hq (queries are grouped (Hkv, G)
+                        instead), so GQA memory stays at the kv-head size.
+- ``chunked_gqa_sdpa``  flash-style online-softmax over (block_q, block_k)
+                        tiles via lax.scan — O(S) live memory instead of
+                        O(S^2). Selected statically for long sequences;
+                        the q-block body is checkpointed so the backward
+                        pass recomputes score tiles instead of storing
+                        them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, dense_init
+from repro.models.rope import apply_rope, rope_angles
+
+NEG_INF = -1e30
+
+# statically selected: einsum path below this q*k size, chunked above
+CHUNKED_THRESHOLD = 2 ** 22  # 2048 x 2048
+
+
+def attn_init(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def cross_attn_init(key, cfg, dtype):
+    return attn_init(key, cfg, dtype)
+
+
+def _repeat_kv(x, groups: int):
+    """(B, S, Hkv, hd) -> (B, S, Hkv*groups, hd). Oracle/test path only —
+    the production paths keep K/V at kv-head width."""
+    if groups == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, groups, d)).reshape(b, s, h * groups, d)
+
+
+def gqa_sdpa(q, k, v, mask, softcap: float = 0.0):
+    """q (B,Sq,Hq,hd); k/v (B,Sk,Hkv,hd); mask broadcastable to
+    (B,Hkv,G,Sq,Sk) from (B or 1, 1, Sq, Sk) bool."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def sdpa(q, k, v, mask, softcap: float = 0.0):
+    """Back-compat wrapper: full-head q/k/v (B,S,H,hd) einsum attention."""
+    return gqa_sdpa(q, k, v, mask, softcap)
+
+
+def chunked_gqa_sdpa(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0,
+                     softcap: float = 0.0, block_q: int = 512, block_k: int = 1024):
+    """Flash-style attention in pure JAX: lax.scan over q blocks, online
+    softmax over k blocks. Live memory O(block_q * block_k) per (Hkv, G).
+
+    q (B,Sq,Hq,hd); k/v (B,Sk,Hkv,hd). q_offset aligns query index qi ->
+    key index (qi + q_offset); pass sk - sq for end-aligned suffix queries.
+    """
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    nq, nk = (sq + pad_q) // block_q, (sk + pad_k) // block_k
+
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    # (nq, B, bq, Hkv, G, hd)
+    qb = qp.reshape(b, nq, block_q, hkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = kp.reshape(b, nk, block_k, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(b, nk, block_k, hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_body(_, qx):
+        qi0, q_i = qx
+        qi = qi0 + jnp.arange(block_q)[:, None] + q_offset  # key-space index
+        q32 = q_i.astype(jnp.float32)
+
+        def k_body(carry, kx):
+            m_prev, l_prev, acc = carry
+            ki0, k_i, v_i = kx
+            ki = ki0 + jnp.arange(block_k)[None, :]
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q32, k_i.astype(jnp.float32)) * scale
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            mask = (ki < sk) & (qi < sk)
+            if causal:
+                mask = mask & (ki <= qi)
+            if window > 0:
+                mask = mask & (ki > qi - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p,
+                                                      v_i.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, block_q, hd), jnp.float32)
+        ki0s = jnp.arange(nk) * block_k
+        (m, l, acc), _ = jax.lax.scan(k_body, (m0, l0, a0), (ki0s, kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,Hkv,G,bq,hd)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B,bq,Hkv,G,hd)
+
+    qi0s = jnp.arange(nq) * block_q
+    # checkpoint: backward recomputes score tiles instead of storing them
+    _, outs = jax.lax.scan(jax.checkpoint(q_body), None, (qi0s, qb))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * block_q, hq, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def causal_mask(sq: int, sk: int, window: int = 0, q_offset: int = 0):
+    """(1,1,Sq,Sk) bool; window>0 adds sliding-window lower bound."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    m = ki <= qi
+    if window > 0:
+        m = m & (ki > qi - window)
+    return m[None, None]
+
+
+def attend(p, cfg, x, positions, *, causal: bool, kv_x=None, mask=None):
+    """Full-sequence attention (training / prefill / encoder / cross).
+
+    kv_x: source for K/V (cross-attention) — defaults to x (self-attention).
+    positions: (B,S) or (B,S,3); None disables RoPE (e.g. cross-attn).
+    Returns (out, (k, v)) so prefill can persist the cache.
+    """
+    hd = cfg.hd
+    b, sq, _ = x.shape
+    src = x if kv_x is None else kv_x
+    sk = src.shape[1]
+    q = dense(p["wq"], x).reshape(b, sq, cfg.n_heads, hd)
+    k = dense(p["wk"], src).reshape(b, sk, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], src).reshape(b, sk, cfg.n_kv_heads, hd)
+    if positions is not None and cfg.pos in ("rope", "mrope"):
+        sections = cfg.mrope_sections if cfg.pos == "mrope" else None
+        ang_q = rope_angles(positions, hd, cfg.rope_theta, sections)
+        q = apply_rope(q, ang_q)
+        if kv_x is None:
+            k = apply_rope(k, ang_q)
+    window = cfg.window if (cfg.attn_kind == "sliding" and causal) else 0
+    if mask is None and sq * sk >= CHUNKED_THRESHOLD:
+        out = chunked_gqa_sdpa(q, k, v, causal=causal, window=window,
+                               softcap=cfg.attn_logit_softcap)
+    else:
+        if mask is None and causal:
+            mask = causal_mask(sq, sk, window)
+        out = gqa_sdpa(q, k, v, mask, cfg.attn_logit_softcap)
+    out = dense(p["wo"], out.reshape(b, sq, cfg.n_heads * hd))
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------- decode ----
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype):
+    """Ring-buffer KV cache for one layer. For sliding attention the buffer
+    is the window size; keys are stored post-RoPE (absolute positions)."""
+    length = min(max_len, cfg.window) if cfg.attn_kind == "sliding" else max_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attend(p, cfg, x, cache, index, positions=None):
+    """One-token decode. x (B,1,d); cache {'k','v'} (B,L,Hkv,hd); index scalar
+    = number of tokens already in context. Returns (out, new_cache)."""
+    hd = cfg.hd
+    b = x.shape[0]
+    length = cache["k"].shape[1]
+    q = dense(p["wq"], x).reshape(b, 1, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(b, 1, cfg.n_kv_heads, hd)
+    if cfg.pos in ("rope", "mrope"):
+        if positions is None:
+            positions = jnp.broadcast_to(index[None, None].astype(jnp.int32), (b, 1))
+        sections = cfg.mrope_sections if cfg.pos == "mrope" else None
+        ang = rope_angles(positions, hd, cfg.rope_theta, sections)
+        q = apply_rope(q, ang)
+        k = apply_rope(k, ang)
+    slot = jnp.mod(index, length)
+    new_k = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    # valid slots: those already written (ring semantics)
+    ki = jnp.arange(length)
+    valid = jnp.where(index + 1 >= length, jnp.ones((length,), bool), ki <= index)
+    mask = valid[None, None, None, :]
+    out = gqa_sdpa(q, new_k.astype(x.dtype), new_v.astype(x.dtype), mask,
+                   cfg.attn_logit_softcap)
+    out = dense(p["wo"], out.reshape(b, 1, cfg.n_heads * hd))
+    return out, {"k": new_k, "v": new_v}
+
+
+def decode_cross_attend(p, cfg, x, cross_kv):
+    """Decoder cross-attention against a precomputed encoder K/V cache."""
+    hd = cfg.hd
+    b = x.shape[0]
+    q = dense(p["wq"], x).reshape(b, 1, cfg.n_heads, hd)
+    k, v = cross_kv  # raw (kv-head width) as produced by prefill
+    out = gqa_sdpa(q, k.astype(x.dtype), v.astype(x.dtype), None,
+                   cfg.attn_logit_softcap)
+    return dense(p["wo"], out.reshape(b, 1, cfg.n_heads * hd))

@@ -1,0 +1,334 @@
+"""Backbone: composes blocks into full models and exposes the three
+entry points the launcher lowers —
+
+    forward(params, cfg, batch)                    train / eval, full seq
+    prefill(params, cfg, batch, max_len)           build decode caches
+    decode_step(params, cfg, tokens, cache, index) one-token serve step
+
+plus factories ``make_train_step`` (grad-accum microbatching + AdamW) and
+``make_serve_step``. Layers are stacked (vmap init) and iterated with
+``lax.scan`` so the HLO stays one-layer-sized regardless of depth; with
+``cfg.remat`` the layer body is wrapped in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.common import (
+    dense,
+    dense_init,
+    embed,
+    embedding_init,
+    rmsnorm,
+    rmsnorm_init,
+    softmax_cross_entropy,
+)
+from repro.models.config import ArchConfig
+from repro.models.frontends import frontend_apply, frontend_init
+from repro.models.rope import mrope_positions, text_positions
+from repro.optim import apply_updates
+
+MAX_LEARNED_POS = 32768  # whisper-style learned positions (long_500k is skipped for encdec)
+
+
+def _constrain(cfg: ArchConfig, x):
+    """Pin the activation batch dim to cfg.act_shard mesh axes. Without
+    this, aggressive 2D weight sharding makes XLA reshard activations to
+    feature-sharded/batch-REPLICATED layouts (observed: 16x redundant
+    compute on the 16x16 mesh). No-op when act_shard is empty."""
+    if not cfg.act_shard:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(tuple(cfg.act_shard), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ------------------------------------------------------------------ init ----
+
+_BLOCK = {
+    "attn": (B.attn_block_init, B.attn_block, B.attn_block_decode,
+             B.attn_block_cache, B.attn_block_prefill),
+    "hybrid": (B.hybrid_block_init, B.hybrid_block, B.hybrid_block_decode,
+               B.hybrid_block_cache, B.hybrid_block_prefill),
+    "xlstm_pair": (B.xlstm_pair_init, B.xlstm_pair_block, B.xlstm_pair_decode,
+                   B.xlstm_pair_cache, B.xlstm_pair_prefill),
+}
+
+
+def n_scan_layers(cfg: ArchConfig) -> int:
+    if cfg.block_type == "xlstm_pair":
+        assert cfg.n_layers % 2 == 0
+        return cfg.n_layers // 2
+    return cfg.n_layers
+
+
+def init_params(key: jax.Array, cfg: ArchConfig):
+    dtype = cfg.pdtype
+    keys = jax.random.split(key, 8)
+    p = {"embed": embedding_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+         "final_norm": rmsnorm_init(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.frontend != "none":
+        p["frontend"] = frontend_init(keys[2], cfg, dtype)
+    if cfg.pos == "learned":
+        p["pos_emb"] = (jax.random.normal(keys[3], (MAX_LEARNED_POS, cfg.d_model))
+                        * 0.02).astype(dtype)
+
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(keys[4], cfg.n_enc_layers)
+        dec_keys = jax.random.split(keys[5], cfg.n_layers)
+        p["enc_layers"] = jax.vmap(lambda k: B.enc_block_init(k, cfg, dtype))(enc_keys)
+        p["enc_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        p["dec_layers"] = jax.vmap(lambda k: B.dec_block_init(k, cfg, dtype))(dec_keys)
+        if cfg.pos == "learned":
+            p["enc_pos_emb"] = (jax.random.normal(keys[6], (MAX_LEARNED_POS, cfg.d_model))
+                                * 0.02).astype(dtype)
+    else:
+        init_fn = _BLOCK[cfg.block_type][0]
+        layer_keys = jax.random.split(keys[4], n_scan_layers(cfg))
+        p["layers"] = jax.vmap(lambda k: init_fn(k, cfg, dtype))(layer_keys)
+    return p
+
+
+# ------------------------------------------------------------- embedding ----
+
+def _embed_inputs(params, cfg: ArchConfig, batch):
+    """Returns (x (B,S,d), positions, loss_mask or None)."""
+    cdt = cfg.cdtype
+    if cfg.frontend == "vision_stub":  # VLM: [patches ; tokens]
+        vis = frontend_apply(params["frontend"], cfg, batch["patches"], cdt)
+        txt = embed(params["embed"], batch["tokens"], cdt)
+        x = jnp.concatenate([vis, txt], axis=1)
+        b, n_vis = vis.shape[0], vis.shape[1]
+        positions = mrope_positions(b, n_vis, txt.shape[1])
+        mask = jnp.concatenate(
+            [jnp.zeros((b, n_vis), jnp.float32), jnp.ones((b, txt.shape[1]), jnp.float32)],
+            axis=1)
+        return x, positions, mask
+    x = embed(params["embed"], batch["tokens"], cdt)
+    b, s = batch["tokens"].shape
+    if cfg.pos == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_emb"], 0, s, 0).astype(cdt)[None]
+        positions = None
+    else:
+        positions = text_positions(b, s)
+    return x, positions, None
+
+
+def _lm_logits(params, cfg: ArchConfig, x):
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return x @ params["embed"]["table"].astype(x.dtype).T
+    return dense(params["lm_head"], x)
+
+
+def _scan_layers(cfg, layer_fn, x, stacked_params, remat: bool):
+    if remat:
+        layer_fn = jax.checkpoint(layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, lp):
+        y, aux = layer_fn(_constrain(cfg, carry), lp)
+        return _constrain(cfg, y), aux
+
+    x, auxs = jax.lax.scan(body, x, stacked_params)
+    return x, jnp.sum(auxs)
+
+
+# ----------------------------------------------------------------- train ----
+
+def forward(params, cfg: ArchConfig, batch):
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    if cfg.is_encdec:
+        return _encdec_forward(params, cfg, batch)
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+    x = _constrain(cfg, x)
+    apply_fn = _BLOCK[cfg.block_type][1]
+
+    def layer_fn(carry, lp):
+        return apply_fn(lp, cfg, carry, positions)
+
+    x, aux = _scan_layers(cfg, layer_fn, x, params["layers"], cfg.remat)
+    return _lm_logits(params, cfg, x), aux
+
+
+def _encode(params, cfg: ArchConfig, frames):
+    cdt = cfg.cdtype
+    x = frontend_apply(params["frontend"], cfg, frames, cdt)
+    s = x.shape[1]
+    x = x + jax.lax.dynamic_slice_in_dim(params["enc_pos_emb"], 0, s, 0).astype(cdt)[None]
+
+    def layer_fn(carry, lp):
+        return B.enc_block(lp, cfg, carry, None)
+
+    x, _ = _scan_layers(cfg, layer_fn, x, params["enc_layers"], cfg.remat)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _encdec_forward(params, cfg: ArchConfig, batch):
+    enc_out = _encode(params, cfg, batch["frames"])
+    cdt = cfg.cdtype
+    tok = batch["tokens"]
+    x = embed(params["embed"], tok, cdt)
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_emb"], 0, tok.shape[1], 0).astype(cdt)[None]
+
+    def layer_fn(carry, lp):
+        y, _ = B.dec_block(lp, cfg, carry, enc_out, None)
+        return y, jnp.zeros((), jnp.float32)
+
+    x, aux = _scan_layers(cfg, layer_fn, x, params["dec_layers"], cfg.remat)
+    return _lm_logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_stub":
+        # loss only over the text region (vision tokens have no labels)
+        n_vis = batch["patches"].shape[1]
+        logits = logits[:, n_vis:]
+    ce = softmax_cross_entropy(logits, labels)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        loss = jnp.mean(ce)
+    else:
+        loss = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, optimizer, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def grads_of(params, mb):
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, cfg, mb)
+        return total, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def to_mb(x):
+                x = x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+                if cfg.act_shard:
+                    from jax.sharding import PartitionSpec as P
+
+                    x = jax.lax.with_sharding_constraint(
+                        x, P(None, tuple(cfg.act_shard), *([None] * (x.ndim - 2))))
+                return x
+
+            mb_batch = jax.tree.map(to_mb, batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                total, _m, g = grads_of(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + total), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, total), _ = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)), mb_batch)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            total = total / microbatches
+            metrics = {"loss": total, "aux": jnp.zeros((), jnp.float32)}
+        else:
+            total, metrics, grads = grads_of(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, total=total)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------- serving ----
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None, enc_len: int = 1500):
+    """Decode cache for the whole stack (leading axis = scanned layers).
+    enc_len: encoder output length for the cross-attention cache (encdec)."""
+    dtype = dtype or cfg.cdtype
+    n = n_scan_layers(cfg)
+    if cfg.is_encdec:
+        single = {
+            "self": B.attn_block_cache(cfg, batch, max_len, dtype),
+            "cross": (jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.hd), dtype),
+                      jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.hd), dtype)),
+        }
+        n = cfg.n_layers
+    else:
+        single = _BLOCK[cfg.block_type][3](cfg, batch, max_len, dtype)
+    return jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), single)
+
+
+def prefill(params, cfg: ArchConfig, batch, max_len: int, cache_dtype=None):
+    """Process the prompt; returns (last-token logits, cache, next_index)."""
+    cache_dtype = cache_dtype or cfg.cdtype
+    if cfg.is_encdec:
+        return _encdec_prefill(params, cfg, batch, max_len, cache_dtype)
+    x, positions, _ = _embed_inputs(params, cfg, batch)
+    x = _constrain(cfg, x)
+    prefill_fn = _BLOCK[cfg.block_type][4]
+
+    def body(carry, lp):
+        y, cache_l = prefill_fn(lp, cfg, _constrain(cfg, carry), positions,
+                                max_len, cache_dtype)
+        return _constrain(cfg, y), cache_l
+
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    logits = _lm_logits(params, cfg, x[:, -1:])
+    return logits, cache, x.shape[1]
+
+
+def _encdec_prefill(params, cfg, batch, max_len, cache_dtype):
+    enc_out = _encode(params, cfg, batch["frames"])
+    cdt = cfg.cdtype
+    tok = batch["tokens"]  # decoder prompt (e.g. BOS)
+    x = embed(params["embed"], tok, cdt)
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_emb"], 0, tok.shape[1], 0).astype(cdt)[None]
+
+    def body(carry, lp):
+        y, cache_l = B.dec_block_prefill(lp, cfg, carry, enc_out, None, max_len, cache_dtype)
+        return y, cache_l
+
+    x, cache = jax.lax.scan(body, x, params["dec_layers"])
+    logits = _lm_logits(params, cfg, x[:, -1:])
+    return logits, cache, tok.shape[1]
+
+
+def decode_step(params, cfg: ArchConfig, tokens, cache, index):
+    """tokens (B,1) int32; index: scalar count of tokens already in context."""
+    cdt = cfg.cdtype
+    x = embed(params["embed"], tokens, cdt)
+    if cfg.pos == "learned":
+        pe = jnp.take(params["pos_emb"], jnp.minimum(index, MAX_LEARNED_POS - 1), axis=0)
+        x = x + pe.astype(cdt)[None, None, :]
+    b = tokens.shape[0]
+    positions = None
+    if cfg.pos == "mrope":
+        pos1 = jnp.broadcast_to(index[None, None].astype(jnp.int32), (b, 1))
+        positions = jnp.stack([pos1, pos1, pos1], axis=-1)
+
+    if cfg.is_encdec:
+        def body(carry, xs):
+            lp, cache_l = xs
+            y, new_cache = B.dec_block_decode(lp, cfg, carry, cache_l, index)
+            return y, new_cache
+        x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    else:
+        decode_fn = _BLOCK[cfg.block_type][2]
+
+        def body(carry, xs):
+            lp, cache_l = xs
+            y, new_cache = decode_fn(lp, cfg, carry, cache_l, index, positions)
+            return y, new_cache
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    return _lm_logits(params, cfg, x), new_cache
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, tokens, cache, index):
+        return decode_step(params, cfg, tokens, cache, index)
+
+    return serve_step

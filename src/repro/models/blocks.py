@@ -1,0 +1,385 @@
+"""Per-layer blocks for every assigned family.
+
+Block types
+-----------
+attn        pre-norm attention + (MLP | MoE)          [dense, moe, vlm]
+hybrid      parallel attention + Mamba-2 SSD heads    [hymba]
+xlstm_pair  one mLSTM block + one sLSTM block         [xlstm]
+encdec      encoder block / decoder block w/ cross    [whisper]
+
+All blocks are (init, apply_train, apply_decode) triples over plain dict
+params, so they stack with vmap-init + lax.scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attend,
+    attn_init,
+    decode_attend,
+    decode_cross_attend,
+    init_kv_cache,
+)
+from repro.models.common import dense, dense_init, rmsnorm, rmsnorm_init
+from repro.models.mlp import mlp, mlp_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.recurrent import (
+    gated_linear_scan,
+    gated_linear_step,
+    slstm_init,
+    slstm_scan,
+    slstm_step,
+)
+
+
+# ------------------------------------------------------------------ attn ----
+
+def attn_block_init(key, cfg, dtype):
+    ka, km = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(ka, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_init(km, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(km, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def attn_block(p, cfg, x, positions, causal=True, mask=None):
+    a, _ = attend(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps), positions,
+                  causal=causal, mask=mask)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        m, aux = moe_apply(p["moe"], cfg, h)
+    else:
+        m, aux = mlp(p["mlp"], h, cfg.act), jnp.zeros((), jnp.float32)
+    return x + m, aux
+
+
+def attn_block_decode(p, cfg, x, cache, index, positions=None):
+    a, cache = decode_attend(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                             cache, index, positions)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        m, _ = moe_apply(p["moe"], cfg, h)
+    else:
+        m = mlp(p["mlp"], h, cfg.act)
+    return x + m, cache
+
+
+def attn_block_cache(cfg, batch, max_len, dtype):
+    return init_kv_cache(cfg, batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------- hybrid ----
+
+def _mamba_init(key, cfg, dtype):
+    d, h, pdim, n = cfg.d_model, cfg.n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    return {
+        "wxz": dense_init(ks[0], d, 2 * h * pdim, dtype),
+        "wbc": dense_init(ks[1], d, 2 * h * n, dtype),
+        "wdt": dense_init(ks[2], d, h, dtype, bias=True),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "dskip": jnp.ones((h,), jnp.float32),
+        "down": dense_init(ks[3], h * pdim, d, dtype),
+    }
+
+
+def _mamba_qkvf(p, cfg, xn):
+    """Shared projection math for scan/step. xn (B,S,d)."""
+    b, s, d = xn.shape
+    h, pdim, n = cfg.n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xz = dense(p["wxz"], xn).reshape(b, s, 2, h, pdim)
+    xin, z = xz[:, :, 0], xz[:, :, 1]
+    bc = dense(p["wbc"], xn).reshape(b, s, 2, h, n)
+    bt, ct = bc[:, :, 0], bc[:, :, 1]
+    dt = jax.nn.softplus(dense(p["wdt"], xn).astype(jnp.float32))  # (B,S,H)
+    log_f = -jnp.exp(p["a_log"])[None, None, :] * dt  # (B,S,H) <= 0
+    # to (B,H,S,*)
+    tr = lambda t: jnp.moveaxis(t, 2, 1)
+    return tr(ct), tr(bt), tr(xin), jnp.moveaxis(log_f, 2, 1), xin, z
+
+
+def mamba_apply(p, cfg, xn, chunk=64, return_state=False):
+    q, k, v, log_f, xin, z = _mamba_qkvf(p, cfg, xn)
+    res = gated_linear_scan(q, k, v, log_f, chunk=chunk, normalize=False,
+                            return_state=return_state)
+    hseq, state = res if return_state else (res, None)
+    hseq = jnp.moveaxis(hseq, 1, 2)  # (B,S,H,P) f32 from the scan
+    hseq = hseq + p["dskip"].astype(hseq.dtype)[None, None, :, None] * xin
+    out = hseq * jax.nn.silu(z)
+    b, s = xn.shape[:2]
+    y = dense(p["down"], out.reshape(b, s, -1)).astype(xn.dtype)
+    return (y, state) if return_state else y
+
+
+def mamba_step(p, cfg, xn, state):
+    """xn (B,1,d); state (C,n)."""
+    q, k, v, log_f, xin, z = _mamba_qkvf(p, cfg, xn)
+    hv, state = gated_linear_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                  log_f[:, :, 0], state, normalize=False)
+    hv = hv + p["dskip"].astype(hv.dtype)[None, :, None] * xin[:, 0]
+    out = (hv[:, None] * jax.nn.silu(z))
+    b = xn.shape[0]
+    return dense(p["down"], out.reshape(b, 1, -1)), state
+
+
+def hybrid_block_init(key, cfg, dtype):
+    ka, km, kf = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(ka, cfg, dtype),
+        "mamba": _mamba_init(km, cfg, dtype),
+        "beta": jnp.array([0.5, 0.5], jnp.float32),  # learnable fusion (Hymba)
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(kf, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def hybrid_block(p, cfg, x, positions):
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, _ = attend(p["attn"], cfg, xn, positions, causal=True)
+    m = mamba_apply(p["mamba"], cfg, xn)
+    beta = p["beta"].astype(x.dtype)
+    x = x + beta[0] * a + beta[1] * m
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + mlp(p["mlp"], h, cfg.act), jnp.zeros((), jnp.float32)
+
+
+def hybrid_block_decode(p, cfg, x, cache, index, positions=None):
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, kv = decode_attend(p["attn"], cfg, xn, cache["attn"], index, positions)
+    m, ssm = mamba_step(p["mamba"], cfg, xn, cache["ssm"])
+    beta = p["beta"].astype(x.dtype)
+    x = x + beta[0] * a + beta[1] * m
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + mlp(p["mlp"], h, cfg.act), {"attn": kv, "ssm": ssm}
+
+
+def hybrid_block_cache(cfg, batch, max_len, dtype):
+    h, pdim, n = cfg.n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "attn": init_kv_cache(cfg, batch, max_len, dtype),
+        "ssm": (jnp.zeros((batch, h, n, pdim), jnp.float32),
+                jnp.zeros((batch, h, n), jnp.float32)),
+    }
+
+
+# ------------------------------------------------------------ xlstm_pair ----
+
+def _mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    ed = cfg.ssm_expand * d
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": rmsnorm_init(d, dtype),
+        "up": dense_init(ks[0], d, 2 * ed, dtype),
+        "wq": dense_init(ks[1], ed, ed, dtype),
+        "wk": dense_init(ks[2], ed, ed, dtype),
+        "wv": dense_init(ks[3], ed, ed, dtype),
+        "wg": dense_init(ks[4], d, 2 * cfg.n_heads, dtype, bias=True),
+        "down": dense_init(ks[5], ed, d, dtype),
+    }
+
+
+def _mlstm_qkvf(p, cfg, xn):
+    b, s, d = xn.shape
+    h = cfg.n_heads
+    ed = cfg.ssm_expand * d
+    hd = ed // h
+    u = dense(p["up"], xn).reshape(b, s, 2, ed)
+    xin, z = u[:, :, 0], u[:, :, 1]
+    to_heads = lambda t: jnp.moveaxis(t.reshape(b, s, h, hd), 2, 1)
+    q = to_heads(dense(p["wq"], xin)) / jnp.sqrt(hd).astype(xn.dtype)
+    k = to_heads(dense(p["wk"], xin))
+    v = to_heads(dense(p["wv"], xin))
+    g = dense(p["wg"], xn).astype(jnp.float32).reshape(b, s, 2, h)
+    log_f = jax.nn.log_sigmoid(g[:, :, 0])  # (B,S,H)
+    i_gate = jax.nn.sigmoid(g[:, :, 1])
+    k = k * jnp.moveaxis(i_gate, 2, 1)[..., None].astype(k.dtype)
+    return q, k, v, jnp.moveaxis(log_f, 2, 1), z
+
+
+def mlstm_apply(p, cfg, x, chunk=64, return_state=False):
+    xn = rmsnorm(p["ln"], x, cfg.norm_eps)
+    q, k, v, log_f, z = _mlstm_qkvf(p, cfg, xn)
+    res = gated_linear_scan(q, k, v, log_f, chunk=chunk, normalize=True,
+                            return_state=return_state)
+    hseq, state = res if return_state else (res, None)
+    b, h, s, hd = hseq.shape
+    hseq = jnp.moveaxis(hseq, 1, 2).reshape(b, s, h * hd)  # f32 from the scan
+    y = x + dense(p["down"], hseq * jax.nn.silu(z)).astype(x.dtype)
+    return (y, state) if return_state else y
+
+
+def mlstm_step(p, cfg, x, state):
+    xn = rmsnorm(p["ln"], x, cfg.norm_eps)
+    q, k, v, log_f, z = _mlstm_qkvf(p, cfg, xn)
+    hv, state = gated_linear_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                  log_f[:, :, 0], state, normalize=True)
+    b = x.shape[0]
+    out = hv.reshape(b, 1, -1) * jax.nn.silu(z)
+    return x + dense(p["down"], out), state
+
+
+def xlstm_pair_init(key, cfg, dtype):
+    km, ks, kd = jax.random.split(key, 3)
+    return {
+        "mlstm": _mlstm_init(km, cfg, dtype),
+        "sln": rmsnorm_init(cfg.d_model, dtype),
+        "slstm": slstm_init(ks, cfg.d_model, cfg.n_heads, dtype),
+        "sdown": dense_init(kd, cfg.d_model, cfg.d_model, dtype),
+    }
+
+
+def xlstm_pair_block(p, cfg, x, positions):
+    del positions
+    x = mlstm_apply(p["mlstm"], cfg, x)
+    # NOTE §Perf A.5: running this scan inside shard_map(batch) kills the
+    # per-step weight-grad all-reduce but measured WORSE overall (memory
+    # term 2x from the region boundary materialization) — kept off.
+    h, _ = slstm_scan(p["slstm"], rmsnorm(p["sln"], x, cfg.norm_eps), cfg.n_heads)
+    return x + dense(p["sdown"], h).astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def xlstm_pair_decode(p, cfg, x, cache, index, positions=None):
+    del index, positions
+    x, mstate = mlstm_step(p["mlstm"], cfg, x, cache["m"])
+    h, sstate = slstm_step(p["slstm"], rmsnorm(p["sln"], x, cfg.norm_eps)[:, 0],
+                           cfg.n_heads, cache["s"])
+    x = x + dense(p["sdown"], h[:, None]).astype(x.dtype)
+    return x, {"m": mstate, "s": sstate}
+
+
+def xlstm_pair_cache(cfg, batch, max_len, dtype):
+    del max_len, dtype
+    d, h = cfg.d_model, cfg.n_heads
+    ed = cfg.ssm_expand * d
+    hd_m = ed // h
+    hd_s = d // h
+    zero_s = jnp.zeros((batch, h, hd_s), jnp.float32)
+    return {
+        "m": (jnp.zeros((batch, h, hd_m, hd_m), jnp.float32),
+              jnp.zeros((batch, h, hd_m), jnp.float32)),
+        "s": (zero_s, zero_s, zero_s - 1e30, zero_s),
+    }
+
+
+# ---------------------------------------------------------------- encdec ----
+
+def enc_block_init(key, cfg, dtype):
+    return attn_block_init(key, cfg, dtype)
+
+
+def enc_block(p, cfg, x, positions):
+    return attn_block(p, cfg, x, positions, causal=False)
+
+
+def dec_block_init(key, cfg, dtype):
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(ka, cfg, dtype),
+        "lnx": rmsnorm_init(cfg.d_model, dtype),
+        "cross": attn_init(kc, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def dec_block(p, cfg, x, enc_out, positions):
+    a, _ = attend(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps), positions, causal=True)
+    x = x + a
+    c, cross_kv = attend(p["cross"], cfg, rmsnorm(p["lnx"], x, cfg.norm_eps), None,
+                         causal=False, kv_x=enc_out)
+    x = x + c
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + mlp(p["mlp"], h, cfg.act), cross_kv
+
+
+def dec_block_decode(p, cfg, x, cache, index):
+    a, kv = decode_attend(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                          cache["self"], index)
+    x = x + a
+    c = decode_cross_attend(p["cross"], cfg, rmsnorm(p["lnx"], x, cfg.norm_eps),
+                            cache["cross"])
+    x = x + c
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + mlp(p["mlp"], h, cfg.act), {"self": kv, "cross": cache["cross"]}
+
+
+# --------------------------------------------------------------- prefill ----
+# Prefill variants run the full-sequence math AND return a decode-ready
+# cache (ring-buffer KV for attention, final recurrent states for SSM).
+
+def _kv_to_ring(cfg, k_raw, v_raw, max_len, dtype):
+    """Pack full-sequence (B,S,Hkv,hd) K/V into a ring buffer cache."""
+    b, s = k_raw.shape[:2]
+    length = min(max_len, cfg.window) if cfg.attn_kind == "sliding" else max_len
+    if s >= length:
+        # keep the last `length` entries; ring slot of absolute pos p is p%length
+        tail_k, tail_v = k_raw[:, s - length:], v_raw[:, s - length:]
+        start = (s - length) % length
+        roll = jnp.mod(jnp.arange(length) - start, length)
+        inv = jnp.argsort(roll)
+        k_buf = jnp.take(tail_k, inv, axis=1)
+        v_buf = jnp.take(tail_v, inv, axis=1)
+    else:
+        pad = length - s
+        k_buf = jnp.pad(k_raw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_buf = jnp.pad(v_raw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return {"k": k_buf.astype(dtype), "v": v_buf.astype(dtype)}
+
+
+def attn_block_prefill(p, cfg, x, positions, max_len, cache_dtype):
+    a, (k_raw, v_raw) = attend(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                               positions, causal=True)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        m, _ = moe_apply(p["moe"], cfg, h)
+    else:
+        m = mlp(p["mlp"], h, cfg.act)
+    return x + m, _kv_to_ring(cfg, k_raw, v_raw, max_len, cache_dtype)
+
+
+def hybrid_block_prefill(p, cfg, x, positions, max_len, cache_dtype):
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, (k_raw, v_raw) = attend(p["attn"], cfg, xn, positions, causal=True)
+    m, ssm = mamba_apply(p["mamba"], cfg, xn, return_state=True)
+    beta = p["beta"].astype(x.dtype)
+    x = x + beta[0] * a + beta[1] * m
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    cache = {"attn": _kv_to_ring(cfg, k_raw, v_raw, max_len, cache_dtype), "ssm": ssm}
+    return x + mlp(p["mlp"], h, cfg.act), cache
+
+
+def xlstm_pair_prefill(p, cfg, x, positions, max_len, cache_dtype):
+    del positions, max_len, cache_dtype
+    x, mstate = mlstm_apply(p["mlstm"], cfg, x, return_state=True)
+    h, sstate = slstm_scan(p["slstm"], rmsnorm(p["sln"], x, cfg.norm_eps),
+                           cfg.n_heads)
+    return x + dense(p["sdown"], h).astype(x.dtype), {"m": mstate, "s": sstate}
+
+
+def dec_block_prefill(p, cfg, x, enc_out, positions, max_len, cache_dtype):
+    a, (k_raw, v_raw) = attend(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                               positions, causal=True)
+    x = x + a
+    c, cross_kv = attend(p["cross"], cfg, rmsnorm(p["lnx"], x, cfg.norm_eps), None,
+                         causal=False, kv_x=enc_out)
+    x = x + c
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    cache = {
+        "self": _kv_to_ring(cfg, k_raw, v_raw, max_len, cache_dtype),
+        "cross": (cross_kv[0].astype(cache_dtype), cross_kv[1].astype(cache_dtype)),
+    }
+    return x + mlp(p["mlp"], h, cfg.act), cache

@@ -1,0 +1,68 @@
+"""Core functional layers: linear / norm / embedding / activations.
+
+Params are plain nested dicts of jnp arrays; every module is an
+(init, apply) pair of pure functions so that layers stack under
+``jax.vmap`` (stacked-layer init) and ``jax.lax.scan`` (layer loop).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p, tokens, compute_dtype):
+    return jnp.take(p["table"], tokens, axis=0).astype(compute_dtype)
+
+
+def activation(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # squared ReLU (nemotron-4)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "silu":
+        return jax.nn.silu
+    raise ValueError(name)
+
+
+def softmax_cross_entropy(logits, labels):
+    """logits (..., V) fp32 accumulate; labels int (...,). Returns (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - picked
+
+
+def sigmoid_bce(logits, targets):
+    logits = logits.astype(jnp.float32)
+    targets = targets.astype(jnp.float32)
+    return jnp.maximum(logits, 0) - logits * targets + jnp.log1p(jnp.exp(-jnp.abs(logits)))

@@ -1,0 +1,23 @@
+"""Modality frontends — STUBS per the assignment carve-out.
+
+The audio (mel-spectrogram + conv codec) and vision (ViT/SigLIP) feature
+extractors are NOT implemented; ``input_specs`` feeds precomputed frame /
+patch embeddings of the right shape, and these projectors map them into the
+backbone's d_model. This is the single allowed stub.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.common import dense, dense_init
+
+
+def frontend_init(key, cfg, dtype):
+    if cfg.frontend == "none":
+        return {}
+    return {"proj": dense_init(key, cfg.frontend_dim, cfg.d_model, dtype, bias=True)}
+
+
+def frontend_apply(p, cfg, feats, compute_dtype):
+    """feats: (B, S, frontend_dim) frame/patch embeddings -> (B, S, d_model)."""
+    return dense(p["proj"], feats.astype(compute_dtype))

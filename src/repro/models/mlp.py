@@ -1,0 +1,25 @@
+"""Feed-forward blocks: SwiGLU / GELU / squared-ReLU."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.common import activation, dense, dense_init
+
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(k1, d, d_ff, dtype),
+        "down": dense_init(k2, d_ff, d, dtype),
+    }
+    if act == "swiglu":
+        p["gate"] = dense_init(k3, d, d_ff, dtype)
+    return p
+
+
+def mlp(p, x, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    else:
+        h = activation(act)(dense(p["up"], x))
+    return dense(p["down"], h)

@@ -1,0 +1,241 @@
+"""Recurrent sequence-mixing primitives.
+
+``gated_linear_scan`` is the single chunkwise-parallel primitive behind both
+the mLSTM cell (xlstm-350m) and the Mamba-2-style SSD heads (hymba-1.5b):
+
+    C_t = exp(lf_t) * C_{t-1} + k_t v_t^T          (state  (dk, dv))
+    n_t = exp(lf_t) * n_{t-1} + k_t                (normalizer, optional)
+    h_t = q_t @ C_t   [ / max(|q_t . n_t|, 1) ]
+
+computed chunk-parallel: intra-chunk attention-like term + inter-chunk state
+carried by ``lax.scan``. This is the TPU-friendly form (MXU matmuls per
+chunk instead of a length-S elementwise recurrence); the Pallas kernel in
+``repro.kernels.mlstm_scan`` implements the same schedule with explicit VMEM
+tiling and is validated against the sequential reference.
+
+Numerical simplifications vs. Beck et al. (documented in DESIGN.md):
+input gate uses sigmoid rather than stabilized-exp gating; the chunkwise
+decay math is exact given the gates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, dense_init
+
+
+def gated_linear_scan(q, k, v, log_f, *, chunk: int = 64, normalize: bool = True,
+                      initial_state=None, return_state: bool = False):
+    """q,k: (B,H,S,dk); v: (B,H,S,dv); log_f: (B,H,S) per-step log decay <= 0.
+
+    Returns h (B,H,S,dv) (and final (C, n) if return_state).
+    """
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    orig_s = s
+    if s % chunk:
+        pad = chunk - s % chunk
+        zq = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 3))
+        q, k, v = zq(q), zq(k), zq(v)
+        log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+        s = q.shape[2]
+    nc = s // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, h, nc, chunk, *x.shape[3:])
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lfc = log_f.reshape(b, h, nc, chunk).astype(jnp.float32)
+    d_in = jnp.cumsum(lfc, axis=-1)  # inclusive in-chunk cumulative decay
+    d_total = d_in[..., -1]  # (B,H,nc)
+
+    # intra-chunk: S_ij = (q_i . k_j) * exp(d_i - d_j) for j <= i
+    decay_qk = d_in[..., :, None] - d_in[..., None, :]  # (B,H,nc,L,L)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay_qk = jnp.where(tri, decay_qk, -jnp.inf)
+    scores = jnp.einsum("bhcik,bhcjk->bhcij", qc.astype(jnp.float32), kc.astype(jnp.float32))
+    scores = scores * jnp.exp(decay_qk)
+    intra = jnp.einsum("bhcij,bhcjv->bhciv", scores, vc.astype(jnp.float32))
+    # normalizer intra term: sum_j scores_ij  (scores already contain q.k)
+    intra_n = scores.sum(axis=-1)  # (B,H,nc,L)
+
+    # per-chunk state contributions: sum_j exp(D - d_j) k_j v_j^T
+    w_state = jnp.exp(d_total[..., None] - d_in)  # (B,H,nc,L)
+    kv_chunk = jnp.einsum("bhcj,bhcjk,bhcjv->bhckv", w_state, kc.astype(jnp.float32),
+                          vc.astype(jnp.float32))
+    kn_chunk = jnp.einsum("bhcj,bhcjk->bhck", w_state, kc.astype(jnp.float32))
+
+    if initial_state is None:
+        c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+    else:
+        c0, n0 = initial_state
+
+    def step(carry, xs):
+        c_prev, n_prev = carry
+        q_i, d_i, dt_i, kv_i, kn_i, intra_i, intra_n_i = xs
+        # inter-chunk contribution
+        w = jnp.exp(d_i)[..., None]  # (B,H,L,1)
+        inter = jnp.einsum("bhlk,bhkv->bhlv", q_i.astype(jnp.float32) * w, c_prev)
+        inter_n = jnp.einsum("bhlk,bhk->bhl", q_i.astype(jnp.float32) * w, n_prev)
+        h_i = intra_i + inter
+        if normalize:  # fused into the chunk step: avoids stacking a
+            # separate (S,) normalizer output across the scan
+            n_i = intra_n_i + inter_n
+            h_i = h_i / jnp.maximum(jnp.abs(n_i), 1.0)[..., None]
+        # state update. NOTE: h_i stays f32 — emitting scan outputs in a
+        # dtype other than the loop's compute dtype makes XLA convert the
+        # WHOLE stacked buffer every iteration (measured: +3x HBM bytes).
+        decay_tot = jnp.exp(dt_i)[..., None, None]
+        c_new = decay_tot * c_prev + kv_i
+        n_new = jnp.exp(dt_i)[..., None] * n_prev + kn_i
+        return (c_new, n_new), h_i
+
+    xs = (
+        jnp.moveaxis(qc, 2, 0),
+        jnp.moveaxis(d_in, 2, 0),
+        jnp.moveaxis(d_total, 2, 0),
+        jnp.moveaxis(kv_chunk, 2, 0),
+        jnp.moveaxis(kn_chunk, 2, 0),
+        jnp.moveaxis(intra, 2, 0),
+        jnp.moveaxis(intra_n, 2, 0),
+    )
+    (c_fin, n_fin), hs = jax.lax.scan(step, (c0, n0), xs)
+    hs = jnp.moveaxis(hs, 0, 2).reshape(b, h, s, dv)
+    # returned in f32 (the scan's compute dtype): casting the stacked scan
+    # output here makes XLA re-convert the whole buffer per iteration —
+    # callers cast after their next projection instead
+    hs = hs[:, :, :orig_s]
+    if return_state:
+        return hs, (c_fin, n_fin)
+    return hs
+
+
+def gated_linear_step(q, k, v, log_f, state, *, normalize: bool = True):
+    """Single-token decode. q,k (B,H,dk); v (B,H,dv); log_f (B,H).
+    state = (C (B,H,dk,dv), n (B,H,dk)). Returns (h (B,H,dv), new_state)."""
+    c, n = state
+    decay = jnp.exp(log_f.astype(jnp.float32))[..., None, None]
+    c = decay * c + jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    n = decay[..., 0] * n + k.astype(jnp.float32)
+    h = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), c)
+    if normalize:
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), n)), 1.0)
+        h = h / denom[..., None]
+    return h.astype(v.dtype), (c, n)
+
+
+def gated_linear_scan_ref(q, k, v, log_f, *, normalize: bool = True, initial_state=None):
+    """Sequential oracle (lax.scan over time) — used by kernel/chunkwise tests."""
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    if initial_state is None:
+        c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+    else:
+        c0, n0 = initial_state
+
+    def step(carry, xs):
+        qt, kt, vt, ft = xs
+        ht, carry = gated_linear_step(qt, kt, vt, ft, carry, normalize=normalize)
+        return carry, ht
+
+    xs = (jnp.moveaxis(q, 2, 0), jnp.moveaxis(k, 2, 0), jnp.moveaxis(v, 2, 0),
+          jnp.moveaxis(log_f, 2, 0))
+    _, hs = jax.lax.scan(step, (c0, n0), xs)
+    return jnp.moveaxis(hs, 0, 2)
+
+
+# ------------------------------------------------------------------ sLSTM ----
+
+def slstm_init(key, d: int, n_heads: int, dtype):
+    hd = d // n_heads
+    ks = jax.random.split(key, 3)
+    scale = 1.0 / jnp.sqrt(d)
+    rscale = 1.0 / jnp.sqrt(hd)
+    return {
+        "wx": (jax.random.normal(ks[0], (d, 4 * d)) * scale).astype(dtype),  # z,i,f,o
+        "r": (jax.random.normal(ks[1], (n_heads, hd, 4 * hd)) * rscale).astype(dtype),
+        "b": jnp.zeros((4 * d,), dtype),
+    }
+
+
+def slstm_scan(p, x, n_heads: int, initial_state=None, shard_axes=()):
+    """Stabilized sLSTM over time (true recurrence -> lax.scan).
+
+    x: (B, S, d). Returns (h (B,S,d), final_state).
+    State per head: c, n, m, h_prev each (B, H, hd).
+
+    shard_axes: mesh axes the batch dim is sharded over. When set, the
+    time-scan runs inside ``jax.shard_map``: under plain jit+GSPMD the
+    recurrent-weight gradient accumulation crosses the batch sharding and
+    XLA emits an all-reduce EVERY time step (measured ~50% of xlstm's
+    collective bytes); inside shard_map the loop is collective-free and
+    the single weight-grad psum is inserted at exit by the transpose.
+    Only the scan goes inside — the projections stay under GSPMD tensor
+    parallelism.
+    """
+    b, s, d = x.shape
+    hd = d // n_heads
+    # pre-activations in f32 BEFORE entering the scan: the scan's compute
+    # dtype is f32, and mixing dtypes across the loop boundary makes the
+    # backward pass round-trip its whole cotangent stack through converts
+    # EVERY time step (measured 63% of the arch's HBM bytes)
+    pre_x = (x @ p["wx"].astype(x.dtype) + p["b"].astype(x.dtype)).astype(jnp.float32)
+    pre_x = pre_x.reshape(b, s, 4, n_heads, hd)
+
+    if initial_state is None:
+        zero = jnp.zeros((b, n_heads, hd), jnp.float32)
+        state0 = (zero, zero, zero - 1e30, zero)  # c, n, m, h_prev
+    else:
+        state0 = initial_state
+
+    r = p["r"].astype(jnp.float32)  # (H, hd, 4hd)
+
+    def core(r_, pre_x_, state0_):
+        bl = pre_x_.shape[0]
+
+        def step(carry, pre_t):
+            c, n, m, h_prev = carry
+            rec = jnp.einsum("bhi,hij->bhj", h_prev, r_).reshape(bl, n_heads, 4, hd)
+            rec = jnp.moveaxis(rec, 2, 0)
+            pre = pre_t.astype(jnp.float32)  # (4, B, H, hd) after moveaxis below
+            z = jnp.tanh(pre[0] + rec[0])
+            log_i = pre[1] + rec[1]
+            log_f = jax.nn.log_sigmoid(pre[2] + rec[2])
+            o = jax.nn.sigmoid(pre[3] + rec[3])
+            m_new = jnp.maximum(log_f + m, log_i)
+            i_g = jnp.exp(log_i - m_new)
+            f_g = jnp.exp(log_f + m - m_new)
+            c_new = f_g * c + i_g * z
+            n_new = f_g * n + i_g
+            h = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+            # h stacked in f32 (the loop's compute dtype)
+            return (c_new, n_new, m_new, h), h
+
+        xs = jnp.moveaxis(pre_x_, 1, 0)  # (S, B, 4, H, hd)
+        xs = jnp.moveaxis(xs, 2, 1)  # (S, 4, B, H, hd)
+        final_, hs_ = jax.lax.scan(step, state0_, xs)
+        return jnp.moveaxis(hs_, 0, 1), final_  # hs (B,S,d') f32
+
+    if shard_axes:
+        from jax.sharding import PartitionSpec as P
+
+        dp = tuple(shard_axes)
+        bspec = lambda a: P(dp, *([None] * (a.ndim - 1)))
+        in_specs = (P(), bspec(pre_x), tuple(bspec(t) for t in state0))
+        out_specs = (P(dp, None, None, None), tuple(bspec(t) for t in state0))
+        hs, final = jax.shard_map(core, in_specs=in_specs, out_specs=out_specs,
+                                  check_vma=False)(r, pre_x, state0)
+    else:
+        hs, final = core(r, pre_x, state0)
+    # f32 out (the scan's compute dtype); callers cast after projecting
+    hs = hs.reshape(b, s, d)
+    return hs, final
+
+
+def slstm_step(p, x_t, n_heads: int, state):
+    """Single-token sLSTM decode; x_t (B, d)."""
+    h, final = slstm_scan(p, x_t[:, None, :], n_heads, initial_state=state)
+    return h[:, 0], final

@@ -1,0 +1,59 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE [arXiv:2409.12191] splits the head_dim/2 frequency slots into
+(temporal, height, width) sections; text tokens use identical t=h=w
+positions (reducing to 1-D RoPE), vision patches use their (t, h, w) grid
+coordinates.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions, head_dim: int, theta: float, sections=None):
+    """positions: (..., S) int or (..., S, 3) for M-RoPE. Returns (..., S, head_dim/2)."""
+    inv = _freqs(head_dim, theta)  # (half,)
+    if positions.ndim >= 2 and positions.shape[-1] == 3 and sections is not None:
+        # M-RoPE: slot j uses the section's coordinate
+        sec = []
+        for i, s in enumerate(sections):
+            sec.append(jnp.full((s,), i, dtype=jnp.int32))
+        sec_id = jnp.concatenate(sec)  # (half,) in {0:t, 1:h, 2:w}
+        pos = positions[..., sec_id]  # (..., S, half)
+        return pos.astype(jnp.float32) * inv
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def apply_rope(x, angles):
+    """x: (B, S, H, hd); angles: (B, S, hd/2) -> rotated x (rotate-half form)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)  # (B,S,1,half)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def text_positions(batch: int, seq: int, offset=0):
+    """1-D positions (B, S)."""
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None, :] + offset, (batch, seq))
+
+
+def mrope_positions(batch: int, n_vision: int, n_text: int, grid: int | None = None):
+    """(B, S, 3) positions: vision patches on an h×w grid at t=0, then text."""
+    if grid is None:
+        grid = max(int(n_vision**0.5), 1)
+    if n_vision:
+        idx = jnp.arange(n_vision, dtype=jnp.int32)
+        vis = jnp.stack([jnp.zeros_like(idx), idx // grid, idx % grid], axis=-1)
+    else:
+        vis = jnp.zeros((0, 3), jnp.int32)
+    t0 = (n_vision and (grid + 1)) or 0
+    tpos = jnp.arange(n_text, dtype=jnp.int32) + t0
+    txt = jnp.stack([tpos, tpos, tpos], axis=-1)
+    pos = jnp.concatenate([vis, txt], axis=0)
+    return jnp.broadcast_to(pos[None], (batch, n_vision + n_text, 3))

@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    sgd,
+    apply_updates,
+    global_norm_clip,
+)
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "apply_updates",
+    "global_norm_clip",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+]

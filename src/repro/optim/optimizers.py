@@ -1,0 +1,98 @@
+"""Minimal functional optimizers (AdamW, SGD) — no optax dependency.
+
+An ``Optimizer`` is a pair of pure functions:
+    init(params)                  -> opt_state
+    update(grads, state, params)  -> (updates, new_state)
+``apply_updates(params, updates)`` adds the updates to the params.
+
+Optimizer states are pytrees, so they shard with the params under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm_clip(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw(
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    """AdamW with decoupled weight decay. ``lr`` may be a schedule fn(step)."""
+
+    def init(params):
+        return {
+            "step": jnp.zeros([], jnp.int32),
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(state_dtype), state["mu"], grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(state_dtype)),
+            state["nu"],
+            grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            return -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(state_dtype))
+
+        updates = jax.tree.map(u, mu, nu, params)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: float | Callable, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros([], jnp.int32)}
+        return {
+            "step": jnp.zeros([], jnp.int32),
+            "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        del params
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr_t * g, grads), {"step": step}
+        mom = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mom"], grads
+        )
+        return jax.tree.map(lambda m: -lr_t * m, mom), {"step": step, "mom": mom}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,156 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes, per the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.blendavg.blendavg import blend_params_pallas
+from repro.kernels.blendavg.ref import blend_params_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.mlstm_scan.mlstm_scan import mlstm_scan_pallas
+from repro.kernels.mlstm_scan.ref import mlstm_scan_ref
+
+
+# ------------------------------------------------------- flash attention ----
+
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d", [
+    (1, 4, 4, 64, 64, 32),    # MHA square
+    (2, 8, 2, 128, 128, 64),  # GQA 4x
+    (1, 6, 2, 96, 96, 32),    # non-pow2 heads
+    (2, 4, 1, 64, 192, 32),   # MQA, decode-style suffix queries
+    (1, 4, 4, 40, 72, 16),    # ragged (padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_vs_ref(b, hq, hkv, sq, sk, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d), dtype)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=32, block_k=32,
+                                 interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [8, 32, 127])
+def test_flash_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+    out = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=32, block_k=32, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 4, 64, 32))
+    k = jax.random.normal(ks[1], (2, 4, 64, 32))
+    v = jax.random.normal(ks[2], (2, 4, 64, 32))
+    out = flash_attention_pallas(q, k, v, causal=False, block_q=32, block_k=32,
+                                 interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------- blendavg ----
+
+@pytest.mark.parametrize("l,n,block", [(3, 1000, 256), (5, 2048, 2048),
+                                       (2, 33, 16), (7, 4097, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_blendavg_vs_ref(l, n, block, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    stacked = jax.random.normal(ks[0], (l, n), dtype)
+    omega = jax.nn.softmax(jax.random.normal(ks[1], (l,)))
+    out = blend_params_pallas(stacked, omega, block_n=block, interpret=True)
+    ref = blend_params_ref(stacked, omega)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_blendavg_masked_weights_drop_models():
+    """omega=0 rows must not contribute (discarded models, Eq. 10)."""
+    stacked = jnp.stack([jnp.ones(64), 100.0 * jnp.ones(64), 3.0 * jnp.ones(64)])
+    omega = jnp.array([0.5, 0.0, 0.5])
+    out = blend_params_pallas(stacked, omega, block_n=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 2.0 * np.ones(64), rtol=1e-6)
+
+
+# ------------------------------------------------------------- mlstm scan ----
+
+@pytest.mark.parametrize("b,h,s,dk,dv,chunk", [
+    (1, 2, 64, 16, 16, 16),
+    (2, 3, 100, 32, 16, 32),   # ragged length
+    (1, 1, 128, 64, 64, 128),  # single chunk
+])
+@pytest.mark.parametrize("normalize", [True, False])
+def test_mlstm_scan_vs_sequential_ref(b, h, s, dk, dv, chunk, normalize):
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    q = jax.random.normal(ks[0], (b, h, s, dk))
+    k = jax.random.normal(ks[1], (b, h, s, dk)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, s, dv))
+    log_f = -jnp.abs(jax.random.normal(ks[3], (b, h, s))) * 0.2
+    out = mlstm_scan_pallas(q, k, v, log_f, chunk=chunk, normalize=normalize,
+                            interpret=True)
+    ref = mlstm_scan_ref(q, k, v, log_f, normalize=normalize)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-4, rtol=5e-3)
+
+
+def test_chunked_scan_matches_chunk_free():
+    """Chunk size must not change the math (associativity of the scan)."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    q = jax.random.normal(ks[0], (1, 2, 96, 16))
+    k = jax.random.normal(ks[1], (1, 2, 96, 16))
+    v = jax.random.normal(ks[2], (1, 2, 96, 16))
+    lf = -jnp.abs(jax.random.normal(ks[3], (1, 2, 96))) * 0.1
+    outs = [np.asarray(mlstm_scan_pallas(q, k, v, lf, chunk=c, interpret=True))
+            for c in (16, 32, 96)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4, rtol=1e-4)
+
+
+# -------------------------------------------------------------- slstm cell ----
+
+@pytest.mark.parametrize("b,h,s,hd,chunk", [
+    (1, 2, 32, 16, 16),
+    (2, 4, 50, 8, 32),    # ragged length (padding path)
+    (1, 1, 64, 32, 64),   # single chunk
+])
+def test_slstm_cell_vs_ref(b, h, s, hd, chunk):
+    from repro.kernels.slstm_cell.ref import slstm_cell_ref
+    from repro.kernels.slstm_cell.slstm_cell import slstm_cell_pallas
+
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    pre = jax.random.normal(ks[0], (b, h, s, 4, hd)) * 0.5
+    r = jax.random.normal(ks[1], (h, hd, 4 * hd)) / np.sqrt(hd)
+    out = slstm_cell_pallas(pre, r, chunk=chunk, interpret=True)
+    ref = slstm_cell_ref(pre, r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_slstm_cell_matches_model_cell():
+    """The fused kernel implements the same recurrence as the model's
+    slstm_scan (given the same pre-activations and weights)."""
+    from repro.kernels.slstm_cell.ref import slstm_cell_ref
+    from repro.models.recurrent import slstm_init, slstm_scan
+
+    d, n_heads = 32, 4
+    hd = d // n_heads
+    p = slstm_init(jax.random.PRNGKey(0), d, n_heads, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, d))
+    want, _ = slstm_scan(p, x, n_heads)  # (B, S, d)
+
+    pre = (x @ p["wx"] + p["b"]).reshape(2, 12, 4, n_heads, hd)
+    pre = pre.transpose(0, 3, 1, 2, 4)  # (B, H, S, 4, hd)
+    got = slstm_cell_ref(pre, p["r"])  # (B, H, S, hd)
+    got = got.transpose(0, 2, 1, 3).reshape(2, 12, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-4)
