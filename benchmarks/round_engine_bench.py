@@ -1,0 +1,181 @@
+"""§Round engine: legacy per-client loop vs the stacked engine.
+
+Measures, at C ∈ {3, 8, 16} clients:
+  - wall-clock per ``blendfl_round`` (training phases 1-3; aggregation is
+    identical between the two drivers and host-metric bound),
+  - jit compile-cache growth for the unimodal step: the legacy loop keys a
+    cache entry per (modality, batch shape) and re-dispatches per client
+    per batch; the engine compiles ONE program per phase (clients are a
+    stacked axis, batches a lax.scan) and syncs one scalar per phase.
+
+Emits a ``BENCH_round_engine.json`` record next to the other results.
+
+    PYTHONPATH=src python -m benchmarks.round_engine_bench [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _legacy_training_round(models, server_gmv, clients, ecfg, kind, lr, bs, rng):
+    """The seed repo's phases 1-3: Python loops, per-client jit dispatches,
+    per-batch float(loss) host syncs. Reconstructed from the per-client
+    steps the baselines still use."""
+    from repro.core import vfl
+    from repro.core.baselines import (
+        _client_bwd_update,
+        _client_fwd,
+        _paired_sgd_step,
+        _server_fwd_bwd,
+        _unimodal_sgd_step,
+    )
+
+    losses = []
+    for k, cd in enumerate(clients):
+        for mod, view in (("A", cd.all_a()), ("B", cd.all_b())):
+            if len(view) == 0:
+                continue
+            f, g = models[k][f"f_{mod}"], models[k][f"g_{mod}"]
+            idx = rng.permutation(len(view))
+            for i in range(0, len(idx), bs):
+                sel = idx[i : i + bs]
+                f, g, loss = _unimodal_sgd_step(
+                    f, g, jnp.asarray(view.x[sel]), jnp.asarray(view.y[sel]),
+                    ecfg=ecfg, kind=kind, lr=lr, modality=mod)
+                losses.append(float(loss))  # the legacy per-batch host sync
+            models[k][f"f_{mod}"], models[k][f"g_{mod}"] = f, g
+
+    for batch in vfl.build_vfl_batches(clients, 10**9, rng):
+        x_a, x_b = jnp.asarray(batch.x_a), jnp.asarray(batch.x_b)
+        n = len(batch.y)
+        h_a = jnp.zeros((n, ecfg.d_hidden), jnp.float32)
+        h_b = jnp.zeros((n, ecfg.d_hidden), jnp.float32)
+        for k in range(len(clients)):
+            ra = np.nonzero(batch.owner_a == k)[0]
+            rb = np.nonzero(batch.owner_b == k)[0]
+            if len(ra):
+                h_a = h_a.at[ra].set(_client_fwd(models[k]["f_A"], x_a[ra], ecfg=ecfg))
+            if len(rb):
+                h_b = h_b.at[rb].set(_client_fwd(models[k]["f_B"], x_b[rb], ecfg=ecfg))
+        loss, g_srv, g_ha, g_hb = _server_fwd_bwd(
+            server_gmv, h_a, h_b, jnp.asarray(batch.y), kind=kind)
+        server_gmv = jax.tree.map(lambda p, g: p - lr * g, server_gmv, g_srv)
+        for k in range(len(clients)):
+            ra = np.nonzero(batch.owner_a == k)[0]
+            rb = np.nonzero(batch.owner_b == k)[0]
+            if len(ra):
+                models[k]["f_A"] = _client_bwd_update(
+                    models[k]["f_A"], x_a[ra], g_ha[ra], ecfg=ecfg, lr=lr)
+            if len(rb):
+                models[k]["f_B"] = _client_bwd_update(
+                    models[k]["f_B"], x_b[rb], g_hb[rb], ecfg=ecfg, lr=lr)
+        losses.append(float(loss))
+
+    for k, cd in enumerate(clients):
+        if not cd.has_paired:
+            continue
+        m = models[k]
+        idx = rng.permutation(len(cd.paired_a))
+        for i in range(0, len(idx), bs):
+            sel = idx[i : i + bs]
+            m["f_A"], m["f_B"], m["g_M"], loss = _paired_sgd_step(
+                m["f_A"], m["f_B"], m["g_M"],
+                jnp.asarray(cd.paired_a.x[sel]), jnp.asarray(cd.paired_b.x[sel]),
+                jnp.asarray(cd.paired_a.y[sel]), ecfg=ecfg, kind=kind, lr=lr)
+            losses.append(float(loss))
+    return models, server_gmv, losses
+
+
+def _bench_one(n_clients: int, quick: bool) -> dict:
+    from repro.core.baselines import _unimodal_sgd_step
+    from repro.core.encoders import EncoderConfig, init_client_models
+    from repro.core.federation import FedConfig, Federation
+    from repro.core.partitioner import partition
+    from repro.data.synthetic import make_task, train_val_test
+
+    spec = make_task("smnist")
+    n_train = 600 if quick else 1500
+    tr, va, _ = train_val_test(spec, n_train, 200, 100, seed=0)
+    clients = partition(tr, n_clients, seed=1)
+    ecfg = EncoderConfig(d_hidden=48, n_layers=2, enc_type="mlp")
+    cfg = FedConfig(n_clients=n_clients, rounds=3, lr=1e-2, batch_size=64, seed=0)
+    reps = 2 if quick else 4
+
+    # ---- stacked engine ----
+    fed = Federation.init(jax.random.PRNGKey(0), cfg, spec, ecfg, clients, va)
+
+    def engine_round():
+        fed._unimodal_phase()
+        fed._vfl_phase()
+        fed._paired_phase()
+
+    engine_round()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        engine_round()
+    t_engine = (time.perf_counter() - t0) / reps
+    engine_cache = int(fed.engine.unimodal_phase._cache_size())
+
+    # ---- legacy per-client loop ----
+    _unimodal_sgd_step._clear_cache()
+    base = init_client_models(jax.random.PRNGKey(0), spec, ecfg)
+    models = [jax.tree.map(jnp.copy, base) for _ in clients]
+    gmv = jax.tree.map(jnp.copy, base["g_M"])
+    rng = np.random.default_rng(0)
+    models, gmv, _ = _legacy_training_round(
+        models, gmv, clients, ecfg, spec.kind, cfg.lr, cfg.batch_size, rng)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        models, gmv, _ = _legacy_training_round(
+            models, gmv, clients, ecfg, spec.kind, cfg.lr, cfg.batch_size, rng)
+    t_legacy = (time.perf_counter() - t0) / reps
+    legacy_cache = int(_unimodal_sgd_step._cache_size())
+
+    return {
+        "n_clients": n_clients,
+        "s_per_round_engine": round(t_engine, 4),
+        "s_per_round_legacy": round(t_legacy, 4),
+        "speedup": round(t_legacy / max(t_engine, 1e-9), 2),
+        "unimodal_compile_cache_engine": engine_cache,
+        "unimodal_compile_cache_legacy": legacy_cache,
+    }
+
+
+def main(quick: bool = False) -> None:
+    print("\n=== round engine: stacked phases vs legacy per-client loop ===")
+    sizes = (3, 8) if quick else (3, 8, 16)
+    records = []
+    hdr = (f"{'C':>3s} {'engine_s':>9s} {'legacy_s':>9s} {'speedup':>8s} "
+           f"{'cache_eng':>9s} {'cache_leg':>9s}")
+    print(hdr)
+    for c in sizes:
+        r = _bench_one(c, quick)
+        records.append(r)
+        print(f"{r['n_clients']:3d} {r['s_per_round_engine']:9.3f} "
+              f"{r['s_per_round_legacy']:9.3f} {r['speedup']:8.2f} "
+              f"{r['unimodal_compile_cache_engine']:9d} "
+              f"{r['unimodal_compile_cache_legacy']:9d}")
+        assert r["unimodal_compile_cache_engine"] == 1, \
+            "engine must compile the unimodal phase exactly once"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out = os.path.join(RESULTS_DIR, "BENCH_round_engine.json")
+    with open(out, "w") as f:
+        json.dump({"bench": "round_engine", "backend": jax.default_backend(),
+                   "records": records}, f, indent=2)
+    print(f"--> one compiled program per phase regardless of C; wrote {out}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

@@ -46,18 +46,20 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=["tables", "convergence", "ablations", "kernels",
-                             "roofline", "inference"])
+                             "roofline", "inference", "round_engine"])
     args = ap.parse_args()
     t0 = time.time()
 
     sections = {}
-    from benchmarks import ablations, convergence, kernels_bench, roofline_report, tables
+    from benchmarks import (ablations, convergence, kernels_bench,
+                            roofline_report, round_engine_bench, tables)
     sections["tables"] = tables.main
     sections["convergence"] = convergence.main
     sections["ablations"] = ablations.main
     sections["kernels"] = kernels_bench.main
     sections["roofline"] = roofline_report.main
     sections["inference"] = run_inference_bench
+    sections["round_engine"] = round_engine_bench.main
 
     todo = [args.only] if args.only else list(sections)
     for name in todo:

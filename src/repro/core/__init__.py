@@ -4,19 +4,25 @@
     encoders      per-modality f_m, unimodal g_m, fusion g_M
     vfl           split training on fragmented data (Alg. 1 lines 9-23)
     blendavg      performance-weighted aggregation (Eq. 9-11)
-    federation    Algorithm 1 round + fit loop (in-host clients)
-    federation_sharded  the same round as one SPMD program (clients =
-                  mesh slices; aggregation = masked psum) — dry-run entry
+    engine        the stacked-client round engine: Algorithm 1's four
+                  phases as pure jitted functions over pytrees with a
+                  leading client axis (shared by both federation drivers)
+    federation    in-host orchestrator over the engine (host AUROC scoring)
+    federation_sharded  the same engine phases as one SPMD program
+                  (clients = mesh slices; aggregation = masked all-reduce)
+                  — dry-run entry
     inference     decentralized inference (contribution #2)
     baselines     FedAvg/FedMA/FedProx/FedNova/SplitNN/One-Shot VFL/HFCL/
                   centralized (§IV-C)
 """
 from repro.core.blendavg import blendavg, blendavg_weights, fedavg
+from repro.core.engine import EngineConfig, RoundEngine, make_phase_fns
 from repro.core.federation import FedConfig, Federation, evaluate_global
 from repro.core.partitioner import ClientData, ModalView, partition
 
 __all__ = [
     "blendavg", "blendavg_weights", "fedavg",
+    "EngineConfig", "RoundEngine", "make_phase_fns",
     "FedConfig", "Federation", "evaluate_global",
     "ClientData", "ModalView", "partition",
 ]

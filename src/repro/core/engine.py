@@ -1,0 +1,455 @@
+"""Unified stacked-client round engine — the single source of Algorithm 1 math.
+
+Both federation drivers (the in-host ``federation.Federation`` and the
+TPU-pod ``federation_sharded.make_blendfl_round``) express the paper's
+round through the phase functions built here. Clients live as a leading
+``C`` axis on every model/optimizer/batch leaf ("stacked client pytrees"),
+so one compiled program steps all clients of a phase at once:
+
+    phase 1  ``unimodal_step``   masked per-client SGD/AdamW on both
+                                 modalities in ONE step (vmap over C)
+    phase 2  ``vfl_step``        joint split-training vjp: stacked client
+                                 encoders + server head, alignment as a
+                                 gather over the flattened (C*N) latent rows
+    phase 3  ``paired_step``     masked per-client multimodal SGD/AdamW
+    phase 4  ``blendavg_update`` Eq. 9-11 over the stacked candidates,
+             / ``fedavg_update`` blended through the Pallas ``blend_params``
+                                 kernel (in-host; interpret/ref off-TPU) or
+                                 the all-reduce-lowerable reduction (SPMD)
+                                 — ``EngineConfig.blend``
+
+Static padded batch shapes + per-row masks make ragged per-client data
+jit-stable: a federation compiles each phase once, regardless of client
+count or which modalities a client holds. Clients that hold no rows for a
+phase contribute exactly-zero gradients and are additionally excluded from
+the parameter/momentum update (``_where_clients``), matching the legacy
+per-client loop that skipped them outright.
+
+The optimizer is pluggable (``EngineConfig.optimizer``: ``sgd`` | ``adamw``,
+with constant/cosine schedules from ``repro.optim``). Optimizer state is a
+stacked pytree too — per-client first/second moments shard and thread
+through rounds alongside the params; BlendAvg broadcast replaces client
+*weights* while each client keeps its own moments (standard stateful-FL
+practice; with plain SGD this is exactly the paper's algorithm).
+"""
+from __future__ import annotations
+
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.core.encoders import (
+    EncoderConfig,
+    encoder_apply,
+    fusion_apply,
+    task_scores,
+)
+from repro.kernels.blendavg.ops import blend_params
+from repro.models.common import dense, sigmoid_bce, softmax_cross_entropy
+
+CLIENT_GROUPS = ("f_A", "g_A", "f_B", "g_B", "g_M")
+UNIMODAL_GROUPS = ("f_A", "g_A", "f_B", "g_B")
+VFL_GROUPS = ("f_A", "f_B")
+PAIRED_GROUPS = ("f_A", "f_B", "g_M")
+
+_STATE_TREES = ("mu", "nu", "mom")  # optimizer-state pytrees mirroring params
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static configuration of the round engine (hashable, jit-safe)."""
+
+    ecfg: EncoderConfig
+    kind: str  # binary | multilabel | multiclass
+    optimizer: str = "sgd"  # sgd | adamw
+    lr: float = 1e-3
+    momentum: float = 0.0  # sgd only
+    weight_decay: float = 0.0  # adamw decoupled decay
+    schedule: str = "constant"  # constant | cosine
+    total_steps: int = 0  # cosine horizon (optimizer steps, not rounds)
+    # The server g_M^v head steps once per VFL phase while clients step
+    # once per minibatch, so under a schedule it needs its own (shorter)
+    # horizon. 0 = share total_steps (fine for constant lr).
+    server_total_steps: int = 0
+    # Eq. 11 implementation. "pallas": the fused single-pass blend_params
+    # kernel (interpret/ref path off-TPU) — right for in-host clients where
+    # the stacked models live on one device. "reduce": plain weighted
+    # tensordot over the client axis — right under SPMD sharding, where it
+    # lowers to the masked all-reduce (Mosaic custom calls carry no GSPMD
+    # partition rule, so the Pallas kernel would force an all-gather of
+    # every client model).
+    blend: str = "pallas"  # pallas | reduce
+
+
+def make_optimizer(cfg: EngineConfig) -> optim.Optimizer:
+    """Resolve ``EngineConfig`` to a ``repro.optim.Optimizer``."""
+    if cfg.schedule == "cosine":
+        if cfg.total_steps <= 0:
+            raise ValueError("cosine schedule requires total_steps > 0")
+        lr = optim.cosine_decay(cfg.lr, cfg.total_steps)
+    elif cfg.schedule == "constant":
+        lr = cfg.lr
+    else:
+        raise ValueError(f"unknown schedule {cfg.schedule!r}")
+    if cfg.optimizer == "adamw":
+        return optim.adamw(lr, weight_decay=cfg.weight_decay)
+    if cfg.optimizer == "sgd":
+        return optim.sgd(lr, momentum=cfg.momentum)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")
+
+
+# ------------------------------------------------------------ masked losses --
+
+def task_loss_rows(logits, y, kind: str):
+    """Per-row task loss (mean over rows == encoders.task_loss)."""
+    if kind == "multiclass":
+        return softmax_cross_entropy(logits, jnp.argmax(y, axis=-1))
+    return jnp.mean(sigmoid_bce(logits, y), axis=-1)
+
+
+def masked_mean(rows, mask):
+    """(mean over mask-selected rows, number of selected rows)."""
+    n = jnp.sum(mask)
+    return jnp.sum(rows * mask) / jnp.maximum(n, 1.0), n
+
+
+# ------------------------------------------------ stacked-state helpers ----
+
+def _where_clients(flag, new, old):
+    """Per-client select: flag (C,) bool; every leaf has leading C axis."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(flag.reshape(flag.shape + (1,) * (n.ndim - 1)), n, o),
+        new, old)
+
+
+def _state_subset(state, keys):
+    """Slice the per-group optimizer-state pytrees down to ``keys``."""
+    sub = {k: v for k, v in state.items() if k not in _STATE_TREES}
+    for f in _STATE_TREES:
+        if f in state:
+            sub[f] = {k: state[f][k] for k in keys}
+    return sub
+
+
+def _state_merge(state, sub):
+    """Write a phase's updated state slice back into the full state."""
+    out = dict(state)
+    for k, v in sub.items():
+        out[k] = dict(state[k], **v) if k in _STATE_TREES else v
+    return out
+
+
+def _masked_opt_update(opt, grads, state, params, flags):
+    """One optimizer step on stacked params; clients with flag False keep
+    their params AND moments untouched (they did not participate)."""
+    updates, new_state = opt.update(grads, state, params)
+    new_params = optim.apply_updates(params, updates)
+    for grp, flag in flags.items():
+        if flag is None:
+            continue
+        new_params = dict(new_params,
+                          **{grp: _where_clients(flag, new_params[grp], params[grp])})
+        for f in _STATE_TREES:
+            if f in new_state:
+                new_state = dict(new_state, **{f: dict(
+                    new_state[f],
+                    **{grp: _where_clients(flag, new_state[f][grp], state[f][grp])})})
+    return new_params, new_state
+
+
+def stack_with(stacked_tree, extra_tree):
+    """Append one unstacked candidate (e.g. the server head) to a stacked
+    tree: (C, ...) ++ (...)  ->  (C+1, ...)."""
+    return jax.tree.map(lambda s, e: jnp.concatenate([s, e[None]]), stacked_tree,
+                        extra_tree)
+
+
+# ------------------------------------------------------------- phase math --
+
+def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
+    """Build the pure (un-jitted) phase functions closed over ``cfg``.
+
+    Everything returned is plain jnp math over stacked pytrees — safe to
+    compose under an outer jit (sharded SPMD round) or to wrap phase-by-
+    phase with jit + lax.scan minibatching (in-host ``RoundEngine``).
+    """
+    ecfg, kind = cfg.ecfg, cfg.kind
+    opt = make_optimizer(cfg)
+    srv_opt = (make_optimizer(dataclasses.replace(
+        cfg, total_steps=cfg.server_total_steps))
+        if cfg.server_total_steps else opt)
+
+    def unimodal_loss(f, g, x, y, mask):
+        h = encoder_apply(f, x, ecfg)
+        return masked_mean(task_loss_rows(dense(g, h), y, kind), mask)
+
+    def paired_loss(f_a, f_b, g_m, x_a, x_b, y, mask):
+        h_a = encoder_apply(f_a, x_a, ecfg)
+        h_b = encoder_apply(f_b, x_b, ecfg)
+        return masked_mean(task_loss_rows(fusion_apply(g_m, h_a, h_b), y, kind), mask)
+
+    # ---- phase 1: local unimodal training (lines 3-8) ----
+
+    def unimodal_step(models, opt_state, batch):
+        """One optimizer step for ALL clients x BOTH modalities.
+
+        batch: xa (C,B,Sa,Fa) ya (C,B,O) ma (C,B)  + xb/yb/mb. Returns
+        (models', opt_state', info) where info carries per-client masked
+        losses and row counts for both modalities.
+        """
+        params = {k: models[k] for k in UNIMODAL_GROUPS}
+
+        def total(p):
+            la, na = jax.vmap(unimodal_loss)(
+                p["f_A"], p["g_A"], batch["xa"], batch["ya"], batch["ma"])
+            lb, nb = jax.vmap(unimodal_loss)(
+                p["f_B"], p["g_B"], batch["xb"], batch["yb"], batch["mb"])
+            return jnp.sum(la) + jnp.sum(lb), (la, na, lb, nb)
+
+        (_, (la, na, lb, nb)), grads = jax.value_and_grad(total, has_aux=True)(params)
+        flags = {"f_A": na > 0, "g_A": na > 0, "f_B": nb > 0, "g_B": nb > 0}
+        sub = _state_subset(opt_state, UNIMODAL_GROUPS)
+        new_params, sub = _masked_opt_update(opt, grads, sub, params, flags)
+        info = {"loss_a": la, "n_a": na, "loss_b": lb, "n_b": nb}
+        return dict(models, **new_params), _state_merge(opt_state, sub), info
+
+    # ---- phase 2: split (VFL) training on fragmented rows (lines 9-23) ----
+
+    def vfl_step(models, server_gmv, opt_state, srv_state, batch):
+        """One joint split-training step over pre-aligned fragmented rows.
+
+        batch: xa (C,Nfa,Sa,Fa) xb (C,Nfb,Sb,Fb); gather_a/gather_b (n,)
+        index the flattened (C*Nf) latent rows into server alignment order
+        (the PSI output); y (n,O); part_a/part_b (C,) bool participation.
+        All grads come from ONE joint vjp of the split loss — definitionally
+        identical to the upload/download exchange (see repro.core.vfl).
+        """
+        params = {k: models[k] for k in VFL_GROUPS}
+
+        def joint(p, gmv):
+            h_a = jax.vmap(lambda f, x: encoder_apply(f, x, ecfg))(p["f_A"], batch["xa"])
+            h_b = jax.vmap(lambda f, x: encoder_apply(f, x, ecfg))(p["f_B"], batch["xb"])
+            h_a = h_a.reshape(-1, h_a.shape[-1])[batch["gather_a"]]
+            h_b = h_b.reshape(-1, h_b.shape[-1])[batch["gather_b"]]
+            rows = task_loss_rows(fusion_apply(gmv, h_a, h_b), batch["y"], kind)
+            return jnp.mean(rows)
+
+        loss, (grads, g_srv) = jax.value_and_grad(joint, argnums=(0, 1))(
+            params, server_gmv)
+        flags = {"f_A": batch.get("part_a"), "f_B": batch.get("part_b")}
+        sub = _state_subset(opt_state, VFL_GROUPS)
+        new_params, sub = _masked_opt_update(opt, grads, sub, params, flags)
+        upd_srv, srv_state = srv_opt.update(g_srv, srv_state, server_gmv)
+        server_gmv = optim.apply_updates(server_gmv, upd_srv)
+        return (dict(models, **new_params), server_gmv,
+                _state_merge(opt_state, sub), srv_state, loss)
+
+    # ---- phase 3: local multimodal training on paired rows (lines 24-29) ----
+
+    def paired_step(models, opt_state, batch):
+        """One optimizer step on paired rows for all paired clients.
+
+        batch: xa (C,B,Sa,Fa) xb (C,B,Sb,Fb) y (C,B,O) m (C,B).
+        """
+        params = {k: models[k] for k in PAIRED_GROUPS}
+
+        def total(p):
+            l, n = jax.vmap(paired_loss)(
+                p["f_A"], p["f_B"], p["g_M"], batch["xa"], batch["xb"],
+                batch["y"], batch["m"])
+            return jnp.sum(l), (l, n)
+
+        (_, (l, n)), grads = jax.value_and_grad(total, has_aux=True)(params)
+        flags = {k: n > 0 for k in PAIRED_GROUPS}
+        sub = _state_subset(opt_state, PAIRED_GROUPS)
+        new_params, sub = _masked_opt_update(opt, grads, sub, params, flags)
+        info = {"loss": l, "n": n}
+        return dict(models, **new_params), _state_merge(opt_state, sub), info
+
+    # ---- phase 4: BlendAvg aggregation + broadcast (lines 30-32) ----
+
+    def omega_from_scores(scores, global_score):
+        """Eq. 9-10 on device: masked, normalized improvement weights."""
+        delta = scores - global_score
+        delta = jnp.where(jnp.isnan(delta), -jnp.inf, delta)
+        w = jnp.where(delta > 0, delta, 0.0)
+        tot = jnp.sum(w)
+        omega = jnp.where(tot > 0, w / jnp.maximum(tot, 1e-12), jnp.zeros_like(w))
+        return omega, tot > 0
+
+    def blend_stacked(stacked_tree, omega):
+        """Eq. 11: sum_k omega_k W_k over the leading candidate axis, via
+        the fused Pallas kernel or the all-reduce-lowerable reduction
+        (see EngineConfig.blend)."""
+        om = jnp.asarray(omega, jnp.float32)
+        if cfg.blend == "reduce":
+            return jax.tree.map(
+                lambda w: jnp.tensordot(om, w.astype(jnp.float32),
+                                        axes=1).astype(w.dtype), stacked_tree)
+        if cfg.blend != "pallas":
+            raise ValueError(f"unknown blend impl {cfg.blend!r}")
+        return blend_params(stacked_tree, om)
+
+    def blendavg_update(global_tree, stacked_cands, scores, global_score):
+        """Full BlendAvg step: returns (new_global, omega, any_improved);
+        keeps the previous global model when nothing improves."""
+        omega, any_up = omega_from_scores(scores, global_score)
+        blended = blend_stacked(stacked_cands, omega)
+        new = jax.tree.map(lambda b, g: jnp.where(any_up, b, g.astype(b.dtype)),
+                           blended, global_tree)
+        return new, omega, any_up
+
+    def fedavg_update(global_tree, stacked_cands, weights):
+        """Volume-weighted FedAvg over the stacked candidates. Zero total
+        weight (e.g. a zero-overlap federation with no paired clients)
+        keeps the previous global model explicitly — no silent floor."""
+        weights = jnp.asarray(weights, jnp.float32)
+        tot = jnp.sum(weights)
+        omega = jnp.where(tot > 0, weights / jnp.maximum(tot, 1e-12),
+                          jnp.zeros_like(weights))
+        blended = blend_stacked(stacked_cands, omega)
+        return jax.tree.map(lambda b, g: jnp.where(tot > 0, b, g.astype(b.dtype)),
+                            blended, global_tree)
+
+    def broadcast(global_tree, n_clients: int):
+        """LocalUpdate (line 32): every client adopts the blended weights."""
+        return jax.tree.map(
+            lambda g: jnp.broadcast_to(g[None], (n_clients,) + g.shape), global_tree)
+
+    return SimpleNamespace(
+        opt=opt, srv_opt=srv_opt, unimodal_loss=unimodal_loss,
+        paired_loss=paired_loss,
+        unimodal_step=unimodal_step, vfl_step=vfl_step, paired_step=paired_step,
+        omega_from_scores=omega_from_scores, blend_stacked=blend_stacked,
+        blendavg_update=blendavg_update, fedavg_update=fedavg_update,
+        broadcast=broadcast)
+
+
+# ------------------------------------------------------- in-host driver ----
+
+class RoundEngine:
+    """Jitted minibatching driver over the shared phase functions.
+
+    Owns exactly one compiled program per phase: scan over static padded
+    minibatches, vmap over the stacked client axis. Per-batch losses stay
+    on device; a phase returns ONE scalar (a single host sync per phase).
+    """
+
+    def __init__(self, cfg: EngineConfig, batch_size: int):
+        self.cfg = cfg
+        self.batch_size = int(batch_size)
+        self.fns = make_phase_fns(cfg)
+        self.opt = self.fns.opt
+        self.unimodal_phase = jax.jit(self._build_unimodal_phase())
+        self.paired_phase = jax.jit(self._build_paired_phase())
+        self.vfl_phase = jax.jit(self.fns.vfl_step)
+        self.uni_scores = jax.jit(self._build_uni_scores())
+        self.multi_scores = jax.jit(self._build_multi_scores())
+
+    def init_opt_state(self, stacked_models):
+        return self.opt.init({k: stacked_models[k] for k in CLIENT_GROUPS})
+
+    def init_server_opt_state(self, server_gmv):
+        return self.fns.srv_opt.init(server_gmv)
+
+    # -- phase drivers (jitted once each in __init__) --
+
+    def _build_unimodal_phase(self):
+        fns, B = self.fns, self.batch_size
+
+        def phase(models, opt_state, data, key):
+            """data: xa (C,N,Sa,Fa) ya (C,N,O) ma (C,N) + xb/yb/mb, with
+            N a multiple of the batch size. Shuffles per client on device,
+            scans the minibatches, returns the mean of valid per-(client,
+            batch, modality) losses — the legacy loop's logging metric."""
+            C, n_rows = data["ma"].shape
+            nb = n_rows // B
+            ka, kb = jax.random.split(key)
+
+            def perms(k):
+                return jax.vmap(lambda kk: jax.random.permutation(kk, n_rows))(
+                    jax.random.split(k, C))
+
+            idx_a, idx_b = perms(ka), perms(kb)
+            take = jax.vmap(lambda arr, sel: arr[sel])
+
+            def body(carry, t):
+                models, opt_state = carry
+                sa = jax.lax.dynamic_slice_in_dim(idx_a, t * B, B, axis=1)
+                sb = jax.lax.dynamic_slice_in_dim(idx_b, t * B, B, axis=1)
+                batch = {"xa": take(data["xa"], sa), "ya": take(data["ya"], sa),
+                         "ma": take(data["ma"], sa),
+                         "xb": take(data["xb"], sb), "yb": take(data["yb"], sb),
+                         "mb": take(data["mb"], sb)}
+                models, opt_state, info = fns.unimodal_step(models, opt_state, batch)
+                return (models, opt_state), info
+
+            (models, opt_state), infos = jax.lax.scan(
+                body, (models, opt_state), jnp.arange(nb))
+            valid_a = (infos["n_a"] > 0).astype(jnp.float32)
+            valid_b = (infos["n_b"] > 0).astype(jnp.float32)
+            tot = (jnp.sum(infos["loss_a"] * valid_a)
+                   + jnp.sum(infos["loss_b"] * valid_b))
+            cnt = jnp.sum(valid_a) + jnp.sum(valid_b)
+            loss = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1.0), jnp.nan)
+            return models, opt_state, loss
+
+        return phase
+
+    def _build_paired_phase(self):
+        fns, B = self.fns, self.batch_size
+
+        def phase(models, opt_state, data, key):
+            C, n_rows = data["m"].shape
+            nb = n_rows // B
+            idx = jax.vmap(lambda kk: jax.random.permutation(kk, n_rows))(
+                jax.random.split(key, C))
+            take = jax.vmap(lambda arr, sel: arr[sel])
+
+            def body(carry, t):
+                models, opt_state = carry
+                sel = jax.lax.dynamic_slice_in_dim(idx, t * B, B, axis=1)
+                batch = {"xa": take(data["xa"], sel), "xb": take(data["xb"], sel),
+                         "y": take(data["y"], sel), "m": take(data["m"], sel)}
+                models, opt_state, info = fns.paired_step(models, opt_state, batch)
+                return (models, opt_state), info
+
+            (models, opt_state), infos = jax.lax.scan(
+                body, (models, opt_state), jnp.arange(nb))
+            valid = (infos["n"] > 0).astype(jnp.float32)
+            cnt = jnp.sum(valid)
+            loss = jnp.where(cnt > 0,
+                             jnp.sum(infos["loss"] * valid) / jnp.maximum(cnt, 1.0),
+                             jnp.nan)
+            return models, opt_state, loss
+
+        return phase
+
+    # -- stacked evaluation (aggregation scoring) --
+
+    def _build_uni_scores(self):
+        ecfg, kind = self.cfg.ecfg, self.cfg.kind
+
+        def scores(f_stack, g_stack, x):
+            """(C,...) stacked unimodal models -> (C, Nv, O) val scores."""
+            def one(f, g):
+                return task_scores(dense(g, encoder_apply(f, x, ecfg)), kind)
+
+            return jax.vmap(one)(f_stack, g_stack)
+
+        return scores
+
+    def _build_multi_scores(self):
+        ecfg, kind = self.cfg.ecfg, self.cfg.kind
+
+        def scores(f_a, f_b, gm_stack, x_a, x_b):
+            """Stacked fusion heads on the (shared) global encoders."""
+            h_a = encoder_apply(f_a, x_a, ecfg)
+            h_b = encoder_apply(f_b, x_b, ecfg)
+            return jax.vmap(
+                lambda gm: task_scores(fusion_apply(gm, h_a, h_b), kind))(gm_stack)
+
+        return scores

@@ -7,33 +7,53 @@ One ``blendfl_round`` is the paper's training epoch:
     3. local multimodal training on *paired* data       (lines 24-29)
     4. BlendAvg aggregation + broadcast                 (lines 30-32)
 
-Clients are plain Python objects holding model pytrees; every numeric
-step is jitted. The TPU-sharded expression of the same round (clients =
-mesh slices, aggregation = masked psum) lives in federation_sharded.py
-and is what the multi-pod dry-run lowers.
+Architecture: every phase's math lives in ``repro.core.engine`` as pure
+jitted functions over **stacked client pytrees** — all client models carry
+a leading ``C`` axis, ragged per-client data is padded to static shapes
+with per-row masks, and each phase is ONE compiled program (vmap over
+clients, ``lax.scan`` over minibatches) regardless of client count or
+modality. This class is a thin orchestrator: it builds the padded stacked
+batches once at init, threads (models, optimizer state) through the
+engine's phases each round, and runs the server-side BlendAvg scoring
+(real AUROC/AUPRC on the representative validation set — a host metric,
+so scoring sits here rather than in the engine; the weighted blend itself
+goes back through the engine's Pallas ``blend_params`` path).
+
+The in-host <-> sharded mapping: ``federation_sharded.make_blendfl_round``
+drives the *same* engine phase functions as one SPMD program (client axis
+sharded over the mesh, on-device loss surrogate for scoring). The two
+files differ only in orchestration — batching+host metrics here, sharding
++surrogate scoring there; no phase math is duplicated.
+
+Optimizers are pluggable via ``FedConfig.optimizer`` ("sgd" | "adamw",
+constant or cosine schedule); per-client optimizer state is a stacked
+pytree threaded through rounds. On BlendAvg broadcast clients adopt the
+blended weights but keep their own moments (exact Algorithm 1 under plain
+SGD, standard stateful-FL practice under AdamW).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import optim
+from repro.common.tree import tree_unstack
 from repro.core import vfl
-from repro.core.blendavg import blendavg, fedavg
+from repro.core.blendavg import blendavg_weights
 from repro.core.encoders import (
     EncoderConfig,
     encoder_apply,
     fusion_apply,
     init_client_models,
-    task_loss,
     task_scores,
 )
-from repro.core.partitioner import ClientData, ModalView
+from repro.core.engine import CLIENT_GROUPS, EngineConfig, RoundEngine, stack_with
+from repro.core.partitioner import ClientData, ModalView, fragmented_overlap
 from repro.data.synthetic import SyntheticMultimodal, TaskSpec
 from repro.metrics import auprc, auroc
 
@@ -45,6 +65,10 @@ class FedConfig:
     local_epochs: int = 1  # local passes between aggregations (Fig. 2 x-axis)
     batch_size: int = 64
     lr: float = 1e-3
+    optimizer: str = "sgd"  # sgd | adamw (repro.optim, threaded per client)
+    momentum: float = 0.0  # sgd momentum
+    weight_decay: float = 0.0  # adamw decoupled weight decay
+    schedule: str = "constant"  # constant | cosine (over all optimizer steps)
     aggregator: str = "blendavg"  # blendavg | fedavg
     # Which local rows feed phase-1 unimodal training. "all" (default)
     # reads Alg. 1's "partial data" as "the unimodal portions of D_m" —
@@ -57,53 +81,13 @@ class FedConfig:
     seed: int = 0
 
 
-# ------------------------------------------------------------ jitted steps --
-
-@functools.partial(jax.jit, static_argnames=("ecfg", "kind", "lr", "modality"))
-def _unimodal_sgd_step(f, g, x, y, *, ecfg, kind, lr, modality):
-    del modality  # static arg only to keep per-modality cache entries separate
-
-    def loss_fn(f_, g_):
-        h = encoder_apply(f_, x, ecfg)
-        from repro.models.common import dense
-
-        return task_loss(dense(g_, h), y, kind)
-
-    loss, (gf, gg) = jax.value_and_grad(loss_fn, argnums=(0, 1))(f, g)
-    f = jax.tree.map(lambda p, gr: p - lr * gr, f, gf)
-    g = jax.tree.map(lambda p, gr: p - lr * gr, g, gg)
-    return f, g, loss
-
-
-@functools.partial(jax.jit, static_argnames=("ecfg", "kind", "lr"))
-def _paired_sgd_step(f_a, f_b, g_m, x_a, x_b, y, *, ecfg, kind, lr):
-    def loss_fn(fa, fb, gm):
-        h_a = encoder_apply(fa, x_a, ecfg)
-        h_b = encoder_apply(fb, x_b, ecfg)
-        return task_loss(fusion_apply(gm, h_a, h_b), y, kind)
-
-    loss, (gfa, gfb, ggm) = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(f_a, f_b, g_m)
-    upd = lambda p, gr: jax.tree.map(lambda a, b: a - lr * b, p, gr)
-    return upd(f_a, gfa), upd(f_b, gfb), upd(g_m, ggm), loss
-
+# ------------------------------------------------------------- evaluation --
 
 @functools.partial(jax.jit, static_argnames=("ecfg",))
 def _client_fwd(f, x, *, ecfg):
+    """Jitted single-model encoder forward (evaluation / serving helper)."""
     return encoder_apply(f, x, ecfg)
 
-
-@functools.partial(jax.jit, static_argnames=("kind",))
-def _server_fwd_bwd(gmv, h_a, h_b, y, *, kind):
-    return vfl.server_forward_backward(gmv, h_a, h_b, y, kind)
-
-
-@functools.partial(jax.jit, static_argnames=("ecfg", "lr"))
-def _client_bwd_update(f, x, h_grad, *, ecfg, lr):
-    g_enc = vfl.client_backward(f, x, h_grad, ecfg)
-    return jax.tree.map(lambda p, gr: p - lr * gr, f, g_enc)
-
-
-# ------------------------------------------------------------- evaluation --
 
 def _metric_fn(name: str) -> Callable:
     return {"auroc": auroc, "auprc": auprc}[name]
@@ -125,166 +109,277 @@ def eval_multimodal(f_a, f_b, g_m, x_a, x_b, y, ecfg: EncoderConfig, kind: str,
     return float(_metric_fn(metric)(np.asarray(y), np.asarray(scores)))
 
 
+# --------------------------------------------- stacked padded data builds --
+
+def _pad_rows(n_max: int, batch_size: int) -> int:
+    """Static padded row count: a positive multiple of the batch size."""
+    b = max(1, batch_size)
+    return max(b, b * math.ceil(max(n_max, 1) / b))
+
+
+def _stack_views(views: list[ModalView], n_pad: int, seq: int, feat: int,
+                 out_dim: int):
+    """list of ragged per-client views -> x (C,n_pad,seq,feat), y, mask."""
+    c = len(views)
+    x = np.zeros((c, n_pad, seq, feat), np.float32)
+    y = np.zeros((c, n_pad, out_dim), np.float32)
+    m = np.zeros((c, n_pad), np.float32)
+    for k, v in enumerate(views):
+        n = len(v)
+        if n:
+            x[k, :n] = v.x
+            y[k, :n] = v.y
+            m[k, :n] = 1.0
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(m)
+
+
+def _build_unimodal_data(clients: list[ClientData], cfg: FedConfig, spec: TaskSpec):
+    def view(cd, side):
+        if cfg.unimodal_data == "all":
+            return cd.all_a() if side == "a" else cd.all_b()
+        return cd.partial_a if side == "a" else cd.partial_b
+
+    va = [view(cd, "a") for cd in clients]
+    vb = [view(cd, "b") for cd in clients]
+    n_pad = _pad_rows(max(max(len(v) for v in va), max(len(v) for v in vb)),
+                      cfg.batch_size)
+    xa, ya, ma = _stack_views(va, n_pad, spec.seq_a, spec.feat_a, spec.out_dim)
+    xb, yb, mb = _stack_views(vb, n_pad, spec.seq_b, spec.feat_b, spec.out_dim)
+    return {"xa": xa, "ya": ya, "ma": ma, "xb": xb, "yb": yb, "mb": mb}
+
+
+def _build_paired_data(clients: list[ClientData], cfg: FedConfig, spec: TaskSpec):
+    if not any(cd.has_paired for cd in clients):
+        return None
+    n_pad = _pad_rows(max(len(cd.paired_a) for cd in clients), cfg.batch_size)
+    xa, ya, m = _stack_views([cd.paired_a for cd in clients], n_pad,
+                             spec.seq_a, spec.feat_a, spec.out_dim)
+    xb, _, _ = _stack_views([cd.paired_b for cd in clients], n_pad,
+                            spec.seq_b, spec.feat_b, spec.out_dim)
+    return {"xa": xa, "xb": xb, "y": ya, "m": m}
+
+
+def _build_vfl_data(clients: list[ClientData], spec: TaskSpec):
+    """Stack fragmented rows per owner + precompute the server alignment
+    (PSI stand-in) as gather indices into the flattened (C*Nf) latent rows.
+
+    Only rows in the cross-client overlap are kept: rows whose partner
+    modality never arrived can't train, so encoding them in the VFL phase
+    would be pure waste (the padded row count, and with it the phase's
+    encoder FLOPs, scales with the overlap instead of the raw frag count).
+    """
+    c = len(clients)
+    overlap = fragmented_overlap(clients)
+
+    def keep(view):
+        sel = np.isin(view.ids, overlap)
+        return ModalView(view.x[sel], view.ids[sel], view.y[sel])
+
+    fa = [keep(cd.frag_a) for cd in clients]
+    fb = [keep(cd.frag_b) for cd in clients]
+    nfa = max(max((len(v) for v in fa), default=0), 1)
+    nfb = max(max((len(v) for v in fb), default=0), 1)
+    xa, ya, _ = _stack_views(fa, nfa, spec.seq_a, spec.feat_a, spec.out_dim)
+    xb, _, _ = _stack_views(fb, nfb, spec.seq_b, spec.feat_b, spec.out_dim)
+    ids_a = np.full(c * nfa, -1, np.int64)
+    ids_b = np.full(c * nfb, -1, np.int64)
+    for k in range(c):
+        ids_a[k * nfa : k * nfa + len(fa[k])] = fa[k].ids
+        ids_b[k * nfb : k * nfb + len(fb[k])] = fb[k].ids
+    pos_a = np.nonzero(ids_a >= 0)[0]
+    pos_b = np.nonzero(ids_b >= 0)[0]
+    _, ia, ib = vfl.align_by_id(ids_a[pos_a], ids_b[pos_b])
+    if len(ia) == 0:
+        return None
+    gather_a = pos_a[ia]
+    gather_b = pos_b[ib]
+    y = np.asarray(ya).reshape(c * nfa, -1)[gather_a]
+    part_a = np.zeros(c, bool)
+    part_b = np.zeros(c, bool)
+    part_a[np.unique(gather_a // nfa)] = True
+    part_b[np.unique(gather_b // nfb)] = True
+    return {"xa": xa, "xb": xb, "gather_a": jnp.asarray(gather_a, jnp.int32),
+            "gather_b": jnp.asarray(gather_b, jnp.int32),
+            "y": jnp.asarray(y), "part_a": jnp.asarray(part_a),
+            "part_b": jnp.asarray(part_b)}
+
+
 # -------------------------------------------------------------- federation --
 
 @dataclasses.dataclass
 class Federation:
-    """Mutable federation state: N clients + the BlendFL server."""
+    """Mutable federation state: stacked clients + the BlendFL server."""
 
     cfg: FedConfig
     spec: TaskSpec
     ecfg: EncoderConfig
     clients: list  # list[ClientData]
-    models: list  # per-client {f_A, f_B, g_A, g_B, g_M}
+    engine: RoundEngine
+    stacked: dict  # stacked client models {f_A, f_B, g_A, g_B, g_M}, leading C
+    opt_state: dict  # stacked per-client optimizer state
     global_models: dict  # blended {f_A, f_B, g_A, g_B, g_M}
     server_gmv: dict  # g_M^v split-training head at the server
+    srv_opt_state: dict  # server-head optimizer state
     val: SyntheticMultimodal  # server-side representative validation set
-    rng: np.random.Generator
+    data: dict  # device-resident padded stacked batches per phase
+    key: jax.Array  # PRNG for on-device batch shuffling
+
+    @property
+    def models(self) -> list[dict]:
+        """Per-client model dicts — a read-only SNAPSHOT unstacked from
+        ``self.stacked`` on every access. Assigning into it does not
+        change federation state; mutate ``self.stacked`` instead."""
+        return tree_unstack(self.stacked, self.cfg.n_clients)
 
     @staticmethod
     def init(key, cfg: FedConfig, spec: TaskSpec, ecfg: EncoderConfig,
              clients: list, val: SyntheticMultimodal) -> "Federation":
         base = init_client_models(key, spec, ecfg)
+        data = {
+            "uni": _build_unimodal_data(clients, cfg, spec),
+            "paired": _build_paired_data(clients, cfg, spec),
+            "vfl": _build_vfl_data(clients, spec),
+            "val": {"x_a": jnp.asarray(val.x_a), "x_b": jnp.asarray(val.x_b)},
+            # constant for the federation's lifetime; the server head's
+            # FedAvg weight (Eq. 8 candidate) in _aggregate
+            "n_overlap": len(fragmented_overlap(clients)),
+        }
+        steps_per_epoch = (data["uni"]["ma"].shape[1] // cfg.batch_size
+                          + (data["paired"]["m"].shape[1] // cfg.batch_size
+                             if data["paired"] is not None else 0)
+                          + (1 if data["vfl"] is not None else 0))
+        engine = RoundEngine(
+            EngineConfig(ecfg=ecfg, kind=spec.kind, optimizer=cfg.optimizer,
+                         lr=cfg.lr, momentum=cfg.momentum,
+                         weight_decay=cfg.weight_decay, schedule=cfg.schedule,
+                         total_steps=cfg.rounds * cfg.local_epochs * steps_per_epoch,
+                         # the server head steps once per epoch (one
+                         # full-batch VFL exchange), not once per minibatch
+                         server_total_steps=cfg.rounds * cfg.local_epochs),
+            cfg.batch_size)
         # all clients start from the same global init (standard FL practice)
-        models = [jax.tree.map(jnp.copy, base) for _ in clients]
+        stacked = engine.fns.broadcast(base, cfg.n_clients)
         return Federation(
-            cfg=cfg, spec=spec, ecfg=ecfg, clients=clients, models=models,
-            global_models=jax.tree.map(jnp.copy, base),
+            cfg=cfg, spec=spec, ecfg=ecfg, clients=clients, engine=engine,
+            stacked=stacked, opt_state=engine.init_opt_state(stacked),
+            global_models=base,
             server_gmv=jax.tree.map(jnp.copy, base["g_M"]),
-            val=val, rng=np.random.default_rng(cfg.seed),
+            srv_opt_state=engine.init_server_opt_state(base["g_M"]),
+            val=val, data=data, key=jax.random.PRNGKey(cfg.seed),
         )
 
-    # ---- phase 1: local unimodal training (partial data) ----
+    def _next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    # ---- phases 1-3: one engine call each ----
 
     def _unimodal_phase(self) -> float:
-        cfg, ecfg, kind = self.cfg, self.ecfg, self.spec.kind
-        losses = []
-        for k, cd in enumerate(self.clients):
-            for mod, view in (("A", self._uni_view(cd, "a")), ("B", self._uni_view(cd, "b"))):
-                if len(view) == 0:
-                    continue
-                f, g = self.models[k][f"f_{mod}"], self.models[k][f"g_{mod}"]
-                for x, y in self._batches(view):
-                    f, g, loss = _unimodal_sgd_step(
-                        f, g, x, y, ecfg=ecfg, kind=kind, lr=cfg.lr, modality=mod)
-                    losses.append(float(loss))
-                self.models[k][f"f_{mod}"], self.models[k][f"g_{mod}"] = f, g
-        return float(np.mean(losses)) if losses else float("nan")
-
-    def _uni_view(self, cd: ClientData, side: str) -> ModalView:
-        if self.cfg.unimodal_data == "all":
-            return cd.all_a() if side == "a" else cd.all_b()
-        return cd.partial_a if side == "a" else cd.partial_b
-
-    # ---- phase 2: split (VFL) training on fragmented data ----
+        self.stacked, self.opt_state, loss = self.engine.unimodal_phase(
+            self.stacked, self.opt_state, self.data["uni"], self._next_key())
+        return float(loss)
 
     def _vfl_phase(self) -> float:
-        """One full-batch split exchange per epoch, exactly as Alg. 1: each
-        client uploads features for ALL its fragmented rows once, the server
-        aligns + does one forward/backward of g_M^v, and the decoupled
-        feature gradients come back in a single message. (Full-batch also
-        keeps row counts static, so every jit here compiles once.)"""
-        cfg, ecfg, kind = self.cfg, self.ecfg, self.spec.kind
-        batches = vfl.build_vfl_batches(self.clients, 10**9, self.rng)
-        losses = []
-        for batch in batches:
-            x_a, x_b = jnp.asarray(batch.x_a), jnp.asarray(batch.x_b)
-            n = len(batch.y)
-            # ClientForwardPass, per owning client
-            h_a = jnp.zeros((n, ecfg.d_hidden), jnp.float32)
-            h_b = jnp.zeros((n, ecfg.d_hidden), jnp.float32)
-            for k in range(cfg.n_clients):
-                ra = np.nonzero(batch.owner_a == k)[0]
-                rb = np.nonzero(batch.owner_b == k)[0]
-                if len(ra):
-                    h_a = h_a.at[ra].set(_client_fwd(self.models[k]["f_A"], x_a[ra], ecfg=ecfg))
-                if len(rb):
-                    h_b = h_b.at[rb].set(_client_fwd(self.models[k]["f_B"], x_b[rb], ecfg=ecfg))
-            # ServerForward/BackwardPass on the aligned features
-            loss, g_srv, g_ha, g_hb = _server_fwd_bwd(
-                self.server_gmv, h_a, h_b, jnp.asarray(batch.y), kind=kind)
-            self.server_gmv = jax.tree.map(
-                lambda p, gr: p - cfg.lr * gr, self.server_gmv, g_srv)
-            # ServerSendGradientsToClients -> client encoder updates
-            for k in range(cfg.n_clients):
-                ra = np.nonzero(batch.owner_a == k)[0]
-                rb = np.nonzero(batch.owner_b == k)[0]
-                if len(ra):
-                    self.models[k]["f_A"] = _client_bwd_update(
-                        self.models[k]["f_A"], x_a[ra], g_ha[ra], ecfg=ecfg, lr=cfg.lr)
-                if len(rb):
-                    self.models[k]["f_B"] = _client_bwd_update(
-                        self.models[k]["f_B"], x_b[rb], g_hb[rb], ecfg=ecfg, lr=cfg.lr)
-            losses.append(float(loss))
-        return float(np.mean(losses)) if losses else float("nan")
-
-    # ---- phase 3: local multimodal training on paired data ----
+        """Full-batch split exchange, exactly as Alg. 1: every aligned
+        fragmented row goes through ONE joint forward/backward (static row
+        count -> compiles once)."""
+        if self.data["vfl"] is None:
+            return float("nan")
+        (self.stacked, self.server_gmv, self.opt_state, self.srv_opt_state,
+         loss) = self.engine.vfl_phase(self.stacked, self.server_gmv,
+                                       self.opt_state, self.srv_opt_state,
+                                       self.data["vfl"])
+        return float(loss)
 
     def _paired_phase(self) -> float:
-        cfg, ecfg, kind = self.cfg, self.ecfg, self.spec.kind
-        losses = []
-        for k, cd in enumerate(self.clients):
-            if not cd.has_paired:
-                continue
-            m = self.models[k]
-            f_a, f_b, g_m = m["f_A"], m["f_B"], m["g_M"]
-            for (x_a, x_b, y) in self._paired_batches(cd):
-                f_a, f_b, g_m, loss = _paired_sgd_step(
-                    f_a, f_b, g_m, x_a, x_b, y, ecfg=ecfg, kind=kind, lr=cfg.lr)
-                losses.append(float(loss))
-            m["f_A"], m["f_B"], m["g_M"] = f_a, f_b, g_m
-        return float(np.mean(losses)) if losses else float("nan")
+        if self.data["paired"] is None:
+            return float("nan")
+        self.stacked, self.opt_state, loss = self.engine.paired_phase(
+            self.stacked, self.opt_state, self.data["paired"], self._next_key())
+        return float(loss)
 
     # ---- phase 4: aggregation + broadcast ----
 
+    def _candidate_metrics(self, scores_stacked, present) -> np.ndarray:
+        """Host-side AUROC/AUPRC per stacked candidate; absent -> -inf."""
+        metric = _metric_fn(self.cfg.metric)
+        y = np.asarray(self.val.y)
+        snp = np.asarray(scores_stacked)
+        out = np.full(len(present), -np.inf)
+        for k, p in enumerate(present):
+            if p:
+                out[k] = metric(y, snp[k])
+        return out
+
+    def _blend_group(self, global_tree, stacked_cands, scores, global_score,
+                     fedavg_weights):
+        """Shared BlendAvg/FedAvg dispatch; blend runs through the engine's
+        Pallas path. Returns (new_global, omega)."""
+        fns = self.engine.fns
+        if self.cfg.aggregator == "blendavg":
+            omega = blendavg_weights(scores, global_score)
+            if omega.sum() == 0:  # no improvement anywhere -> keep global
+                return global_tree, omega
+            return fns.blend_stacked(stacked_cands, omega), omega
+        w = np.asarray(fedavg_weights, np.float64)
+        new = fns.fedavg_update(global_tree, stacked_cands, w)
+        tot = w.sum()
+        return new, (w / tot if tot > 0 else w)
+
     def _aggregate(self) -> dict:
-        cfg, ecfg, kind, metric = self.cfg, self.ecfg, self.spec.kind, self.cfg.metric
-        val = self.val
+        cfg, val, fns = self.cfg, self.val, self.engine.fns
+        ecfg, kind, metric = self.ecfg, self.spec.kind, self.cfg.metric
+        x_a, x_b = self.data["val"]["x_a"], self.data["val"]["x_b"]
         info = {}
 
-        def agg_unimodal(mod: str, x_val):
-            has = [k for k, cd in enumerate(self.clients)
-                   if (cd.has_a if mod == "A" else cd.has_b)]
-            if not has:
-                return
-            cands = [{"f": self.models[k][f"f_{mod}"], "g": self.models[k][f"g_{mod}"]}
-                     for k in has]
-            glob = {"f": self.global_models[f"f_{mod}"], "g": self.global_models[f"g_{mod}"]}
-            ev = lambda m: eval_unimodal(m["f"], m["g"], x_val, val.y, ecfg, kind, metric)
-            if cfg.aggregator == "blendavg":
-                blended, inf = blendavg(glob, cands, ev)
-                info[f"omega_{mod}"] = inf["omega"]
-            else:
-                ns = [self.clients[k].n_samples() for k in has]
-                blended = fedavg(cands, ns)
+        blend = cfg.aggregator == "blendavg"  # fedavg never reads scores
+        for mod, x_val in (("A", x_a), ("B", x_b)):
+            present = [cd.has_a if mod == "A" else cd.has_b for cd in self.clients]
+            if not any(present):
+                continue
+            cand = {"f": self.stacked[f"f_{mod}"], "g": self.stacked[f"g_{mod}"]}
+            glob = {"f": self.global_models[f"f_{mod}"],
+                    "g": self.global_models[f"g_{mod}"]}
+            scores = gscore = None
+            if blend:
+                scores = self._candidate_metrics(
+                    self.engine.uni_scores(cand["f"], cand["g"], x_val), present)
+                gscore = eval_unimodal(glob["f"], glob["g"], x_val, val.y, ecfg,
+                                       kind, metric)
+            ns = None if blend else [cd.n_samples() if p else 0
+                                     for cd, p in zip(self.clients, present)]
+            blended, omega = self._blend_group(glob, cand, scores, gscore, ns)
+            info[f"omega_{mod}"] = omega
             self.global_models[f"f_{mod}"] = blended["f"]
             self.global_models[f"g_{mod}"] = blended["g"]
 
-        agg_unimodal("A", val.x_a)
-        agg_unimodal("B", val.x_b)
-
-        # multimodal: local g_M^k (paired clients) + the server's g_M^v (Eq. 8)
-        has_m = [k for k, cd in enumerate(self.clients) if cd.has_paired]
-        cands = [self.models[k]["g_M"] for k in has_m] + [self.server_gmv]
+        # multimodal: C client g_M heads + the server's g_M^v (Eq. 8)
+        present = [cd.has_paired for cd in self.clients] + [True]
+        cand = stack_with(self.stacked["g_M"], self.server_gmv)
         f_a, f_b = self.global_models["f_A"], self.global_models["f_B"]
-        ev = lambda gm: eval_multimodal(f_a, f_b, gm, val.x_a, val.x_b, val.y,
-                                        ecfg, kind, metric)
-        if cfg.aggregator == "blendavg":
-            blended, inf = blendavg(self.global_models["g_M"], cands, ev)
-            info["omega_M"] = inf["omega"]
-        else:
-            from repro.core.partitioner import fragmented_overlap
-
-            ns = [len(self.clients[k].paired_a) for k in has_m]
-            ns.append(max(1, len(fragmented_overlap(self.clients))))
-            blended = fedavg(cands, ns)
+        scores = gscore = None
+        if blend:
+            scores = self._candidate_metrics(
+                self.engine.multi_scores(f_a, f_b, cand, x_a, x_b), present)
+            gscore = eval_multimodal(f_a, f_b, self.global_models["g_M"],
+                                     x_a, x_b, val.y, ecfg, kind, metric)
+        # FedAvg weights: paired counts per client; the server head carries
+        # the actual VFL overlap size — zero when no rows overlap (no silent
+        # floor; all-zero weights keep the previous global model).
+        ns = None
+        if not blend:
+            ns = [len(cd.paired_a) if cd.has_paired else 0 for cd in self.clients]
+            ns.append(self.data["n_overlap"])
+        blended, omega = self._blend_group(self.global_models["g_M"], cand,
+                                           scores, gscore, ns)
+        info["omega_M"] = omega
         self.global_models["g_M"] = blended
 
-        # LocalUpdate: broadcast blended models back (line 32)
-        for k in range(cfg.n_clients):
-            for grp in ("f_A", "g_A", "f_B", "g_B", "g_M"):
-                self.models[k][grp] = jax.tree.map(jnp.copy, self.global_models[grp])
-        self.server_gmv = jax.tree.map(jnp.copy, self.global_models["g_M"])
+        # LocalUpdate: broadcast blended models back (line 32). Clients keep
+        # their optimizer moments; only the weights are replaced.
+        self.stacked = dict(fns.broadcast(
+            {k: self.global_models[k] for k in CLIENT_GROUPS}, cfg.n_clients))
+        self.server_gmv = jax.tree.map(jnp.asarray, self.global_models["g_M"])
         return info
 
     # ---- round / fit ----
@@ -308,24 +403,6 @@ class Federation:
                 logs.update(eval_fn(self))
             history.append(logs)
         return history
-
-    # ---- helpers ----
-
-    def _batches(self, view: ModalView):
-        idx = self.rng.permutation(len(view))
-        bs = self.cfg.batch_size
-        for i in range(0, len(idx), bs):
-            sel = idx[i : i + bs]
-            yield jnp.asarray(view.x[sel]), jnp.asarray(view.y[sel])
-
-    def _paired_batches(self, cd: ClientData):
-        n = len(cd.paired_a)
-        idx = self.rng.permutation(n)
-        bs = self.cfg.batch_size
-        for i in range(0, n, bs):
-            sel = idx[i : i + bs]
-            yield (jnp.asarray(cd.paired_a.x[sel]), jnp.asarray(cd.paired_b.x[sel]),
-                   jnp.asarray(cd.paired_a.y[sel]))
 
 
 def evaluate_global(fed: Federation, test: SyntheticMultimodal) -> dict:

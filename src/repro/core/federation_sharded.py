@@ -16,11 +16,26 @@ GPU boxes + an RPC parameter server. On a TPU pod we map:
                             resident on every slice, so the "broadcast
                             back" of Alg. 1 line 32 is free.
 
+Architecture: the four phases are NOT implemented here — they are the
+shared stacked-client phase functions from ``repro.core.engine``
+(``make_phase_fns``), the same math the in-host ``federation.Federation``
+drives. This module only adapts them to the SPMD batch layout (uniform
+per-client row counts -> all-ones masks; the PSI alignment arrives as the
+``perm_b`` gather) and composes them into one jittable ``round_fn``. The
+optimizer is pluggable via ``ShardedFedSpec.optimizer`` ("sgd"|"adamw");
+stacked per-client optimizer state shards and threads through the round
+inside the state dict.
+
 BlendAvg's validation scoring runs as a vmapped evaluation of all stacked
 client models on a replicated validation shard. Inside the SPMD program
 the score is the (negative) validation LOSS: a monotone on-device
 surrogate for the paper's AUROC (rank statistics don't belong in the hot
-aggregation path; the in-host federation.py uses real AUROC).
+aggregation path; the in-host federation.py uses real AUROC). The blend
+uses the engine's "reduce" formulation here — the same Eq. 11 the in-host
+path runs through the Pallas ``blend_params`` kernel, but expressed as a
+weighted reduction over the client axis so GSPMD lowers it to the masked
+all-reduce pictured above (a Pallas custom call has no partition rule and
+would force an all-gather of every client model).
 
 Everything below is pure jnp under jit — sharding in_shardings do the
 distribution; no host round-trips inside a federated round.
@@ -28,13 +43,17 @@ distribution; no host round-trips inside a federated round.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.encoders import EncoderConfig, encoder_apply, fusion_apply, task_loss
-from repro.models.common import dense
+from repro.core.encoders import EncoderConfig
+from repro.core.engine import (
+    CLIENT_GROUPS,
+    EngineConfig,
+    make_phase_fns,
+    stack_with,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,11 +78,23 @@ class ShardedFedSpec:
     # (measured ~75%). Score on a fixed subsample instead.
     n_val_score: int = 0  # 0 = full n_val
     lr: float = 1e-3
+    optimizer: str = "sgd"  # sgd | adamw
+    weight_decay: float = 0.0  # adamw only
+    # "reduce" so the blend lowers to the masked all-reduce over the
+    # sharded client axis (a Pallas custom call would force an all-gather
+    # of every client model — see EngineConfig.blend).
+    blend: str = "reduce"  # reduce | pallas
 
     @property
     def ecfg(self) -> EncoderConfig:
         return EncoderConfig(d_hidden=self.d_hidden, n_layers=self.n_layers,
                              enc_type="mlp")
+
+    @property
+    def engine_cfg(self) -> EngineConfig:
+        return EngineConfig(ecfg=self.ecfg, kind=self.kind,
+                            optimizer=self.optimizer, lr=self.lr,
+                            weight_decay=self.weight_decay, blend=self.blend)
 
 
 def init_stacked_models(key, spec: ShardedFedSpec):
@@ -82,154 +113,113 @@ def init_stacked_models(key, spec: ShardedFedSpec):
     return stacked, server_gmv, global_models
 
 
-def make_blendfl_round(spec: ShardedFedSpec):
-    """Returns round_fn(stacked, server_gmv, global_models, batch) ->
-    (stacked', server_gmv', global_models', metrics).
+def init_round_state(key, spec: ShardedFedSpec) -> dict:
+    """Full round-state pytree: stacked models + global/server models +
+    stacked optimizer state. This is what ``make_blendfl_round`` threads."""
+    stacked, server_gmv, global_models = init_stacked_models(key, spec)
+    fns = make_phase_fns(spec.engine_cfg)
+    return {
+        "models": stacked,
+        "server_gmv": server_gmv,
+        "global_models": global_models,
+        "opt": fns.opt.init({k: stacked[k] for k in CLIENT_GROUPS}),
+        "srv_opt": fns.opt.init(server_gmv),
+    }
 
-    batch keys (leading C = client axis unless noted):
+
+def make_blendfl_round(spec: ShardedFedSpec):
+    """Returns round_fn(state, batch) -> (state', metrics).
+
+    state: see ``init_round_state``. batch keys (leading C = client axis
+    unless noted):
       partial_a (C,Np,Sa,Fa)  partial_ya (C,Np,O)   partial_b / _yb
       frag_a    (C,Nf,Sa,Fa)  frag_y    (C,Nf,O)    frag_b (C,Nf,Sb,Fb)
       perm_b    (C*Nf,) int32 global alignment: row i of gathered h_a
                 pairs with row perm_b[i] of gathered h_b (the PSI output)
       val_a (Nv,Sa,Fa) val_b (Nv,Sb,Fb) val_y (Nv,O)   [replicated]
     """
-    ecfg, kind, lr = spec.ecfg, spec.kind, spec.lr
+    fns = make_phase_fns(spec.engine_cfg)
     C = spec.n_clients
 
-    def uni_loss(f, g, x, y):
-        h = encoder_apply(f, x, ecfg)
-        return task_loss(dense(g, h), y, kind)
-
-    def paired_loss(f_a, f_b, g_m, x_a, x_b, y):
-        h_a = encoder_apply(f_a, x_a, ecfg)
-        h_b = encoder_apply(f_b, x_b, ecfg)
-        return task_loss(fusion_apply(g_m, h_a, h_b), y, kind)
-
-    def sgd(params, grads):
-        return jax.tree.map(lambda p, g: p - lr * g, params, grads)
-
-    # ---- phase 1: local unimodal training (vmapped over clients) ----
-    def local_unimodal(models, batch):
-        def one(f, g, x, y):
-            loss, (gf, gg) = jax.value_and_grad(uni_loss, argnums=(0, 1))(f, g, x, y)
-            return sgd(f, gf), sgd(g, gg), loss
-
-        fa, ga, la = jax.vmap(one)(models["f_A"], models["g_A"],
-                                   batch["partial_a"], batch["partial_ya"])
-        fb, gb, lb = jax.vmap(one)(models["f_B"], models["g_B"],
-                                   batch["partial_b"], batch["partial_yb"])
-        models = dict(models, f_A=fa, g_A=ga, f_B=fb, g_B=gb)
-        return models, (jnp.mean(la) + jnp.mean(lb)) / 2
-
-    # ---- phase 2: split (VFL) training on fragmented rows ----
-    def vfl_exchange(models, server_gmv, batch):
-        def joint(f_a_stack, f_b_stack, gmv):
-            # ClientForwardPass on every slice, then the alignment gather
-            h_a = jax.vmap(lambda f, x: encoder_apply(f, x, ecfg))(
-                f_a_stack, batch["frag_a"])  # (C, Nf, d)
-            h_b = jax.vmap(lambda f, x: encoder_apply(f, x, ecfg))(
-                f_b_stack, batch["frag_b"])
-            h_a = h_a.reshape(C * spec.n_frag, -1)
-            h_b = h_b.reshape(C * spec.n_frag, -1)[batch["perm_b"]]  # server PSI align
-            y = batch["frag_y"].reshape(C * spec.n_frag, -1)
-            return task_loss(fusion_apply(gmv, h_a, h_b), y, kind)
-
-        loss, (gfa, gfb, gsrv) = jax.value_and_grad(joint, argnums=(0, 1, 2))(
-            models["f_A"], models["f_B"], server_gmv)
-        models = dict(models, f_A=sgd(models["f_A"], gfa), f_B=sgd(models["f_B"], gfb))
-        return models, sgd(server_gmv, gsrv), loss
-
-    # ---- phase 3: local multimodal training on paired rows ----
-    def local_paired(models, batch):
-        def one(f_a, f_b, g_m, x_a, x_b, y):
-            loss, (gfa, gfb, ggm) = jax.value_and_grad(paired_loss, argnums=(0, 1, 2))(
-                f_a, f_b, g_m, x_a, x_b, y)
-            return sgd(f_a, gfa), sgd(f_b, gfb), sgd(g_m, ggm), loss
-
-        fa, fb, gm, losses = jax.vmap(one)(
-            models["f_A"], models["f_B"], models["g_M"],
-            batch["paired_a"], batch["paired_b"], batch["paired_y"])
-        return dict(models, f_A=fa, f_B=fb, g_M=gm), jnp.mean(losses)
-
-    # ---- phase 4: BlendAvg aggregation over the client axis ----
-    def blend(stacked_tree, omega):
-        """sum_k omega_k W_k over the leading client axis (-> all-reduce)."""
-        return jax.tree.map(
-            lambda w: jnp.tensordot(omega.astype(jnp.float32),
-                                    w.astype(jnp.float32), axes=1).astype(w.dtype),
-            stacked_tree)
-
-    def omega_of(scores, global_score):
-        delta = scores - global_score  # improvement = val-loss decrease
-        mask = delta > 0
-        w = jnp.where(mask, delta, 0.0)
-        tot = jnp.sum(w)
-        return jnp.where(tot > 0, w / jnp.maximum(tot, 1e-12), jnp.zeros_like(w)), tot > 0
-
     def aggregate(models, server_gmv, global_models, batch):
+        """Phase 4 on device: -val-loss scores, then the shared BlendAvg."""
         val_a, val_b, val_y = batch["val_a"], batch["val_b"], batch["val_y"]
         if spec.n_val_score and spec.n_val_score < spec.n_val:
             val_a = val_a[: spec.n_val_score]
             val_b = val_b[: spec.n_val_score]
             val_y = val_y[: spec.n_val_score]
+        ones = jnp.ones(val_y.shape[0], jnp.float32)
 
         def uni_score(f, g, x):  # higher is better
-            return -uni_loss(f, g, x, val_y)
+            return -fns.unimodal_loss(f, g, x, val_y, ones)[0]
 
         def multi_score(g_m, f_a, f_b):
-            h_a = encoder_apply(f_a, val_a, ecfg)
-            h_b = encoder_apply(f_b, val_b, ecfg)
-            return -task_loss(fusion_apply(g_m, h_a, h_b), val_y, kind)
+            return -fns.paired_loss(f_a, f_b, g_m, val_a, val_b, val_y, ones)[0]
 
         new_global = dict(global_models)
         infos = {}
         for mod, x_val in (("A", val_a), ("B", val_b)):
             scores = jax.vmap(lambda f, g: uni_score(f, g, x_val))(
                 models[f"f_{mod}"], models[f"g_{mod}"])
-            gscore = uni_score(global_models[f"f_{mod}"], global_models[f"g_{mod}"], x_val)
-            omega, any_up = omega_of(scores, gscore)
+            gscore = uni_score(global_models[f"f_{mod}"],
+                               global_models[f"g_{mod}"], x_val)
             cand = {"f": models[f"f_{mod}"], "g": models[f"g_{mod}"]}
-            blended = blend(cand, omega)
-            new_global[f"f_{mod}"] = jax.tree.map(
-                lambda b, g: jnp.where(any_up, b, g), blended["f"],
-                global_models[f"f_{mod}"])
-            new_global[f"g_{mod}"] = jax.tree.map(
-                lambda b, g: jnp.where(any_up, b, g), blended["g"],
-                global_models[f"g_{mod}"])
+            glob = {"f": global_models[f"f_{mod}"], "g": global_models[f"g_{mod}"]}
+            blended, omega, _ = fns.blendavg_update(glob, cand, scores, gscore)
+            new_global[f"f_{mod}"], new_global[f"g_{mod}"] = blended["f"], blended["g"]
             infos[f"omega_{mod}"] = omega
 
         # multimodal: C client heads + the server's g_M^v (Eq. 8)
-        scores_m = jax.vmap(lambda gm: multi_score(gm, new_global["f_A"],
-                                                   new_global["f_B"]))(models["g_M"])
-        score_srv = multi_score(server_gmv, new_global["f_A"], new_global["f_B"])
-        scores_all = jnp.concatenate([scores_m, score_srv[None]])
-        gscore = multi_score(global_models["g_M"], new_global["f_A"], new_global["f_B"])
-        omega, any_up = omega_of(scores_all, gscore)
-        stacked_all = jax.tree.map(lambda s, srv: jnp.concatenate([s, srv[None]]),
-                                   models["g_M"], server_gmv)
-        blended_m = blend(stacked_all, omega)
-        new_global["g_M"] = jax.tree.map(lambda b, g: jnp.where(any_up, b, g),
-                                         blended_m, global_models["g_M"])
-        infos["omega_M"] = omega
+        cand = stack_with(models["g_M"], server_gmv)
+        scores = jax.vmap(lambda gm: multi_score(gm, new_global["f_A"],
+                                                 new_global["f_B"]))(cand)
+        gscore = multi_score(global_models["g_M"], new_global["f_A"],
+                             new_global["f_B"])
+        new_global["g_M"], infos["omega_M"], _ = fns.blendavg_update(
+            global_models["g_M"], cand, scores, gscore)
         return new_global, infos
 
-    def broadcast(new_global):
-        """LocalUpdate (line 32): every slice adopts the blended weights."""
-        return jax.tree.map(
-            lambda g: jnp.broadcast_to(g[None], (C,) + g.shape),
-            new_global)
+    def round_fn(state, batch):
+        models, opt_state = state["models"], state["opt"]
+        server_gmv, srv_state = state["server_gmv"], state["srv_opt"]
 
-    def round_fn(stacked, server_gmv, global_models, batch):
-        stacked, loss_uni = local_unimodal(stacked, batch)
-        stacked, server_gmv, loss_vfl = vfl_exchange(stacked, server_gmv, batch)
-        stacked, loss_paired = local_paired(stacked, batch)
-        new_global, infos = aggregate(stacked, server_gmv, global_models, batch)
-        stacked = dict(
-            broadcast({k: new_global[k] for k in ("f_A", "g_A", "f_B", "g_B", "g_M")}))
+        # phase 1: local unimodal training (uniform rows -> all-ones masks)
+        p1 = {"xa": batch["partial_a"], "ya": batch["partial_ya"],
+              "ma": jnp.ones(batch["partial_ya"].shape[:2], jnp.float32),
+              "xb": batch["partial_b"], "yb": batch["partial_yb"],
+              "mb": jnp.ones(batch["partial_yb"].shape[:2], jnp.float32)}
+        models, opt_state, i1 = fns.unimodal_step(models, opt_state, p1)
+        loss_uni = (jnp.mean(i1["loss_a"]) + jnp.mean(i1["loss_b"])) / 2
+
+        # phase 2: split (VFL) training; identity gather on the a side,
+        # the PSI permutation on the b side
+        p2 = {"xa": batch["frag_a"], "xb": batch["frag_b"],
+              "gather_a": jnp.arange(C * spec.n_frag, dtype=jnp.int32),
+              "gather_b": batch["perm_b"],
+              "y": batch["frag_y"].reshape(C * spec.n_frag, -1)}
+        models, server_gmv, opt_state, srv_state, loss_vfl = fns.vfl_step(
+            models, server_gmv, opt_state, srv_state, p2)
+
+        # phase 3: local multimodal training on paired rows
+        p3 = {"xa": batch["paired_a"], "xb": batch["paired_b"],
+              "y": batch["paired_y"],
+              "m": jnp.ones(batch["paired_y"].shape[:2], jnp.float32)}
+        models, opt_state, i3 = fns.paired_step(models, opt_state, p3)
+        loss_paired = jnp.mean(i3["loss"])
+
+        # phase 4: BlendAvg aggregation + (free) broadcast
+        new_global, infos = aggregate(models, server_gmv, global_models=state[
+            "global_models"], batch=batch)
+        models = dict(fns.broadcast(
+            {k: new_global[k] for k in CLIENT_GROUPS}, C))
         server_gmv = new_global["g_M"]
-        metrics = dict(loss_uni=loss_uni, loss_vfl=loss_vfl, loss_paired=loss_paired,
-                       **infos)
-        return stacked, server_gmv, new_global, metrics
+
+        state = {"models": models, "server_gmv": server_gmv,
+                 "global_models": new_global, "opt": opt_state,
+                 "srv_opt": srv_state}
+        metrics = dict(loss_uni=loss_uni, loss_vfl=loss_vfl,
+                       loss_paired=loss_paired, **infos)
+        return state, metrics
 
     return round_fn
 

@@ -220,10 +220,10 @@ def make_blendfl_entry(n_clients: int = 16):
                              out_dim=25, n_partial=512, n_frag=512,
                              n_paired=512, n_val=2048, n_val_score=512)
     round_fn = fs.make_blendfl_round(spec)
-    stacked_s, gmv_s, glob_s = jax.eval_shape(
-        lambda: fs.init_stacked_models(jax.random.PRNGKey(0), spec))
+    state_s = jax.eval_shape(
+        lambda: fs.init_round_state(jax.random.PRNGKey(0), spec))
     batch_s = fs.batch_specs(spec)
-    args = (stacked_s, gmv_s, glob_s, batch_s)
+    args = (state_s, batch_s)
 
     def in_sh(mesh):
         def stacked_leaf(sds):
@@ -238,15 +238,23 @@ def make_blendfl_entry(n_clients: int = 16):
         def rep_leaf(sds):
             return NamedSharding(mesh, P())
 
+        def state_leaf(path, sds):
+            # stacked client models + their optimizer moments shard over
+            # the client ("data") axis; global/server models, the shared
+            # step counter, and the server-head opt state are replicated.
+            top = sh._path_str(path).split("/")[0]
+            if (top in ("models", "opt") and len(sds.shape) >= 1
+                    and sds.shape[0] == spec.n_clients):
+                return stacked_leaf(sds)
+            return rep_leaf(sds)
+
         def batch_leaf(path, sds):
             name = sh._path_str(path)
             if name.startswith("val_") or name == "perm_b":
                 return NamedSharding(mesh, P())
             return NamedSharding(mesh, P("data", *([None] * (len(sds.shape) - 1))))
 
-        return (jax.tree.map(stacked_leaf, stacked_s),
-                jax.tree.map(rep_leaf, gmv_s),
-                jax.tree.map(rep_leaf, glob_s),
+        return (jax.tree_util.tree_map_with_path(state_leaf, state_s),
                 jax.tree_util.tree_map_with_path(batch_leaf, batch_s))
 
     return round_fn, args, in_sh, spec

@@ -1,0 +1,72 @@
+"""Property-test shim: real hypothesis when installed, else a tiny
+fixed-seed fallback so `pytest -x -q` still reaches every test module.
+
+The fallback implements just the subset this repo's tests use
+(`given`, `settings`, `strategies.{integers,floats,booleans,sampled_from,
+lists}`): each decorated test runs a deterministic, seeded sample of
+examples instead of hypothesis' adaptive search. Weaker shrinking/coverage,
+same assertions — a missing optional dependency must not mask real tests.
+"""
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ImportError:
+
+    from types import SimpleNamespace
+
+    import numpy as np
+
+    _FALLBACK_MAX_EXAMPLES = 20  # cap: fixed-seed sweep, not a search
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(lo, hi):
+        return _Strategy(lambda r: int(r.integers(lo, hi + 1)))
+
+    def _floats(lo, hi, allow_nan=False, **_kw):
+        del allow_nan  # uniform draws are never NaN
+        return _Strategy(lambda r: float(r.uniform(lo, hi)))
+
+    def _booleans():
+        return _Strategy(lambda r: bool(r.integers(0, 2)))
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: seq[int(r.integers(len(seq)))])
+
+    def _lists(elem, min_size=0, max_size=10, **_kw):
+        return _Strategy(
+            lambda r: [elem.draw(r)
+                       for _ in range(int(r.integers(min_size, max_size + 1)))])
+
+    strategies = SimpleNamespace(integers=_integers, floats=_floats,
+                                 booleans=_booleans, sampled_from=_sampled_from,
+                                 lists=_lists)
+
+    def settings(max_examples=_FALLBACK_MAX_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            n = min(getattr(fn, "_max_examples", _FALLBACK_MAX_EXAMPLES),
+                    _FALLBACK_MAX_EXAMPLES)
+
+            # No functools.wraps: the wrapper must expose a ZERO-arg
+            # signature or pytest would treat the strategy params as
+            # fixtures. (These property tests use no fixtures.)
+            def wrapper():
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(**drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -1,0 +1,281 @@
+"""Stacked round engine: parity with the legacy per-client loop, optimizer
+pluggability, compile-cache behavior, and aggregation edge cases.
+
+The parity test re-implements Algorithm 1 exactly the way the pre-engine
+``federation.py`` did — Python loops over clients, inline ``p - lr*g``
+SGD, per-owner VFL scatter — and asserts the stacked engine reproduces
+its losses, omegas, and global-model leaves on a small federation where
+batching is full-batch (so shuffling cannot reorder the math)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import vfl
+from repro.core.blendavg import blendavg
+from repro.core.encoders import (
+    EncoderConfig,
+    encoder_apply,
+    fusion_apply,
+    init_client_models,
+    task_loss,
+)
+from repro.core.engine import EngineConfig, make_phase_fns
+from repro.core.federation import (
+    FedConfig,
+    Federation,
+    eval_multimodal,
+    eval_unimodal,
+)
+from repro.core.partitioner import partition
+from repro.data.synthetic import make_task, train_val_test
+from repro.models.common import dense
+
+
+@pytest.fixture(scope="module")
+def small_fed():
+    spec = make_task("smnist")
+    tr, va, te = train_val_test(spec, 240, 200, 100, seed=3)
+    # high paired fraction so every client holds every candidate role
+    clients = partition(tr, 2, frac_paired=0.6, frac_fragmented=0.3,
+                        frac_partial=0.1, seed=4)
+    ecfg = EncoderConfig(d_hidden=32, n_layers=1, enc_type="mlp")
+    return spec, tr, va, te, clients, ecfg
+
+
+# ------------------------------------------------------- legacy reference --
+
+def _sgd(tree, grads, lr):
+    return jax.tree.map(lambda p, g: p - lr * g, tree, grads)
+
+
+def _legacy_round(models, global_models, server_gmv, clients, val, ecfg, kind,
+                  lr, metric="auroc"):
+    """The seed repo's Algorithm 1 loop, full-batch, verbatim semantics."""
+    logs = {}
+
+    # phase 1: per-client, per-modality unimodal SGD
+    losses = []
+    for k, cd in enumerate(clients):
+        for mod, view in (("A", cd.all_a()), ("B", cd.all_b())):
+            if len(view) == 0:
+                continue
+            f, g = models[k][f"f_{mod}"], models[k][f"g_{mod}"]
+            x, y = jnp.asarray(view.x), jnp.asarray(view.y)
+
+            def loss_fn(f_, g_):
+                return task_loss(dense(g_, encoder_apply(f_, x, ecfg)), y, kind)
+
+            loss, (gf, gg) = jax.value_and_grad(loss_fn, argnums=(0, 1))(f, g)
+            models[k][f"f_{mod}"] = _sgd(f, gf, lr)
+            models[k][f"g_{mod}"] = _sgd(g, gg, lr)
+            losses.append(float(loss))
+    logs["loss_partial"] = float(np.mean(losses))
+
+    # phase 2: full-batch split exchange with per-owner scatter
+    batches = vfl.build_vfl_batches(clients, 10**9, np.random.default_rng(0))
+    losses = []
+    for batch in batches:
+        x_a, x_b = jnp.asarray(batch.x_a), jnp.asarray(batch.x_b)
+        n = len(batch.y)
+        h_a = jnp.zeros((n, ecfg.d_hidden), jnp.float32)
+        h_b = jnp.zeros((n, ecfg.d_hidden), jnp.float32)
+        for k in range(len(clients)):
+            ra = np.nonzero(batch.owner_a == k)[0]
+            rb = np.nonzero(batch.owner_b == k)[0]
+            if len(ra):
+                h_a = h_a.at[ra].set(vfl.client_forward(models[k]["f_A"], x_a[ra], ecfg))
+            if len(rb):
+                h_b = h_b.at[rb].set(vfl.client_forward(models[k]["f_B"], x_b[rb], ecfg))
+        loss, g_srv, g_ha, g_hb = vfl.server_forward_backward(
+            server_gmv, h_a, h_b, jnp.asarray(batch.y), kind)
+        server_gmv = _sgd(server_gmv, g_srv, lr)
+        for k in range(len(clients)):
+            ra = np.nonzero(batch.owner_a == k)[0]
+            rb = np.nonzero(batch.owner_b == k)[0]
+            if len(ra):
+                g_enc = vfl.client_backward(models[k]["f_A"], x_a[ra], g_ha[ra], ecfg)
+                models[k]["f_A"] = _sgd(models[k]["f_A"], g_enc, lr)
+            if len(rb):
+                g_enc = vfl.client_backward(models[k]["f_B"], x_b[rb], g_hb[rb], ecfg)
+                models[k]["f_B"] = _sgd(models[k]["f_B"], g_enc, lr)
+        losses.append(float(loss))
+    logs["loss_vfl"] = float(np.mean(losses))
+
+    # phase 3: per-client paired SGD
+    losses = []
+    for k, cd in enumerate(clients):
+        if not cd.has_paired:
+            continue
+        x_a = jnp.asarray(cd.paired_a.x)
+        x_b = jnp.asarray(cd.paired_b.x)
+        y = jnp.asarray(cd.paired_a.y)
+        f_a, f_b, g_m = models[k]["f_A"], models[k]["f_B"], models[k]["g_M"]
+
+        def loss_fn(fa, fb, gm):
+            h_a = encoder_apply(fa, x_a, ecfg)
+            h_b = encoder_apply(fb, x_b, ecfg)
+            return task_loss(fusion_apply(gm, h_a, h_b), y, kind)
+
+        loss, (gfa, gfb, ggm) = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(
+            f_a, f_b, g_m)
+        models[k]["f_A"] = _sgd(f_a, gfa, lr)
+        models[k]["f_B"] = _sgd(f_b, gfb, lr)
+        models[k]["g_M"] = _sgd(g_m, ggm, lr)
+        losses.append(float(loss))
+    logs["loss_paired"] = float(np.mean(losses))
+
+    # phase 4: BlendAvg with real AUROC scoring (seed federation._aggregate)
+    for mod in ("A", "B"):
+        x_val = val.x_a if mod == "A" else val.x_b
+        cands = [{"f": m[f"f_{mod}"], "g": m[f"g_{mod}"]} for m in models]
+        glob = {"f": global_models[f"f_{mod}"], "g": global_models[f"g_{mod}"]}
+        ev = lambda m: eval_unimodal(m["f"], m["g"], x_val, val.y, ecfg, kind, metric)
+        blended, inf = blendavg(glob, cands, ev)
+        logs[f"omega_{mod}"] = inf["omega"]
+        global_models[f"f_{mod}"] = blended["f"]
+        global_models[f"g_{mod}"] = blended["g"]
+    cands = [m["g_M"] for m in models] + [server_gmv]
+    f_a, f_b = global_models["f_A"], global_models["f_B"]
+    ev = lambda gm: eval_multimodal(f_a, f_b, gm, val.x_a, val.x_b, val.y,
+                                    ecfg, kind, metric)
+    blended, inf = blendavg(global_models["g_M"], cands, ev)
+    logs["omega_M"] = inf["omega"]
+    global_models["g_M"] = blended
+    for k in range(len(clients)):
+        for grp in ("f_A", "g_A", "f_B", "g_B", "g_M"):
+            models[k][grp] = jax.tree.map(jnp.copy, global_models[grp])
+    server_gmv = jax.tree.map(jnp.copy, global_models["g_M"])
+    return models, global_models, server_gmv, logs
+
+
+def test_engine_matches_legacy_loop(small_fed):
+    spec, tr, va, te, clients, ecfg = small_fed
+    lr = 5e-2
+    # batch_size > any client's row count -> exactly one full batch per
+    # phase, so shuffling cannot reorder the legacy/engine math
+    cfg = FedConfig(n_clients=2, rounds=1, lr=lr, batch_size=512, seed=0)
+    fed = Federation.init(jax.random.PRNGKey(7), cfg, spec, ecfg, clients, va)
+
+    base = init_client_models(jax.random.PRNGKey(7), spec, ecfg)
+    ref_models = [jax.tree.map(jnp.copy, base) for _ in clients]
+    ref_global = jax.tree.map(jnp.copy, base)
+    ref_gmv = jax.tree.map(jnp.copy, base["g_M"])
+
+    logs = fed.round()
+    ref_models, ref_global, ref_gmv, ref_logs = _legacy_round(
+        ref_models, ref_global, ref_gmv, clients, va, ecfg, spec.kind, lr)
+
+    for k in ("loss_partial", "loss_vfl", "loss_paired"):
+        np.testing.assert_allclose(logs[k], ref_logs[k], rtol=2e-4, atol=1e-5)
+    for mod in ("A", "B", "M"):
+        np.testing.assert_allclose(np.asarray(logs[f"omega_{mod}"]),
+                                   np.asarray(ref_logs[f"omega_{mod}"]),
+                                   rtol=1e-3, atol=1e-4)
+    for grp in ("f_A", "g_A", "f_B", "g_B", "g_M"):
+        for a, b in zip(jax.tree.leaves(fed.global_models[grp]),
+                        jax.tree.leaves(ref_global[grp])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-4, atol=5e-5)
+
+
+# ------------------------------------------------------ optimizer + cache --
+
+def test_adamw_rounds_converge(small_fed):
+    spec, tr, va, te, clients, ecfg = small_fed
+    cfg = FedConfig(n_clients=2, rounds=5, lr=3e-3, batch_size=64,
+                    optimizer="adamw", weight_decay=1e-4, seed=0)
+    fed = Federation.init(jax.random.PRNGKey(0), cfg, spec, ecfg, clients, va)
+    # stacked AdamW moments thread through rounds, one row per client
+    assert "mu" in fed.opt_state
+    for leaf in jax.tree.leaves(fed.opt_state["mu"]):
+        assert leaf.shape[0] == cfg.n_clients
+    hist = fed.fit()
+    first = hist[0]["loss_partial"] + hist[0]["loss_paired"]
+    last = hist[-1]["loss_partial"] + hist[-1]["loss_paired"]
+    assert np.isfinite(last)
+    assert last < first
+
+
+def test_cosine_schedule_runs(small_fed):
+    spec, tr, va, te, clients, ecfg = small_fed
+    cfg = FedConfig(n_clients=2, rounds=2, lr=1e-2, batch_size=64,
+                    schedule="cosine", seed=0)
+    fed = Federation.init(jax.random.PRNGKey(0), cfg, spec, ecfg, clients, va)
+    hist = fed.fit()
+    assert np.isfinite(hist[-1]["loss_partial"])
+
+
+def test_one_compile_per_phase_regardless_of_client_count(small_fed):
+    """The acceptance criterion: the unimodal step compiles ONCE per
+    federation — cache entries don't grow with n_clients (stacked C axis),
+    with modality (both trained in the same program), or with rounds
+    (per-batch work lives inside a lax.scan, no per-batch retraces)."""
+    spec, tr, va, te, clients2, ecfg = small_fed
+    clients4 = partition(tr, 4, frac_paired=0.6, frac_fragmented=0.3,
+                         frac_partial=0.1, seed=4)
+    for n_clients, clients in ((2, clients2), (4, clients4)):
+        cfg = FedConfig(n_clients=n_clients, rounds=2, lr=1e-2, batch_size=32,
+                        seed=0)
+        fed = Federation.init(jax.random.PRNGKey(0), cfg, spec, ecfg, clients, va)
+        fed.fit()
+        assert fed.engine.unimodal_phase._cache_size() == 1
+        assert fed.engine.paired_phase._cache_size() == 1
+        assert fed.engine.vfl_phase._cache_size() == 1
+
+
+# ------------------------------------------------- aggregation edge cases --
+
+def test_fedavg_zero_overlap_excludes_server_head(small_fed):
+    """No fragmented overlap -> the untrained server head must get weight
+    ZERO (the seed code silently floored it to 1 sample)."""
+    spec, tr, va, te, _, ecfg = small_fed
+    clients = partition(tr, 2, frac_paired=0.7, frac_fragmented=0.0,
+                        frac_partial=0.3, seed=5)
+    cfg = FedConfig(n_clients=2, rounds=1, lr=1e-2, batch_size=512,
+                    aggregator="fedavg", seed=0)
+    fed = Federation.init(jax.random.PRNGKey(1), cfg, spec, ecfg, clients, va)
+    # snapshot client g_M heads right before aggregation
+    fed._unimodal_phase()
+    fed._vfl_phase()
+    fed._paired_phase()
+    pre = [jax.tree.map(jnp.copy, m["g_M"]) for m in fed.models]
+    fed._aggregate()
+    ns = np.array([len(cd.paired_a) for cd in clients], np.float64)
+    w = ns / ns.sum()
+    expected = jax.tree.map(lambda a, b: w[0] * a + w[1] * b, pre[0], pre[1])
+    for got, want in zip(jax.tree.leaves(fed.global_models["g_M"]),
+                         jax.tree.leaves(expected)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_blend_impls_agree():
+    """The Pallas kernel (in-host) and the all-reduce-lowerable reduction
+    (SPMD) must compute the same Eq. 11 blend."""
+    ecfg = EncoderConfig(d_hidden=8, n_layers=1)
+    rng = np.random.default_rng(0)
+    stacked = {"w": jnp.asarray(rng.normal(0, 1, (5, 17)).astype(np.float32)),
+               "b": jnp.asarray(rng.normal(0, 1, (5, 3, 4)).astype(np.float32))}
+    omega = jnp.asarray([0.1, 0.0, 0.4, 0.5, 0.0])
+    outs = {}
+    for impl in ("pallas", "reduce"):
+        fns = make_phase_fns(EngineConfig(ecfg=ecfg, kind="binary", blend=impl))
+        outs[impl] = fns.blend_stacked(stacked, omega)
+    for k in stacked:
+        np.testing.assert_allclose(np.asarray(outs["pallas"][k]),
+                                   np.asarray(outs["reduce"][k]),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_fedavg_all_zero_weights_keeps_global():
+    """Engine-level: zero total weight must keep the previous global model
+    instead of dividing by a silent floor."""
+    cfg = EngineConfig(ecfg=EncoderConfig(d_hidden=8, n_layers=1), kind="binary")
+    fns = make_phase_fns(cfg)
+    glob = {"w": jnp.full((4,), 7.0)}
+    cands = {"w": jnp.stack([jnp.zeros(4), jnp.ones(4)])}
+    out = fns.fedavg_update(glob, cands, jnp.zeros(2))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.full(4, 7.0))
+    out2 = fns.fedavg_update(glob, cands, jnp.asarray([0.0, 2.0]))
+    np.testing.assert_allclose(np.asarray(out2["w"]), np.ones(4), rtol=1e-6)

@@ -3,7 +3,9 @@
 The sharded round is the dry-run's distribution entry; here we verify its
 MATH matches the paper's aggregation semantics when run unsharded (the
 SPMD program is identical math on 1 or 512 devices — that's the point of
-SPMD)."""
+SPMD). Since the refactor it is also a consumer of the shared
+``repro.core.engine`` phase functions, so these tests double as engine
+coverage for the mask-free (uniform-rows) layout."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,17 +14,13 @@ import pytest
 from repro.core.federation_sharded import (
     ShardedFedSpec,
     batch_specs,
+    init_round_state,
     init_stacked_models,
     make_blendfl_round,
 )
 
 
-@pytest.fixture(scope="module")
-def small():
-    spec = ShardedFedSpec(n_clients=4, d_hidden=32, n_layers=2, seq_a=8, feat_a=6,
-                          seq_b=8, feat_b=6, out_dim=5, n_partial=32, n_frag=32,
-                          n_paired=32, n_val=64, lr=5e-2)
-    rng = np.random.default_rng(0)
+def _make_batch(spec, rng):
     batch = {}
     for k, sd in batch_specs(spec).items():
         if k == "perm_b":
@@ -34,25 +32,50 @@ def small():
             # class-conditional-ish signal so training reduces the loss
             base = rng.normal(0, 1, sd.shape).astype(np.float32)
             batch[k] = jnp.asarray(base)
-    return spec, batch
+    return batch
+
+
+@pytest.fixture(scope="module")
+def small():
+    spec = ShardedFedSpec(n_clients=4, d_hidden=32, n_layers=2, seq_a=8, feat_a=6,
+                          seq_b=8, feat_b=6, out_dim=5, n_partial=32, n_frag=32,
+                          n_paired=32, n_val=64, lr=5e-2)
+    return spec, _make_batch(spec, np.random.default_rng(0))
 
 
 def test_round_runs_and_losses_finite(small):
     spec, batch = small
-    stacked, gmv, gm = init_stacked_models(jax.random.PRNGKey(0), spec)
+    state = init_round_state(jax.random.PRNGKey(0), spec)
     rf = jax.jit(make_blendfl_round(spec))
-    stacked, gmv, gm, m = rf(stacked, gmv, gm, batch)
+    state, m = rf(state, batch)
     for k in ("loss_uni", "loss_vfl", "loss_paired"):
         assert np.isfinite(float(m[k]))
 
 
 def test_loss_decreases_over_rounds(small):
     spec, batch = small
-    stacked, gmv, gm = init_stacked_models(jax.random.PRNGKey(0), spec)
+    state = init_round_state(jax.random.PRNGKey(0), spec)
     rf = jax.jit(make_blendfl_round(spec))
     losses = []
     for _ in range(6):
-        stacked, gmv, gm, m = rf(stacked, gmv, gm, batch)
+        state, m = rf(state, batch)
+        losses.append(float(m["loss_uni"]) + float(m["loss_vfl"])
+                      + float(m["loss_paired"]))
+    assert losses[-1] < losses[0]
+
+
+def test_adamw_round_decreases_loss(small):
+    spec, batch = small
+    spec = ShardedFedSpec(**{**spec.__dict__, "optimizer": "adamw", "lr": 1e-2})
+    state = init_round_state(jax.random.PRNGKey(0), spec)
+    # per-client AdamW moments live inside the state dict, stacked over C
+    assert "mu" in state["opt"]
+    for leaf in jax.tree.leaves(state["opt"]["mu"]):
+        assert leaf.shape[0] == spec.n_clients
+    rf = jax.jit(make_blendfl_round(spec))
+    losses = []
+    for _ in range(5):
+        state, m = rf(state, batch)
         losses.append(float(m["loss_uni"]) + float(m["loss_vfl"])
                       + float(m["loss_paired"]))
     assert losses[-1] < losses[0]
@@ -60,9 +83,9 @@ def test_loss_decreases_over_rounds(small):
 
 def test_omega_is_simplex_or_zero(small):
     spec, batch = small
-    stacked, gmv, gm = init_stacked_models(jax.random.PRNGKey(0), spec)
+    state = init_round_state(jax.random.PRNGKey(0), spec)
     rf = jax.jit(make_blendfl_round(spec))
-    _, _, _, m = rf(stacked, gmv, gm, batch)
+    _, m = rf(state, batch)
     for key in ("omega_A", "omega_B", "omega_M"):
         w = np.asarray(m[key])
         assert (w >= 0).all()
@@ -71,15 +94,27 @@ def test_omega_is_simplex_or_zero(small):
 
 def test_broadcast_resets_all_clients_to_blend(small):
     spec, batch = small
-    stacked, gmv, gm = init_stacked_models(jax.random.PRNGKey(0), spec)
+    state = init_round_state(jax.random.PRNGKey(0), spec)
     rf = jax.jit(make_blendfl_round(spec))
-    stacked, gmv, gm, _ = rf(stacked, gmv, gm, batch)
+    state, _ = rf(state, batch)
     for grp in ("f_A", "g_A", "g_M"):
-        for leaf, gleaf in zip(jax.tree.leaves(stacked[grp]),
-                               jax.tree.leaves(gm[grp])):
+        for leaf, gleaf in zip(jax.tree.leaves(state["models"][grp]),
+                               jax.tree.leaves(state["global_models"][grp])):
             for c in range(spec.n_clients):
                 np.testing.assert_allclose(np.asarray(leaf[c]), np.asarray(gleaf),
                                            rtol=1e-6, atol=1e-7)
+
+
+def test_init_stacked_models_back_compat():
+    spec = ShardedFedSpec(n_clients=2, d_hidden=16, n_layers=1, seq_a=4, feat_a=3,
+                          seq_b=4, feat_b=3, out_dim=2, n_partial=8, n_frag=8,
+                          n_paired=8, n_val=16)
+    stacked, gmv, gm = init_stacked_models(jax.random.PRNGKey(0), spec)
+    for leaf in jax.tree.leaves(stacked):
+        assert leaf.shape[0] == spec.n_clients
+    state = init_round_state(jax.random.PRNGKey(0), spec)
+    for a, b in zip(jax.tree.leaves(state["models"]), jax.tree.leaves(stacked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_vfl_alignment_gather_grads():
@@ -96,9 +131,9 @@ def test_vfl_alignment_gather_grads():
             batch[k] = jnp.asarray((rng.random(sd.shape) < 0.5).astype(np.float32))
         else:
             batch[k] = jnp.asarray(rng.normal(0, 1, sd.shape).astype(np.float32))
-    stacked, gmv, gm = init_stacked_models(jax.random.PRNGKey(0), spec)
+    state = init_round_state(jax.random.PRNGKey(0), spec)
     rf = jax.jit(make_blendfl_round(spec))
-    _, _, _, m_id = rf(stacked, gmv, gm, batch)
+    _, m_id = rf(state, batch)
 
     # shuffle b-side rows and pass the inverse permutation: same math
     perm = rng.permutation(spec.n_clients * spec.n_frag)
@@ -108,6 +143,6 @@ def test_vfl_alignment_gather_grads():
     inv = np.argsort(perm)
     # gathered h_b rows are aligned via perm_b: h_b_shuffled[inv] == h_b
     batch2["perm_b"] = jnp.asarray(inv.astype(np.int32))
-    _, _, _, m_perm = rf(stacked, gmv, gm, batch2)
+    _, m_perm = rf(state, batch2)
     np.testing.assert_allclose(float(m_id["loss_vfl"]), float(m_perm["loss_vfl"]),
-                               rtol=1e-5)
+                               rtol=5e-5)
