@@ -1,0 +1,15 @@
+# Test lanes. `test` (the full suite) is the tier-1 gate; `test-fast`
+# skips the @pytest.mark.slow convergence/parity tests so the local
+# verify loop stays under ~90 s.
+PYTEST = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -q
+
+.PHONY: test test-fast bench-sampled
+
+test:
+	$(PYTEST)
+
+test-fast:
+	$(PYTEST) -m "not slow"
+
+bench-sampled:
+	PYTHONPATH=src python -m benchmarks.sampled_round_bench

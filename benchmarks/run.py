@@ -30,8 +30,8 @@ def run_inference_bench(quick: bool = False) -> None:
         local_predict(m, req, ecfg, kind)[0]), n=10)
     t_server = timeit(lambda: jax.block_until_ready(
         vfl_server_inference(m, fed.server_gmv, req, ecfg, kind)[0]), n=10)
-    c_local = communication_cost(32, ecfg.d_hidden, "decentralized")
-    c_server = communication_cost(32, ecfg.d_hidden, "vfl")
+    c_local = communication_cost(32, ecfg.d_hidden, "decentralized", fed.spec.out_dim)
+    c_server = communication_cost(32, ecfg.d_hidden, "vfl", fed.spec.out_dim)
     print(f"{'mode':16s} {'us_per_batch':>12s} {'net_msgs':>9s} {'net_bytes':>10s}")
     print(f"{'decentralized':16s} {t_local:12.0f} {c_local['messages']:9d} "
           f"{c_local['bytes']:10d}")

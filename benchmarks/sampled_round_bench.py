@@ -1,0 +1,91 @@
+"""§Sampled rounds: per-round wall time scales with K, not C.
+
+A K-of-C sampled round gathers the K sampled clients' rows of every
+stacked model/opt/batch leaf and runs the same compiled phase programs at
+leading axis K — so its per-round cost should track K while full
+participation tracks C. Measures, at C = 16 in-host clients:
+
+  - wall-clock per round at full participation (K = C) and at
+    K ∈ {8, 4}, same data, same engine config;
+  - the compile-cache size of each phase after 3 sampled rounds over
+    DIFFERENT subsets (must stay 1 — sampled ids are data, not shape).
+
+Emits ``BENCH_sampled_round.json`` next to the other results. The
+acceptance target: K=4 per-round time ≤ ~40% of the full round.
+
+    PYTHONPATH=src python -m benchmarks.sampled_round_bench [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _make_fed(n_sampled: int, quick: bool):
+    from repro.core.encoders import EncoderConfig
+    from repro.core.federation import FedConfig, Federation
+    from repro.core.partitioner import partition
+    from repro.data.synthetic import make_task, train_val_test
+
+    spec = make_task("smnist")
+    # enough rows/width that the training phases (the part that scales
+    # with K) dominate the fixed per-round aggregation cost, as they do
+    # at production scale
+    n_train = 3200 if quick else 6400
+    tr, va, _ = train_val_test(spec, n_train, 200, 100, seed=0)
+    clients = partition(tr, 16, seed=1)
+    ecfg = EncoderConfig(d_hidden=64, n_layers=2, enc_type="mlp")
+    cfg = FedConfig(n_clients=16, rounds=8, lr=1e-2, batch_size=64, seed=0,
+                    n_sampled=n_sampled, async_mode=bool(n_sampled))
+    return Federation.init(jax.random.PRNGKey(0), cfg, spec, ecfg, clients, va)
+
+
+def _bench_one(n_sampled: int, quick: bool) -> dict:
+    fed = _make_fed(n_sampled, quick)
+    reps = 3 if quick else 6
+    fed.round()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fed.round()
+    dt = (time.perf_counter() - t0) / reps
+    return {
+        "K": n_sampled or 16,
+        "mode": "sampled" if n_sampled else "full",
+        "s_per_round": round(dt, 4),
+        "caches": [int(fed.engine.unimodal_phase._cache_size()),
+                   int(fed.engine.vfl_phase._cache_size()),
+                   int(fed.engine.paired_phase._cache_size())],
+    }
+
+
+def main(quick: bool = False) -> None:
+    print("\n=== sampled rounds: per-round time scales with K, not C=16 ===")
+    records = [_bench_one(k, quick) for k in (0, 8, 4)]
+    t_full = records[0]["s_per_round"]
+    print(f"{'K':>3s} {'mode':>8s} {'s_per_round':>12s} {'vs_full':>8s} {'caches':>9s}")
+    for r in records:
+        r["frac_of_full"] = round(r["s_per_round"] / max(t_full, 1e-9), 3)
+        print(f"{r['K']:3d} {r['mode']:>8s} {r['s_per_round']:12.3f} "
+              f"{r['frac_of_full']:8.2f} {str(r['caches']):>9s}")
+        assert r["caches"] == [1, 1, 1], \
+            "sampled rounds must reuse the one compiled program per phase"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out = os.path.join(RESULTS_DIR, "BENCH_sampled_round.json")
+    with open(out, "w") as f:
+        json.dump({"bench": "sampled_round", "backend": jax.default_backend(),
+                   "n_clients": 16, "records": records}, f, indent=2)
+    k4 = records[-1]["frac_of_full"]
+    print(f"--> K=4 round at {k4:.0%} of the full-participation round; wrote {out}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

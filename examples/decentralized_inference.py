@@ -42,7 +42,7 @@ def main() -> None:
         jax.block_until_ready(scores)
         dt = (time.perf_counter() - t0) * 1e3
         print(f"  {label:22s} -> {mode:12s} auroc={auroc(y, np.asarray(scores)):.3f} "
-              f"{dt:6.1f} ms, {communication_cost(64, ecfg.d_hidden, 'decentralized')}")
+              f"{dt:6.1f} ms, {communication_cost(64, ecfg.d_hidden, 'decentralized', spec.out_dim)}")
 
     print("\n-- conventional VFL serving (server required, both modalities) --")
     req = InferenceRequest(test.x_a[:64], test.x_b[:64])
@@ -51,7 +51,7 @@ def main() -> None:
     jax.block_until_ready(scores)
     dt = (time.perf_counter() - t0) * 1e3
     print(f"  both modalities        -> server       auroc={auroc(test.y[:64], np.asarray(scores)):.3f} "
-          f"{dt:6.1f} ms, {communication_cost(64, ecfg.d_hidden, 'vfl')}")
+          f"{dt:6.1f} ms, {communication_cost(64, ecfg.d_hidden, 'vfl', spec.out_dim)}")
     print("\nconventional VFL cannot serve the unimodal requests at all — "
           "and every request costs a server round-trip.")
 

@@ -26,15 +26,27 @@ from repro.common.tree import tree_stack
 from repro.kernels.blendavg.ops import blend_params
 
 
-def blendavg_weights(scores: Sequence[float], global_score: float) -> np.ndarray:
+def blendavg_weights(scores: Sequence[float], global_score: float,
+                     staleness: Sequence[float] | None = None,
+                     staleness_exp: float = 0.5) -> np.ndarray:
     """Eq. 9-10: masked, normalized improvement weights. Zero vector if no
-    candidate improves on the global model."""
+    candidate improves on the global model.
+
+    ``staleness`` (per-candidate, rounds since the candidate's base global
+    model was current) damps improvements by (1 + s)^-``staleness_exp``
+    before normalization — the async BlendAvg used for partial-
+    participation rounds. Candidates that did not finish should arrive
+    with score -inf (or NaN), masking them like any non-improver.
+    """
     deltas = np.asarray(scores, np.float64) - float(global_score)
     deltas = np.where(np.isnan(deltas), -np.inf, deltas)
     mask = deltas > 0
     if not mask.any():
         return np.zeros(len(deltas), np.float64)
     w = np.where(mask, deltas, 0.0)
+    if staleness is not None and staleness_exp:
+        s = np.maximum(np.asarray(staleness, np.float64), 0.0)
+        w = w * (1.0 + s) ** (-staleness_exp)
     return w / w.sum()
 
 
@@ -73,11 +85,23 @@ def blendavg(
 
 
 def fedavg(candidates: Sequence, n_samples: Sequence[int] | None = None):
-    """FedAvg baseline: data-volume (or uniform) weighted average."""
+    """FedAvg baseline: data-volume (or uniform) weighted average.
+
+    All-zero ``n_samples`` is an error: no candidate holds data, so there
+    is nothing to average — blending would silently return an all-zero
+    model. Callers that can legitimately hit this (e.g. a zero-overlap
+    federation) must keep the previous global model instead, exactly what
+    ``engine.fedavg_update`` does with its explicit keep-global branch.
+    """
     l = len(candidates)
     if n_samples is None:
         w = np.full(l, 1.0 / l)
     else:
         tot = float(sum(n_samples))
-        w = np.asarray(n_samples, np.float64) / max(tot, 1.0)
+        if tot <= 0:
+            raise ValueError(
+                "fedavg: all candidate sample counts are zero — nothing to "
+                "average; keep the previous global model instead (see "
+                "engine.fedavg_update)")
+        w = np.asarray(n_samples, np.float64) / tot
     return blend_trees(candidates, w)

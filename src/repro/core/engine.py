@@ -31,6 +31,25 @@ stacked pytree too — per-client first/second moments shard and thread
 through rounds alongside the params; BlendAvg broadcast replaces client
 *weights* while each client keeps its own moments (standard stateful-FL
 practice; with plain SGD this is exactly the paper's algorithm).
+
+Partial participation rides on the same stacked representation:
+
+    K-of-C sampling   ``sample_clients`` / ``scatter_clients`` gather K
+                      sampled rows of every stacked leaf into (K, ...)
+                      trees (``sample_opt_state`` / ``scatter_opt_state``
+                      for the optimizer pytrees, whose ``step`` counter is
+                      shared). The phase functions are rank-polymorphic in
+                      the leading axis, so a federation that always
+                      gathers a fixed K keeps the one-compile-per-phase
+                      property — the sampled *indices* are data, not
+                      shape.
+    async BlendAvg    ``blendavg_update`` takes optional per-candidate
+                      ``staleness`` (rounds since the candidate's base
+                      global model was current; omegas are damped by
+                      (1+s)^-``EngineConfig.staleness_exp``) and
+                      ``finished`` flags (unfinished clients are masked
+                      out of Eq. 9-10 exactly like empty batches are
+                      masked out of the training phases).
 """
 from __future__ import annotations
 
@@ -74,6 +93,10 @@ class EngineConfig:
     # once per minibatch, so under a schedule it needs its own (shorter)
     # horizon. 0 = share total_steps (fine for constant lr).
     server_total_steps: int = 0
+    # Async aggregation: omega damping exponent a in (1 + staleness)^-a,
+    # applied when a staleness vector is passed to blendavg_update. 0
+    # disables damping (stale candidates count at face value).
+    staleness_exp: float = 0.5
     # Eq. 11 implementation. "pallas": the fused single-pass blend_params
     # kernel (interpret/ref path off-TPU) — right for in-host clients where
     # the stacked models live on one device. "reduce": plain weighted
@@ -167,6 +190,46 @@ def stack_with(stacked_tree, extra_tree):
                         extra_tree)
 
 
+# --------------------------------------------- K-of-C client sampling ------
+
+def sample_clients(stacked_tree, idx):
+    """Gather the sampled clients' rows of every stacked leaf:
+    (C, ...) -> (K, ...). ``idx`` (K,) int is data, not shape — a fixed K
+    compiles once across different sampled subsets."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), stacked_tree)
+
+
+def scatter_clients(stacked_tree, sub_tree, idx):
+    """Inverse of ``sample_clients``: write K updated rows back into the
+    full stacked tree at the sampled positions."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return jax.tree.map(lambda full, s: full.at[idx].set(s.astype(full.dtype)),
+                        stacked_tree, sub_tree)
+
+
+def sample_opt_state(opt_state, idx):
+    """Gather an optimizer state's per-client moment pytrees down to the
+    sampled rows; the shared ``step`` counter (and any other non-stacked
+    entries) pass through untouched."""
+    out = dict(opt_state)
+    for f in _STATE_TREES:
+        if f in opt_state:
+            out[f] = sample_clients(opt_state[f], idx)
+    return out
+
+
+def scatter_opt_state(opt_state, sub_state, idx):
+    """Write a sampled round's optimizer state back: moment rows scatter
+    to the sampled positions, the shared ``step`` counter (advanced by the
+    sampled round) replaces the old one."""
+    out = dict(opt_state)
+    for k, v in sub_state.items():
+        out[k] = (scatter_clients(opt_state[k], v, idx)
+                  if k in _STATE_TREES else v)
+    return out
+
+
 # ------------------------------------------------------------- phase math --
 
 def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
@@ -224,8 +287,12 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
         batch: xa (C,Nfa,Sa,Fa) xb (C,Nfb,Sb,Fb); gather_a/gather_b (n,)
         index the flattened (C*Nf) latent rows into server alignment order
         (the PSI output); y (n,O); part_a/part_b (C,) bool participation.
-        All grads come from ONE joint vjp of the split loss — definitionally
-        identical to the upload/download exchange (see repro.core.vfl).
+        An optional row weight ``w`` (n,) masks aligned rows out of the
+        split loss — a K-of-C sampled round keeps the alignment's static
+        shape and zero-weights rows whose owner was not sampled, the same
+        trick the other phases use for empty batches. All grads come from
+        ONE joint vjp of the split loss — definitionally identical to the
+        upload/download exchange (see repro.core.vfl).
         """
         params = {k: models[k] for k in VFL_GROUPS}
 
@@ -235,7 +302,9 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
             h_a = h_a.reshape(-1, h_a.shape[-1])[batch["gather_a"]]
             h_b = h_b.reshape(-1, h_b.shape[-1])[batch["gather_b"]]
             rows = task_loss_rows(fusion_apply(gmv, h_a, h_b), batch["y"], kind)
-            return jnp.mean(rows)
+            if batch.get("w") is None:
+                return jnp.mean(rows)
+            return masked_mean(rows, batch["w"])[0]
 
         loss, (grads, g_srv) = jax.value_and_grad(joint, argnums=(0, 1))(
             params, server_gmv)
@@ -271,11 +340,26 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
 
     # ---- phase 4: BlendAvg aggregation + broadcast (lines 30-32) ----
 
-    def omega_from_scores(scores, global_score):
-        """Eq. 9-10 on device: masked, normalized improvement weights."""
+    def omega_from_scores(scores, global_score, staleness=None, finished=None):
+        """Eq. 9-10 on device: masked, normalized improvement weights.
+
+        Async extensions (both optional, both per-candidate vectors):
+        ``finished`` (bool) masks clients that have not delivered a
+        candidate this round — exactly like empty batches in the training
+        phases, they contribute weight zero. ``staleness`` (rounds since
+        the candidate's base global model was current) damps surviving
+        improvements by (1 + s)^-``cfg.staleness_exp`` before the Eq. 10
+        normalization, so a straggler's stale candidate counts less than
+        an equally-improving fresh one.
+        """
         delta = scores - global_score
         delta = jnp.where(jnp.isnan(delta), -jnp.inf, delta)
+        if finished is not None:
+            delta = jnp.where(finished, delta, -jnp.inf)
         w = jnp.where(delta > 0, delta, 0.0)
+        if staleness is not None and cfg.staleness_exp:
+            s = jnp.maximum(jnp.asarray(staleness, jnp.float32), 0.0)
+            w = w * (1.0 + s) ** (-cfg.staleness_exp)
         tot = jnp.sum(w)
         omega = jnp.where(tot > 0, w / jnp.maximum(tot, 1e-12), jnp.zeros_like(w))
         return omega, tot > 0
@@ -293,10 +377,14 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
             raise ValueError(f"unknown blend impl {cfg.blend!r}")
         return blend_params(stacked_tree, om)
 
-    def blendavg_update(global_tree, stacked_cands, scores, global_score):
+    def blendavg_update(global_tree, stacked_cands, scores, global_score,
+                        staleness=None, finished=None):
         """Full BlendAvg step: returns (new_global, omega, any_improved);
-        keeps the previous global model when nothing improves."""
-        omega, any_up = omega_from_scores(scores, global_score)
+        keeps the previous global model when nothing improves. Optional
+        ``staleness``/``finished`` vectors make it the async Eq. 9-11 (see
+        ``omega_from_scores``)."""
+        omega, any_up = omega_from_scores(scores, global_score, staleness,
+                                          finished)
         blended = blend_stacked(stacked_cands, omega)
         new = jax.tree.map(lambda b, g: jnp.where(any_up, b, g.astype(b.dtype)),
                            blended, global_tree)

@@ -30,6 +30,20 @@ constant or cosine schedule); per-client optimizer state is a stacked
 pytree threaded through rounds. On BlendAvg broadcast clients adopt the
 blended weights but keep their own moments (exact Algorithm 1 under plain
 SGD, standard stateful-FL practice under AdamW).
+
+Partial participation (``FedConfig.n_sampled`` = K > 0): each round a
+host-side RNG draws K of the C clients; their rows of the stacked
+models/opt-state/batches are gathered to (K, ...) trees (a static-shape
+``engine.sample_clients`` gather — the sampled *indices* are data, so the
+phase programs still compile exactly once), trained, and scattered back.
+The VFL alignment keeps its static row count; rows whose owner was not
+sampled get row weight 0. With ``FedConfig.async_mode`` the round is the
+staleness-weighted async variant: only participants receive the broadcast
+(stragglers keep stale weights, tracked by the per-client ``last_round``
+vector), and at aggregation a candidate trained from an s-rounds-old base
+has its Eq. 9-10 omega damped by (1+s)^-``staleness_exp``. Non-sampled
+clients are masked out of the blend entirely — exactly like empty batches
+in the training phases.
 """
 from __future__ import annotations
 
@@ -52,7 +66,16 @@ from repro.core.encoders import (
     init_client_models,
     task_scores,
 )
-from repro.core.engine import CLIENT_GROUPS, EngineConfig, RoundEngine, stack_with
+from repro.core.engine import (
+    CLIENT_GROUPS,
+    EngineConfig,
+    RoundEngine,
+    sample_clients,
+    sample_opt_state,
+    scatter_clients,
+    scatter_opt_state,
+    stack_with,
+)
 from repro.core.partitioner import ClientData, ModalView, fragmented_overlap
 from repro.data.synthetic import SyntheticMultimodal, TaskSpec
 from repro.metrics import auprc, auroc
@@ -79,6 +102,15 @@ class FedConfig:
     unimodal_data: str = "all"  # all | partial
     metric: str = "auroc"
     seed: int = 0
+    # Partial participation: K-of-C client sampling per round. 0 = full
+    # participation (every client trains every round).
+    n_sampled: int = 0
+    # Async rounds (requires n_sampled): only sampled clients receive the
+    # post-aggregation broadcast; the rest keep stale weights and their
+    # later candidates get staleness-damped omegas. False = synchronous
+    # partial participation (everyone syncs to the new global each round).
+    async_mode: bool = False
+    staleness_exp: float = 0.5  # omega damping (1+s)^-a; 0 disables
 
 
 # ------------------------------------------------------------- evaluation --
@@ -167,6 +199,11 @@ def _build_vfl_data(clients: list[ClientData], spec: TaskSpec):
     modality never arrived can't train, so encoding them in the VFL phase
     would be pure waste (the padded row count, and with it the phase's
     encoder FLOPs, scales with the overlap instead of the raw frag count).
+
+    Returns (device batch, host alignment metadata) — the metadata (numpy
+    gather indices + per-side padded row counts) lets a sampled round
+    remap the alignment onto the gathered K-client layout without
+    rebuilding or re-padding anything.
     """
     c = len(clients)
     overlap = fragmented_overlap(clients)
@@ -190,7 +227,7 @@ def _build_vfl_data(clients: list[ClientData], spec: TaskSpec):
     pos_b = np.nonzero(ids_b >= 0)[0]
     _, ia, ib = vfl.align_by_id(ids_a[pos_a], ids_b[pos_b])
     if len(ia) == 0:
-        return None
+        return None, None
     gather_a = pos_a[ia]
     gather_b = pos_b[ib]
     y = np.asarray(ya).reshape(c * nfa, -1)[gather_a]
@@ -198,10 +235,12 @@ def _build_vfl_data(clients: list[ClientData], spec: TaskSpec):
     part_b = np.zeros(c, bool)
     part_a[np.unique(gather_a // nfa)] = True
     part_b[np.unique(gather_b // nfb)] = True
-    return {"xa": xa, "xb": xb, "gather_a": jnp.asarray(gather_a, jnp.int32),
-            "gather_b": jnp.asarray(gather_b, jnp.int32),
-            "y": jnp.asarray(y), "part_a": jnp.asarray(part_a),
-            "part_b": jnp.asarray(part_b)}
+    batch = {"xa": xa, "xb": xb, "gather_a": jnp.asarray(gather_a, jnp.int32),
+             "gather_b": jnp.asarray(gather_b, jnp.int32),
+             "y": jnp.asarray(y), "part_a": jnp.asarray(part_a),
+             "part_b": jnp.asarray(part_b)}
+    host = {"gather_a": gather_a, "gather_b": gather_b, "nfa": nfa, "nfb": nfb}
+    return batch, host
 
 
 # -------------------------------------------------------------- federation --
@@ -223,6 +262,10 @@ class Federation:
     val: SyntheticMultimodal  # server-side representative validation set
     data: dict  # device-resident padded stacked batches per phase
     key: jax.Array  # PRNG for on-device batch shuffling
+    # partial-participation round state
+    host_rng: np.random.Generator = None  # host-side client-sampling RNG
+    last_round: np.ndarray = None  # (C,) round each client last synced
+    round_no: int = 0  # index of the NEXT round to run
 
     @property
     def models(self) -> list[dict]:
@@ -234,11 +277,19 @@ class Federation:
     @staticmethod
     def init(key, cfg: FedConfig, spec: TaskSpec, ecfg: EncoderConfig,
              clients: list, val: SyntheticMultimodal) -> "Federation":
+        if cfg.n_sampled < 0 or cfg.n_sampled > cfg.n_clients:
+            raise ValueError(
+                f"n_sampled={cfg.n_sampled} must be in [0, n_clients]")
+        if cfg.async_mode and not cfg.n_sampled:
+            raise ValueError("async_mode requires n_sampled > 0 (with full "
+                             "participation every candidate is fresh)")
         base = init_client_models(key, spec, ecfg)
+        vfl_batch, vfl_host = _build_vfl_data(clients, spec)
         data = {
             "uni": _build_unimodal_data(clients, cfg, spec),
             "paired": _build_paired_data(clients, cfg, spec),
-            "vfl": _build_vfl_data(clients, spec),
+            "vfl": vfl_batch,
+            "vfl_host": vfl_host,
             "val": {"x_a": jnp.asarray(val.x_a), "x_b": jnp.asarray(val.x_b)},
             # constant for the federation's lifetime; the server head's
             # FedAvg weight (Eq. 8 candidate) in _aggregate
@@ -255,7 +306,8 @@ class Federation:
                          total_steps=cfg.rounds * cfg.local_epochs * steps_per_epoch,
                          # the server head steps once per epoch (one
                          # full-batch VFL exchange), not once per minibatch
-                         server_total_steps=cfg.rounds * cfg.local_epochs),
+                         server_total_steps=cfg.rounds * cfg.local_epochs,
+                         staleness_exp=cfg.staleness_exp),
             cfg.batch_size)
         # all clients start from the same global init (standard FL practice)
         stacked = engine.fns.broadcast(base, cfg.n_clients)
@@ -266,6 +318,8 @@ class Federation:
             server_gmv=jax.tree.map(jnp.copy, base["g_M"]),
             srv_opt_state=engine.init_server_opt_state(base["g_M"]),
             val=val, data=data, key=jax.random.PRNGKey(cfg.seed),
+            host_rng=np.random.default_rng(cfg.seed),
+            last_round=np.full(cfg.n_clients, -1, np.int64),
         )
 
     def _next_key(self):
@@ -312,12 +366,15 @@ class Federation:
         return out
 
     def _blend_group(self, global_tree, stacked_cands, scores, global_score,
-                     fedavg_weights):
+                     fedavg_weights, staleness=None):
         """Shared BlendAvg/FedAvg dispatch; blend runs through the engine's
-        Pallas path. Returns (new_global, omega)."""
+        Pallas path. Returns (new_global, omega). ``staleness`` (per-
+        candidate, rounds the candidate's base global is behind) damps the
+        BlendAvg omegas — zero/None for synchronous rounds."""
         fns = self.engine.fns
         if self.cfg.aggregator == "blendavg":
-            omega = blendavg_weights(scores, global_score)
+            omega = blendavg_weights(scores, global_score, staleness=staleness,
+                                     staleness_exp=self.cfg.staleness_exp)
             if omega.sum() == 0:  # no improvement anywhere -> keep global
                 return global_tree, omega
             return fns.blend_stacked(stacked_cands, omega), omega
@@ -326,18 +383,33 @@ class Federation:
         tot = w.sum()
         return new, (w / tot if tot > 0 else w)
 
-    def _aggregate(self) -> dict:
+    def _aggregate(self, cand_stacked=None, idx=None) -> dict:
+        """Phase 4. Full participation: candidates are ``self.stacked``.
+        Sampled round: ``cand_stacked`` holds the K trained client trees
+        and ``idx`` the sampled client ids — only those clients compete in
+        the blend (non-finished clients are masked out entirely), and in
+        async mode their omegas are staleness-damped."""
         cfg, val, fns = self.cfg, self.val, self.engine.fns
         ecfg, kind, metric = self.ecfg, self.spec.kind, self.cfg.metric
         x_a, x_b = self.data["val"]["x_a"], self.data["val"]["x_b"]
         info = {}
 
+        if cand_stacked is None:
+            cand_stacked = self.stacked
+        sub_clients = (self.clients if idx is None
+                       else [self.clients[i] for i in idx])
+        stale = None
+        if idx is not None:
+            # rounds the candidate's base global model is behind; fresh
+            # participants (synced at the end of the previous round) are 0
+            stale = np.maximum(self.round_no - 1 - self.last_round[idx], 0)
+
         blend = cfg.aggregator == "blendavg"  # fedavg never reads scores
         for mod, x_val in (("A", x_a), ("B", x_b)):
-            present = [cd.has_a if mod == "A" else cd.has_b for cd in self.clients]
+            present = [cd.has_a if mod == "A" else cd.has_b for cd in sub_clients]
             if not any(present):
                 continue
-            cand = {"f": self.stacked[f"f_{mod}"], "g": self.stacked[f"g_{mod}"]}
+            cand = {"f": cand_stacked[f"f_{mod}"], "g": cand_stacked[f"g_{mod}"]}
             glob = {"f": self.global_models[f"f_{mod}"],
                     "g": self.global_models[f"g_{mod}"]}
             scores = gscore = None
@@ -347,15 +419,17 @@ class Federation:
                 gscore = eval_unimodal(glob["f"], glob["g"], x_val, val.y, ecfg,
                                        kind, metric)
             ns = None if blend else [cd.n_samples() if p else 0
-                                     for cd, p in zip(self.clients, present)]
-            blended, omega = self._blend_group(glob, cand, scores, gscore, ns)
+                                     for cd, p in zip(sub_clients, present)]
+            blended, omega = self._blend_group(glob, cand, scores, gscore, ns,
+                                               staleness=stale)
             info[f"omega_{mod}"] = omega
             self.global_models[f"f_{mod}"] = blended["f"]
             self.global_models[f"g_{mod}"] = blended["g"]
 
-        # multimodal: C client g_M heads + the server's g_M^v (Eq. 8)
-        present = [cd.has_paired for cd in self.clients] + [True]
-        cand = stack_with(self.stacked["g_M"], self.server_gmv)
+        # multimodal: participating client g_M heads + the server's g_M^v
+        # (Eq. 8); the server head trains every round, so it is never stale
+        present = [cd.has_paired for cd in sub_clients] + [True]
+        cand = stack_with(cand_stacked["g_M"], self.server_gmv)
         f_a, f_b = self.global_models["f_A"], self.global_models["f_B"]
         scores = gscore = None
         if blend:
@@ -368,30 +442,118 @@ class Federation:
         # floor; all-zero weights keep the previous global model).
         ns = None
         if not blend:
-            ns = [len(cd.paired_a) if cd.has_paired else 0 for cd in self.clients]
+            ns = [len(cd.paired_a) if cd.has_paired else 0 for cd in sub_clients]
             ns.append(self.data["n_overlap"])
+        stale_m = None if stale is None else np.append(stale, 0.0)
         blended, omega = self._blend_group(self.global_models["g_M"], cand,
-                                           scores, gscore, ns)
+                                           scores, gscore, ns, staleness=stale_m)
         info["omega_M"] = omega
         self.global_models["g_M"] = blended
 
         # LocalUpdate: broadcast blended models back (line 32). Clients keep
-        # their optimizer moments; only the weights are replaced.
-        self.stacked = dict(fns.broadcast(
-            {k: self.global_models[k] for k in CLIENT_GROUPS}, cfg.n_clients))
+        # their optimizer moments; only the weights are replaced. Async
+        # rounds broadcast to the participants only — stragglers keep their
+        # stale weights until they are next sampled.
+        glob_groups = {k: self.global_models[k] for k in CLIENT_GROUPS}
+        if idx is not None and cfg.async_mode:
+            self.stacked = dict(scatter_clients(
+                self.stacked, fns.broadcast(glob_groups, len(idx)), idx))
+            self.last_round[np.asarray(idx)] = self.round_no
+        else:
+            self.stacked = dict(fns.broadcast(glob_groups, cfg.n_clients))
+            self.last_round[:] = self.round_no
         self.server_gmv = jax.tree.map(jnp.asarray, self.global_models["g_M"])
         return info
+
+    # ---- K-of-C sampled round ----
+
+    def _sampled_vfl_batch(self, idx: np.ndarray):
+        """Remap the precomputed VFL alignment onto the gathered K-client
+        layout. The aligned row count stays STATIC — rows whose a- or
+        b-side owner was not sampled keep their slot with row weight 0
+        (and a harmless index 0), so the phase never retraces across
+        subsets. Returns None when no aligned row survives."""
+        if self.data["vfl"] is None:
+            return None
+        host, full = self.data["vfl_host"], self.data["vfl"]
+        nfa, nfb = host["nfa"], host["nfb"]
+        ga, gb = host["gather_a"], host["gather_b"]
+        k = len(idx)
+        pos = np.full(self.cfg.n_clients, -1)
+        pos[idx] = np.arange(k)
+        oa, ob = ga // nfa, gb // nfb
+        keep = (pos[oa] >= 0) & (pos[ob] >= 0)
+        if not keep.any():
+            return None
+        return {
+            "xa": sample_clients(full["xa"], idx),
+            "xb": sample_clients(full["xb"], idx),
+            "gather_a": jnp.asarray(np.where(keep, pos[oa] * nfa + ga % nfa, 0),
+                                    jnp.int32),
+            "gather_b": jnp.asarray(np.where(keep, pos[ob] * nfb + gb % nfb, 0),
+                                    jnp.int32),
+            "y": full["y"],
+            "w": jnp.asarray(keep.astype(np.float32)),
+            "part_a": jnp.asarray(np.bincount(pos[oa[keep]], minlength=k) > 0),
+            "part_b": jnp.asarray(np.bincount(pos[ob[keep]], minlength=k) > 0),
+        }
+
+    def _sampled_round(self) -> dict:
+        """Partial-participation round: gather the K sampled clients'
+        stacked rows, run the same compiled phase programs at leading axis
+        K, scatter optimizer state back, aggregate over the K candidates.
+        The sampled indices are data — fixed K means no retraces."""
+        k = self.cfg.n_sampled
+        idx = np.sort(self.host_rng.choice(self.cfg.n_clients, size=k,
+                                           replace=False))
+        idxd = jnp.asarray(idx, jnp.int32)
+        sub = sample_clients(self.stacked, idxd)
+        sub_opt = sample_opt_state(self.opt_state, idxd)
+        uni = sample_clients(self.data["uni"], idxd)
+        paired = (sample_clients(self.data["paired"], idxd)
+                  if self.data["paired"] is not None else None)
+        vfl_batch = self._sampled_vfl_batch(idx)
+
+        logs = {"sampled": idx}
+        for _ in range(self.cfg.local_epochs):
+            sub, sub_opt, loss = self.engine.unimodal_phase(
+                sub, sub_opt, uni, self._next_key())
+            logs["loss_partial"] = float(loss)
+            if vfl_batch is not None:
+                (sub, self.server_gmv, sub_opt, self.srv_opt_state,
+                 loss) = self.engine.vfl_phase(sub, self.server_gmv, sub_opt,
+                                               self.srv_opt_state, vfl_batch)
+                logs["loss_vfl"] = float(loss)
+            else:
+                logs["loss_vfl"] = float("nan")
+            if paired is not None:
+                sub, sub_opt, loss = self.engine.paired_phase(
+                    sub, sub_opt, paired, self._next_key())
+                logs["loss_paired"] = float(loss)
+            else:
+                logs["loss_paired"] = float("nan")
+        # moments ride home with their clients; the trained weights only
+        # matter as aggregation candidates (broadcast decides what sticks)
+        self.opt_state = scatter_opt_state(self.opt_state, sub_opt, idxd)
+        logs.update(self._aggregate(cand_stacked=sub, idx=idx))
+        return logs
 
     # ---- round / fit ----
 
     def round(self) -> dict:
-        """One global training epoch (Algorithm 1 body)."""
+        """One global training epoch (Algorithm 1 body; the K-of-C sampled
+        variant when ``cfg.n_sampled`` is set)."""
+        if self.cfg.n_sampled:
+            logs = self._sampled_round()
+            self.round_no += 1
+            return logs
         logs = {}
         for _ in range(self.cfg.local_epochs):
             logs["loss_partial"] = self._unimodal_phase()
             logs["loss_vfl"] = self._vfl_phase()
             logs["loss_paired"] = self._paired_phase()
         logs.update(self._aggregate())
+        self.round_no += 1
         return logs
 
     def fit(self, eval_every: int = 0, eval_fn: Callable | None = None) -> list[dict]:

@@ -37,6 +37,18 @@ weighted reduction over the client axis so GSPMD lowers it to the masked
 all-reduce pictured above (a Pallas custom call has no partition rule and
 would force an all-gather of every client model).
 
+Partial participation (``ShardedFedSpec.n_sampled`` = K > 0): the round
+becomes the K-of-C sampled, staleness-weighted async round. The host (or
+an outer loop) draws K client ids into the ``sampled`` batch vector; the
+round gathers those rows of the stacked models/opt moments
+(``engine.sample_clients`` — a static-shape gather, so the round still
+compiles once across subsets), trains the phases at leading axis K,
+aggregates over the K candidates with omegas damped by each candidate's
+staleness (``round - 1 - last_round[sampled]`` — non-sampled clients are
+simply absent from the blend, masked like empty batches), and scatters
+the broadcast back to the participants only. ``last_round``/``round``
+int vectors thread through the state dict alongside the opt moments.
+
 Everything below is pure jnp under jit — sharding in_shardings do the
 distribution; no host round-trips inside a federated round.
 """
@@ -52,6 +64,10 @@ from repro.core.engine import (
     CLIENT_GROUPS,
     EngineConfig,
     make_phase_fns,
+    sample_clients,
+    sample_opt_state,
+    scatter_clients,
+    scatter_opt_state,
     stack_with,
 )
 
@@ -80,6 +96,16 @@ class ShardedFedSpec:
     lr: float = 1e-3
     optimizer: str = "sgd"  # sgd | adamw
     weight_decay: float = 0.0  # adamw only
+    schedule: str = "constant"  # constant | cosine
+    total_steps: int = 0  # client cosine horizon (optimizer steps)
+    # The server g_M^v head steps once per round, not once per client
+    # minibatch — under a schedule it needs its own horizon (threaded to
+    # EngineConfig.server_total_steps, which selects fns.srv_opt).
+    server_total_steps: int = 0
+    # Partial participation: K-of-C sampled async rounds. 0 = every
+    # client trains every round.
+    n_sampled: int = 0
+    staleness_exp: float = 0.5  # async omega damping (1+s)^-a
     # "reduce" so the blend lowers to the masked all-reduce over the
     # sharded client axis (a Pallas custom call would force an all-gather
     # of every client model — see EngineConfig.blend).
@@ -91,10 +117,18 @@ class ShardedFedSpec:
                              enc_type="mlp")
 
     @property
+    def k_round(self) -> int:
+        """Clients that train per round (leading axis of the batch)."""
+        return self.n_sampled or self.n_clients
+
+    @property
     def engine_cfg(self) -> EngineConfig:
         return EngineConfig(ecfg=self.ecfg, kind=self.kind,
                             optimizer=self.optimizer, lr=self.lr,
-                            weight_decay=self.weight_decay, blend=self.blend)
+                            weight_decay=self.weight_decay,
+                            schedule=self.schedule, total_steps=self.total_steps,
+                            server_total_steps=self.server_total_steps,
+                            staleness_exp=self.staleness_exp, blend=self.blend)
 
 
 def init_stacked_models(key, spec: ShardedFedSpec):
@@ -115,7 +149,12 @@ def init_stacked_models(key, spec: ShardedFedSpec):
 
 def init_round_state(key, spec: ShardedFedSpec) -> dict:
     """Full round-state pytree: stacked models + global/server models +
-    stacked optimizer state. This is what ``make_blendfl_round`` threads."""
+    stacked optimizer state + the async round bookkeeping (``round``
+    counter and per-client ``last_round`` sync vector). This is what
+    ``make_blendfl_round`` threads. The server head's state comes from
+    ``fns.srv_opt`` — the optimizer with the server's own schedule horizon
+    (``server_total_steps``), not the clients' — so the threaded schedule
+    state matches the optimizer that consumes it in ``vfl_step``."""
     stacked, server_gmv, global_models = init_stacked_models(key, spec)
     fns = make_phase_fns(spec.engine_cfg)
     return {
@@ -123,26 +162,40 @@ def init_round_state(key, spec: ShardedFedSpec) -> dict:
         "server_gmv": server_gmv,
         "global_models": global_models,
         "opt": fns.opt.init({k: stacked[k] for k in CLIENT_GROUPS}),
-        "srv_opt": fns.opt.init(server_gmv),
+        "srv_opt": fns.srv_opt.init(server_gmv),
+        "last_round": jnp.full((spec.n_clients,), -1, jnp.int32),
+        "round": jnp.zeros((), jnp.int32),
     }
 
 
 def make_blendfl_round(spec: ShardedFedSpec):
     """Returns round_fn(state, batch) -> (state', metrics).
 
-    state: see ``init_round_state``. batch keys (leading C = client axis
-    unless noted):
-      partial_a (C,Np,Sa,Fa)  partial_ya (C,Np,O)   partial_b / _yb
-      frag_a    (C,Nf,Sa,Fa)  frag_y    (C,Nf,O)    frag_b (C,Nf,Sb,Fb)
-      perm_b    (C*Nf,) int32 global alignment: row i of gathered h_a
+    state: see ``init_round_state``. batch keys (leading K = per-round
+    client axis, = C at full participation, unless noted):
+      partial_a (K,Np,Sa,Fa)  partial_ya (K,Np,O)   partial_b / _yb
+      frag_a    (K,Nf,Sa,Fa)  frag_y    (K,Nf,O)    frag_b (K,Nf,Sb,Fb)
+      perm_b    (K*Nf,) int32 global alignment: row i of gathered h_a
                 pairs with row perm_b[i] of gathered h_b (the PSI output)
+      sampled   (K,) int32 sampled client ids [n_sampled > 0 only]
       val_a (Nv,Sa,Fa) val_b (Nv,Sb,Fb) val_y (Nv,O)   [replicated]
+
+    With ``spec.n_sampled`` set, the round gathers the sampled rows of the
+    stacked models/opt moments, trains at leading axis K, damps each
+    candidate's omega by its staleness, and scatters the broadcast back to
+    the participants only (async: non-sampled clients keep stale weights
+    and are absent from the blend). The sampled ids are DATA — the round
+    compiles once across different subsets of the same K. Like every
+    gather index under jit (``perm_b`` included), ids must lie in
+    [0, n_clients): out-of-range values clamp silently instead of
+    raising, so validate on the host when ids come from untrusted input.
     """
     fns = make_phase_fns(spec.engine_cfg)
-    C = spec.n_clients
+    K = spec.k_round
 
-    def aggregate(models, server_gmv, global_models, batch):
-        """Phase 4 on device: -val-loss scores, then the shared BlendAvg."""
+    def aggregate(models, server_gmv, global_models, batch, staleness):
+        """Phase 4 on device: -val-loss scores, then the shared (async)
+        BlendAvg over the K participating candidates."""
         val_a, val_b, val_y = batch["val_a"], batch["val_b"], batch["val_y"]
         if spec.n_val_score and spec.n_val_score < spec.n_val:
             val_a = val_a[: spec.n_val_score]
@@ -165,22 +218,36 @@ def make_blendfl_round(spec: ShardedFedSpec):
                                global_models[f"g_{mod}"], x_val)
             cand = {"f": models[f"f_{mod}"], "g": models[f"g_{mod}"]}
             glob = {"f": global_models[f"f_{mod}"], "g": global_models[f"g_{mod}"]}
-            blended, omega, _ = fns.blendavg_update(glob, cand, scores, gscore)
+            blended, omega, _ = fns.blendavg_update(glob, cand, scores, gscore,
+                                                    staleness=staleness)
             new_global[f"f_{mod}"], new_global[f"g_{mod}"] = blended["f"], blended["g"]
             infos[f"omega_{mod}"] = omega
 
-        # multimodal: C client heads + the server's g_M^v (Eq. 8)
+        # multimodal: K participating heads + the server's g_M^v (Eq. 8);
+        # the server head trains every round, so its staleness is 0
         cand = stack_with(models["g_M"], server_gmv)
+        stale_m = (None if staleness is None
+                   else jnp.concatenate([staleness, jnp.zeros(1, jnp.float32)]))
         scores = jax.vmap(lambda gm: multi_score(gm, new_global["f_A"],
                                                  new_global["f_B"]))(cand)
         gscore = multi_score(global_models["g_M"], new_global["f_A"],
                              new_global["f_B"])
         new_global["g_M"], infos["omega_M"], _ = fns.blendavg_update(
-            global_models["g_M"], cand, scores, gscore)
+            global_models["g_M"], cand, scores, gscore, staleness=stale_m)
         return new_global, infos
 
     def round_fn(state, batch):
-        models, opt_state = state["models"], state["opt"]
+        if spec.n_sampled:
+            idx = batch["sampled"]
+            models = sample_clients(state["models"], idx)
+            opt_state = sample_opt_state(state["opt"], idx)
+            staleness = jnp.maximum(
+                state["round"] - 1 - state["last_round"][idx], 0
+            ).astype(jnp.float32)
+        else:
+            idx = None
+            models, opt_state = state["models"], state["opt"]
+            staleness = None
         server_gmv, srv_state = state["server_gmv"], state["srv_opt"]
 
         # phase 1: local unimodal training (uniform rows -> all-ones masks)
@@ -194,9 +261,9 @@ def make_blendfl_round(spec: ShardedFedSpec):
         # phase 2: split (VFL) training; identity gather on the a side,
         # the PSI permutation on the b side
         p2 = {"xa": batch["frag_a"], "xb": batch["frag_b"],
-              "gather_a": jnp.arange(C * spec.n_frag, dtype=jnp.int32),
+              "gather_a": jnp.arange(K * spec.n_frag, dtype=jnp.int32),
               "gather_b": batch["perm_b"],
-              "y": batch["frag_y"].reshape(C * spec.n_frag, -1)}
+              "y": batch["frag_y"].reshape(K * spec.n_frag, -1)}
         models, server_gmv, opt_state, srv_state, loss_vfl = fns.vfl_step(
             models, server_gmv, opt_state, srv_state, p2)
 
@@ -207,16 +274,28 @@ def make_blendfl_round(spec: ShardedFedSpec):
         models, opt_state, i3 = fns.paired_step(models, opt_state, p3)
         loss_paired = jnp.mean(i3["loss"])
 
-        # phase 4: BlendAvg aggregation + (free) broadcast
+        # phase 4: BlendAvg aggregation + broadcast. Full participation:
+        # the broadcast is free under SPMD (the reduction leaves the blend
+        # resident on every slice). Sampled: participants-only scatter —
+        # stragglers keep their stale rows; the trained weights only
+        # mattered as candidates, while opt moments ride home per client.
         new_global, infos = aggregate(models, server_gmv, global_models=state[
-            "global_models"], batch=batch)
-        models = dict(fns.broadcast(
-            {k: new_global[k] for k in CLIENT_GROUPS}, C))
+            "global_models"], batch=batch, staleness=staleness)
+        bcast = dict(fns.broadcast(
+            {k: new_global[k] for k in CLIENT_GROUPS}, K))
+        if spec.n_sampled:
+            models = scatter_clients(state["models"], bcast, idx)
+            opt_state = scatter_opt_state(state["opt"], opt_state, idx)
+            last_round = state["last_round"].at[idx].set(state["round"])
+        else:
+            models = bcast
+            last_round = jnp.full_like(state["last_round"], state["round"])
         server_gmv = new_global["g_M"]
 
         state = {"models": models, "server_gmv": server_gmv,
                  "global_models": new_global, "opt": opt_state,
-                 "srv_opt": srv_state}
+                 "srv_opt": srv_state, "last_round": last_round,
+                 "round": state["round"] + 1}
         metrics = dict(loss_uni=loss_uni, loss_vfl=loss_vfl,
                        loss_paired=loss_paired, **infos)
         return state, metrics
@@ -225,23 +304,29 @@ def make_blendfl_round(spec: ShardedFedSpec):
 
 
 def batch_specs(spec: ShardedFedSpec):
-    """ShapeDtypeStructs for one federated round's inputs (dry-run)."""
+    """ShapeDtypeStructs for one federated round's inputs (dry-run).
+    Training arrays carry the per-round client axis K (= C at full
+    participation); a sampled round additionally takes the K sampled
+    client ids."""
     f32 = jnp.float32
-    C = spec.n_clients
+    K = spec.k_round
     sds = jax.ShapeDtypeStruct
-    return {
-        "partial_a": sds((C, spec.n_partial, spec.seq_a, spec.feat_a), f32),
-        "partial_ya": sds((C, spec.n_partial, spec.out_dim), f32),
-        "partial_b": sds((C, spec.n_partial, spec.seq_b, spec.feat_b), f32),
-        "partial_yb": sds((C, spec.n_partial, spec.out_dim), f32),
-        "frag_a": sds((C, spec.n_frag, spec.seq_a, spec.feat_a), f32),
-        "frag_b": sds((C, spec.n_frag, spec.seq_b, spec.feat_b), f32),
-        "frag_y": sds((C, spec.n_frag, spec.out_dim), f32),
-        "perm_b": sds((C * spec.n_frag,), jnp.int32),
-        "paired_a": sds((C, spec.n_paired, spec.seq_a, spec.feat_a), f32),
-        "paired_b": sds((C, spec.n_paired, spec.seq_b, spec.feat_b), f32),
-        "paired_y": sds((C, spec.n_paired, spec.out_dim), f32),
+    specs = {
+        "partial_a": sds((K, spec.n_partial, spec.seq_a, spec.feat_a), f32),
+        "partial_ya": sds((K, spec.n_partial, spec.out_dim), f32),
+        "partial_b": sds((K, spec.n_partial, spec.seq_b, spec.feat_b), f32),
+        "partial_yb": sds((K, spec.n_partial, spec.out_dim), f32),
+        "frag_a": sds((K, spec.n_frag, spec.seq_a, spec.feat_a), f32),
+        "frag_b": sds((K, spec.n_frag, spec.seq_b, spec.feat_b), f32),
+        "frag_y": sds((K, spec.n_frag, spec.out_dim), f32),
+        "perm_b": sds((K * spec.n_frag,), jnp.int32),
+        "paired_a": sds((K, spec.n_paired, spec.seq_a, spec.feat_a), f32),
+        "paired_b": sds((K, spec.n_paired, spec.seq_b, spec.feat_b), f32),
+        "paired_y": sds((K, spec.n_paired, spec.out_dim), f32),
         "val_a": sds((spec.n_val, spec.seq_a, spec.feat_a), f32),
         "val_b": sds((spec.n_val, spec.seq_b, spec.feat_b), f32),
         "val_y": sds((spec.n_val, spec.out_dim), f32),
     }
+    if spec.n_sampled:
+        specs["sampled"] = sds((K,), jnp.int32)
+    return specs

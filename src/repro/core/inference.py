@@ -56,13 +56,16 @@ def vfl_server_inference(client_models: dict, server_gmv: dict, req: InferenceRe
     return task_scores(fusion_apply(server_gmv, h_a, h_b), kind), 3  # 2 up + 1 down
 
 
-def communication_cost(batch: int, d_hidden: int, mode: str) -> dict:
-    """Bytes over the network per inference batch (fp32 latents).
+def communication_cost(batch: int, d_hidden: int, mode: str, out_dim: int) -> dict:
+    """Bytes over the network per inference batch (fp32 payloads).
 
     decentralized: 0 — the blended models are local.
-    vfl: two feature uploads + one score download per batch.
+    vfl: two feature uploads (batch * d_hidden floats each) + one score
+    download (batch * out_dim floats) per batch — all 3 messages the
+    ``vfl_server_inference`` exchange reports are counted.
     """
     if mode == "decentralized":
         return {"messages": 0, "bytes": 0}
     feat_bytes = 2 * batch * d_hidden * 4
-    return {"messages": 3, "bytes": feat_bytes}
+    score_bytes = batch * out_dim * 4
+    return {"messages": 3, "bytes": feat_bytes + score_bytes}

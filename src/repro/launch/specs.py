@@ -207,10 +207,12 @@ def make_entry(cfg: ArchConfig, shape: ShapeSpec, microbatches: int = 8):
 
 # ------------------------------------------------- blendfl federated round --
 
-def make_blendfl_entry(n_clients: int = 16):
-    """The paper's own technique as a dry-run entry: one full BlendFL
-    round (3 training phases + BlendAvg psum aggregation) as one SPMD
-    program over client slices."""
+def make_blendfl_entry(n_clients: int = 16, n_sampled: int = 0):
+    """The paper's own technique as a dry-run entry: one BlendFL round
+    (3 training phases + BlendAvg psum aggregation) as one SPMD program
+    over client slices. ``n_sampled`` > 0 lowers the K-of-C sampled async
+    round instead — training arrays carry the sampled K axis and the
+    stacked state is gathered/scattered inside the program."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.core import federation_sharded as fs
@@ -218,7 +220,8 @@ def make_blendfl_entry(n_clients: int = 16):
     spec = fs.ShardedFedSpec(n_clients=n_clients, d_hidden=1024, n_layers=4,
                              seq_a=64, feat_a=128, seq_b=64, feat_b=128,
                              out_dim=25, n_partial=512, n_frag=512,
-                             n_paired=512, n_val=2048, n_val_score=512)
+                             n_paired=512, n_val=2048, n_val_score=512,
+                             n_sampled=n_sampled)
     round_fn = fs.make_blendfl_round(spec)
     state_s = jax.eval_shape(
         lambda: fs.init_round_state(jax.random.PRNGKey(0), spec))
@@ -241,7 +244,8 @@ def make_blendfl_entry(n_clients: int = 16):
         def state_leaf(path, sds):
             # stacked client models + their optimizer moments shard over
             # the client ("data") axis; global/server models, the shared
-            # step counter, and the server-head opt state are replicated.
+            # step counter, the async round bookkeeping, and the
+            # server-head opt state are replicated.
             top = sh._path_str(path).split("/")[0]
             if (top in ("models", "opt") and len(sds.shape) >= 1
                     and sds.shape[0] == spec.n_clients):
@@ -250,7 +254,11 @@ def make_blendfl_entry(n_clients: int = 16):
 
         def batch_leaf(path, sds):
             name = sh._path_str(path)
-            if name.startswith("val_") or name == "perm_b":
+            # alignment/sampling index vectors and the val set replicate;
+            # training arrays shard over "data" when the per-round client
+            # axis K divides the mesh (a sampled K may not)
+            if (name.startswith("val_") or name in ("perm_b", "sampled")
+                    or sds.shape[0] % mesh.shape["data"] != 0):
                 return NamedSharding(mesh, P())
             return NamedSharding(mesh, P("data", *([None] * (len(sds.shape) - 1))))
 

@@ -66,6 +66,7 @@ def test_reduced_decode_step(arch):
 
 @pytest.mark.parametrize("arch", ["phi4_mini_3p8b", "starcoder2_7b",
                                   "hymba_1p5b", "xlstm_350m", "stablelm_3b"])
+@pytest.mark.slow
 def test_prefill_matches_forward_and_decode_consistent(arch):
     """prefill last-token logits == forward last-token logits, AND a decode
     step after prefill == forward on the extended sequence.
@@ -89,6 +90,7 @@ def test_prefill_matches_forward_and_decode_consistent(arch):
                                atol=5e-4, rtol=5e-4)
 
 
+@pytest.mark.slow
 def test_sliding_window_ring_buffer_decode():
     """Decode past the window: ring cache must equal full-context SWA."""
     cfg = get_config("phi4_mini_3p8b").reduced().replace(

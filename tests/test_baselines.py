@@ -23,6 +23,7 @@ def setup():
     return spec, clients, va, te, ecfg, cfg
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", sorted(BASELINES))
 def test_baseline_runs(setup, name):
     spec, clients, va, te, ecfg, cfg = setup
@@ -33,6 +34,7 @@ def test_baseline_runs(setup, name):
         assert np.isnan(res[k]) or 0.0 <= res[k] <= 1.0
 
 
+@pytest.mark.slow
 def test_centralized_learns(setup):
     spec, clients, va, te, ecfg, _ = setup
     cfg = FedConfig(n_clients=3, rounds=25, lr=1e-2, batch_size=64, seed=0)
@@ -41,6 +43,7 @@ def test_centralized_learns(setup):
     assert res["multimodal_auroc"] > 0.62
 
 
+@pytest.mark.slow
 def test_history_tracking(setup):
     spec, clients, va, te, ecfg, cfg = setup
     _, hist = BASELINES["fedavg"](jax.random.PRNGKey(0), spec, ecfg, clients,

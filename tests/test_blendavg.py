@@ -47,6 +47,25 @@ def test_fedavg_volume_weights():
     np.testing.assert_allclose(np.asarray(out["w"]), 2.0 * np.ones(4), rtol=1e-6)
 
 
+def test_fedavg_all_zero_samples_raises():
+    """Regression: the silent max(tot, 1.0) floor used to blend all-zero
+    weights into an all-zero model. Zero total volume is now an explicit
+    error (the engine path keeps the previous global model instead)."""
+    cands = [{"w": jnp.ones(4)}, {"w": 5 * jnp.ones(4)}]
+    with pytest.raises(ValueError, match="zero"):
+        fedavg(cands, n_samples=[0, 0])
+
+
+def test_blendavg_weights_staleness_damping():
+    """Async Eq. 9-10: staleness damps, renormalizes, and never resurrects
+    a non-improver."""
+    w = blendavg_weights([0.9, 0.9, 0.1], 0.5, staleness=[0, 8, 0],
+                         staleness_exp=0.5)
+    assert w[2] == 0.0  # still discarded
+    np.testing.assert_allclose(w[1] / w[0], 3.0 ** -1, rtol=1e-12)
+    np.testing.assert_allclose(w.sum(), 1.0)
+
+
 # --------------------------------------------------------------- property --
 
 @given(scores=st.lists(st.floats(-1, 1, allow_nan=False), min_size=1, max_size=16),

@@ -149,6 +149,7 @@ def _legacy_round(models, global_models, server_gmv, clients, val, ecfg, kind,
     return models, global_models, server_gmv, logs
 
 
+@pytest.mark.slow
 def test_engine_matches_legacy_loop(small_fed):
     spec, tr, va, te, clients, ecfg = small_fed
     lr = 5e-2
@@ -181,6 +182,7 @@ def test_engine_matches_legacy_loop(small_fed):
 
 # ------------------------------------------------------ optimizer + cache --
 
+@pytest.mark.slow
 def test_adamw_rounds_converge(small_fed):
     spec, tr, va, te, clients, ecfg = small_fed
     cfg = FedConfig(n_clients=2, rounds=5, lr=3e-3, batch_size=64,
@@ -197,6 +199,7 @@ def test_adamw_rounds_converge(small_fed):
     assert last < first
 
 
+@pytest.mark.slow
 def test_cosine_schedule_runs(small_fed):
     spec, tr, va, te, clients, ecfg = small_fed
     cfg = FedConfig(n_clients=2, rounds=2, lr=1e-2, batch_size=64,
@@ -206,6 +209,7 @@ def test_cosine_schedule_runs(small_fed):
     assert np.isfinite(hist[-1]["loss_partial"])
 
 
+@pytest.mark.slow
 def test_one_compile_per_phase_regardless_of_client_count(small_fed):
     """The acceptance criterion: the unimodal step compiles ONCE per
     federation — cache entries don't grow with n_clients (stacked C axis),
@@ -226,6 +230,7 @@ def test_one_compile_per_phase_regardless_of_client_count(small_fed):
 
 # ------------------------------------------------- aggregation edge cases --
 
+@pytest.mark.slow
 def test_fedavg_zero_overlap_excludes_server_head(small_fed):
     """No fragmented overlap -> the untrained server head must get weight
     ZERO (the seed code silently floored it to 1 sample)."""

@@ -21,6 +21,7 @@ def fed_setup():
     return spec, tr, va, te, clients, ecfg
 
 
+@pytest.mark.slow
 def test_blendfl_learns(fed_setup):
     spec, tr, va, te, clients, ecfg = fed_setup
     cfg = FedConfig(n_clients=3, rounds=25, lr=1e-2, batch_size=64, seed=0)
@@ -32,6 +33,7 @@ def test_blendfl_learns(fed_setup):
     assert r1["uni_a_auroc"] > 0.6 and r1["uni_b_auroc"] > 0.6
 
 
+@pytest.mark.slow
 def test_broadcast_synchronizes_clients(fed_setup):
     spec, tr, va, te, clients, ecfg = fed_setup
     cfg = FedConfig(n_clients=3, rounds=1, lr=1e-2, batch_size=64, seed=0)
@@ -44,6 +46,7 @@ def test_broadcast_synchronizes_clients(fed_setup):
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_fedavg_aggregator_variant(fed_setup):
     spec, tr, va, te, clients, ecfg = fed_setup
     cfg = FedConfig(n_clients=3, rounds=3, lr=1e-2, batch_size=64,
@@ -53,6 +56,7 @@ def test_fedavg_aggregator_variant(fed_setup):
     assert len(hist) == 3
 
 
+@pytest.mark.slow
 def test_decentralized_inference_all_modality_combos(fed_setup):
     spec, tr, va, te, clients, ecfg = fed_setup
     cfg = FedConfig(n_clients=3, rounds=2, lr=1e-2, batch_size=64, seed=0)
@@ -74,12 +78,17 @@ def test_decentralized_inference_all_modality_combos(fed_setup):
 
 
 def test_inference_comm_cost():
-    dec = communication_cost(8, 64, "decentralized")
-    srv = communication_cost(8, 64, "vfl")
+    """Regression: the reported bytes must cover all 3 messages — the two
+    feature uploads AND the score download (batch * out_dim * 4), which
+    the old signature silently omitted."""
+    dec = communication_cost(8, 64, "decentralized", 25)
+    srv = communication_cost(8, 64, "vfl", 25)
     assert dec["bytes"] == 0 and dec["messages"] == 0
-    assert srv["bytes"] == 2 * 8 * 64 * 4 and srv["messages"] == 3
+    assert srv["messages"] == 3
+    assert srv["bytes"] == 2 * 8 * 64 * 4 + 8 * 25 * 4
 
 
+@pytest.mark.slow
 def test_blendavg_faster_or_equal_convergence_smoke(fed_setup):
     """Directional check behind Fig. 2 (full sweep in benchmarks)."""
     spec, tr, va, te, clients, ecfg = fed_setup

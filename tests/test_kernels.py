@@ -90,6 +90,7 @@ def test_blendavg_masked_weights_drop_models():
     (2, 3, 100, 32, 16, 32),   # ragged length
     (1, 1, 128, 64, 64, 128),  # single chunk
 ])
+@pytest.mark.slow
 @pytest.mark.parametrize("normalize", [True, False])
 def test_mlstm_scan_vs_sequential_ref(b, h, s, dk, dv, chunk, normalize):
     ks = jax.random.split(jax.random.PRNGKey(4), 4)
@@ -103,6 +104,7 @@ def test_mlstm_scan_vs_sequential_ref(b, h, s, dk, dv, chunk, normalize):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-4, rtol=5e-3)
 
 
+@pytest.mark.slow
 def test_chunked_scan_matches_chunk_free():
     """Chunk size must not change the math (associativity of the scan)."""
     ks = jax.random.split(jax.random.PRNGKey(5), 4)

@@ -23,6 +23,7 @@ from repro.models.rope import apply_rope, mrope_positions, rope_angles, text_pos
 
 # ---------------------------------------------------------------- attention --
 
+@pytest.mark.slow
 @given(sq=st.integers(8, 80), skx=st.integers(0, 40), hkv=st.sampled_from([1, 2, 4]),
        g=st.sampled_from([1, 2, 3]), window=st.sampled_from([0, 7, 16]),
        seed=st.integers(0, 100))
@@ -40,6 +41,7 @@ def test_chunked_attention_equals_einsum(sq, skx, hkv, g, window, seed):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-4)
 
 
+@pytest.mark.slow
 def test_chunked_attention_gradients_match():
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (2, 64, 6, 16))
@@ -59,6 +61,7 @@ def test_chunked_attention_gradients_match():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_gqa_grouping_matches_repeated_heads():
     """GQA-grouped einsum == materializing repeated KV heads."""
     from repro.models.attention import _repeat_kv
@@ -114,6 +117,7 @@ def test_mrope_positions_layout():
 
 # ---------------------------------------------------------------- recurrent --
 
+@pytest.mark.slow
 @given(s=st.integers(4, 96), chunk=st.sampled_from([4, 16, 64]),
        normalize=st.booleans(), seed=st.integers(0, 50))
 @settings(max_examples=30, deadline=None)
@@ -145,6 +149,7 @@ def test_gated_linear_state_handoff():
                                atol=1e-4, rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_slstm_step_equals_scan():
     p = slstm_init(jax.random.PRNGKey(0), 32, 4, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 32))
@@ -192,6 +197,7 @@ def test_moe_all_tokens_routed_with_ample_capacity():
     assert float(aux) > 0
 
 
+@pytest.mark.slow
 def test_moe_grouped_equals_flat():
     """GShard-style grouped dispatch (§Perf B.2) must match the flat path
     when capacity is ample (per-group capacity changes drop behavior only

@@ -1,0 +1,287 @@
+"""Partial-participation rounds: K-of-C client sampling and the
+staleness-weighted async BlendAvg, on both federation drivers.
+
+The core invariants:
+  * a sampled round with K = C is the existing full round — bit-for-bit
+    on every global-model leaf (sampling is a gather, not new math);
+  * sampled rounds never retrace: the sampled ids are data, so 3 rounds
+    over different subsets at fixed K leave every phase cache at 1;
+  * a straggler's stale candidate gets a damped omega, and clients that
+    did not finish are masked out of the blend entirely;
+  * async broadcast touches the participants only — stragglers keep
+    their stale weights until they are next sampled.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blendavg import blendavg_weights
+from repro.core.encoders import EncoderConfig
+from repro.core.engine import (
+    EngineConfig,
+    make_phase_fns,
+    sample_clients,
+    sample_opt_state,
+    scatter_clients,
+    scatter_opt_state,
+)
+from repro.core.federation import FedConfig, Federation
+from repro.core.federation_sharded import (
+    ShardedFedSpec,
+    batch_specs,
+    init_round_state,
+    make_blendfl_round,
+)
+from repro.core.partitioner import partition
+from repro.data.synthetic import make_task, train_val_test
+
+
+@pytest.fixture(scope="module")
+def small_fed():
+    spec = make_task("smnist")
+    tr, va, te = train_val_test(spec, 240, 200, 100, seed=3)
+    clients = partition(tr, 4, frac_paired=0.6, frac_fragmented=0.3,
+                        frac_partial=0.1, seed=4)
+    ecfg = EncoderConfig(d_hidden=32, n_layers=1, enc_type="mlp")
+    return spec, va, clients, ecfg
+
+
+# ------------------------------------------------- engine-level helpers ----
+
+def test_sample_scatter_roundtrip():
+    tree = {"w": jnp.arange(24.0).reshape(6, 4), "b": jnp.arange(6.0)}
+    idx = jnp.asarray([4, 1], jnp.int32)
+    sub = sample_clients(tree, idx)
+    np.testing.assert_array_equal(np.asarray(sub["w"])[0],
+                                  np.asarray(tree["w"])[4])
+    # scatter modified rows back; untouched rows survive
+    sub = jax.tree.map(lambda x: x + 100.0, sub)
+    out = scatter_clients(tree, sub, idx)
+    np.testing.assert_array_equal(np.asarray(out["b"]),
+                                  np.array([0, 101, 2, 3, 104, 5]))
+
+
+def test_sample_opt_state_keeps_shared_step():
+    state = {"step": jnp.asarray(7, jnp.int32),
+             "mu": {"g": {"w": jnp.arange(12.0).reshape(4, 3)}}}
+    idx = jnp.asarray([2, 0], jnp.int32)
+    sub = sample_opt_state(state, idx)
+    assert int(sub["step"]) == 7  # shared counter passes through
+    np.testing.assert_array_equal(np.asarray(sub["mu"]["g"]["w"])[0],
+                                  np.arange(6.0, 9.0))
+    sub = {"step": jnp.asarray(9, jnp.int32),
+           "mu": {"g": {"w": jnp.zeros((2, 3))}}}
+    out = scatter_opt_state(state, sub, idx)
+    assert int(out["step"]) == 9  # advanced by the sampled round
+    np.testing.assert_array_equal(np.asarray(out["mu"]["g"]["w"])[1],
+                                  np.arange(3.0, 6.0))
+
+
+# --------------------------------------------- async omega semantics -------
+
+def test_straggler_omega_damped_host():
+    """blendavg_weights: equal improvements, one candidate 3 rounds stale
+    -> its omega is (1+3)^-0.5 = half the fresh one's."""
+    w = blendavg_weights([0.7, 0.7], 0.5, staleness=[0.0, 3.0],
+                         staleness_exp=0.5)
+    np.testing.assert_allclose(w[1] / w[0], 0.5, rtol=1e-12)
+    np.testing.assert_allclose(w.sum(), 1.0)
+    # no damping when the exponent is disabled
+    w0 = blendavg_weights([0.7, 0.7], 0.5, staleness=[0.0, 3.0],
+                          staleness_exp=0.0)
+    np.testing.assert_allclose(w0, [0.5, 0.5])
+
+
+def test_straggler_omega_damped_engine():
+    """Engine blendavg_update: same scores, staleness [0, 3] -> the stale
+    candidate's omega is damped; unfinished candidates are masked out."""
+    cfg = EngineConfig(ecfg=EncoderConfig(d_hidden=8, n_layers=1),
+                       kind="binary", staleness_exp=0.5)
+    fns = make_phase_fns(cfg)
+    glob = {"w": jnp.zeros(4)}
+    cands = {"w": jnp.stack([jnp.ones(4), 3 * jnp.ones(4)])}
+    scores = jnp.asarray([0.7, 0.7])
+    _, omega, up = fns.blendavg_update(glob, cands, scores, 0.5,
+                                       staleness=jnp.asarray([0.0, 3.0]))
+    assert bool(up)
+    np.testing.assert_allclose(float(omega[1]) / float(omega[0]), 0.5,
+                               rtol=1e-5)
+    # a non-finished client is masked exactly like an empty batch
+    new, omega, up = fns.blendavg_update(
+        glob, cands, scores, 0.5, finished=jnp.asarray([True, False]))
+    np.testing.assert_allclose(np.asarray(omega), [1.0, 0.0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new["w"]), np.ones(4), rtol=1e-6)
+    # nobody finished -> keep the previous global model
+    new, omega, up = fns.blendavg_update(
+        glob, cands, scores, 0.5, finished=jnp.asarray([False, False]))
+    assert not bool(up)
+    np.testing.assert_array_equal(np.asarray(new["w"]), np.zeros(4))
+
+
+# ------------------------------------------------- in-host federation ------
+
+@pytest.mark.slow
+def test_sampled_round_k_equals_c_parity(small_fed):
+    """K = C sampling must reproduce the full-participation round
+    bit-for-bit on every global-model leaf: the gather is the identity,
+    the remapped VFL alignment is the original one, and the key stream
+    is consumed in the same order."""
+    spec, va, clients, ecfg = small_fed
+    common = dict(n_clients=4, rounds=2, lr=5e-2, batch_size=512, seed=0)
+    full = Federation.init(jax.random.PRNGKey(7), FedConfig(**common),
+                           spec, ecfg, clients, va)
+    samp = Federation.init(jax.random.PRNGKey(7),
+                           FedConfig(**common, n_sampled=4),
+                           spec, ecfg, clients, va)
+    for _ in range(2):
+        lf, ls = full.round(), samp.round()
+        np.testing.assert_array_equal(ls["sampled"], np.arange(4))
+        np.testing.assert_allclose(lf["loss_partial"], ls["loss_partial"],
+                                   rtol=1e-6)
+        for grp in ("f_A", "g_A", "f_B", "g_B", "g_M"):
+            for a, b in zip(jax.tree.leaves(full.global_models[grp]),
+                            jax.tree.leaves(samp.global_models[grp])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sampled_rounds_compile_once(small_fed):
+    """Acceptance criterion: 3 rounds over DIFFERENT sampled subsets at
+    fixed K leave each phase's compile cache at exactly 1 — the sampled
+    ids are data, not shape."""
+    spec, va, clients, ecfg = small_fed
+    cfg = FedConfig(n_clients=4, rounds=3, lr=1e-2, batch_size=32, seed=0,
+                    n_sampled=2)
+    fed = Federation.init(jax.random.PRNGKey(0), cfg, spec, ecfg, clients, va)
+    subsets = {tuple(fed.round()["sampled"]) for _ in range(3)}
+    assert len(subsets) > 1  # the RNG actually varied the subset
+    assert fed.engine.unimodal_phase._cache_size() == 1
+    assert fed.engine.paired_phase._cache_size() == 1
+    assert fed.engine.vfl_phase._cache_size() == 1
+
+
+def test_async_broadcast_is_participants_only(small_fed):
+    """Async mode: non-sampled clients keep their stale weights and their
+    last_round stays behind; participants sync to the new global."""
+    spec, va, clients, ecfg = small_fed
+    cfg = FedConfig(n_clients=4, rounds=4, lr=1e-2, batch_size=64, seed=0,
+                    n_sampled=2, async_mode=True)
+    fed = Federation.init(jax.random.PRNGKey(0), cfg, spec, ecfg, clients, va)
+    pre = jax.tree.map(jnp.copy, fed.stacked)
+    logs = fed.round()
+    idx = logs["sampled"]
+    out = set(range(4)) - set(idx.tolist())
+    for k in out:  # stragglers: untouched weights, last_round behind
+        assert fed.last_round[k] == -1
+        for a, b in zip(jax.tree.leaves(pre), jax.tree.leaves(fed.stacked)):
+            np.testing.assert_array_equal(np.asarray(a)[k], np.asarray(b)[k])
+    for k in idx:  # participants: synced to the new global
+        assert fed.last_round[k] == 0
+        for grp in ("f_A", "g_M"):
+            for a, g in zip(jax.tree.leaves(fed.stacked[grp]),
+                            jax.tree.leaves(fed.global_models[grp])):
+                np.testing.assert_array_equal(np.asarray(a)[k], np.asarray(g))
+    # omegas cover the K candidates (+ server head for g_M) and stay a
+    # simplex or zero through later, genuinely-stale rounds
+    for _ in range(3):
+        logs = fed.round()
+    assert len(logs["omega_A"]) == 2 and len(logs["omega_M"]) == 3
+    for key in ("omega_A", "omega_B", "omega_M"):
+        w = np.asarray(logs[key])
+        assert (w >= 0).all()
+        assert abs(w.sum() - 1.0) < 1e-6 or w.sum() == 0.0
+
+
+def test_async_requires_sampling(small_fed):
+    spec, va, clients, ecfg = small_fed
+    with pytest.raises(ValueError):
+        Federation.init(jax.random.PRNGKey(0),
+                        FedConfig(n_clients=4, async_mode=True),
+                        spec, ecfg, clients, va)
+    with pytest.raises(ValueError):
+        Federation.init(jax.random.PRNGKey(0),
+                        FedConfig(n_clients=4, n_sampled=9),
+                        spec, ecfg, clients, va)
+
+
+@pytest.mark.slow
+def test_sampled_async_learns(small_fed):
+    """Convergence smoke: 10 async K-of-C rounds still improve the
+    training losses (the paper's no-degradation premise under partial
+    participation)."""
+    spec, va, clients, ecfg = small_fed
+    cfg = FedConfig(n_clients=4, rounds=10, lr=1e-2, batch_size=64, seed=0,
+                    n_sampled=2, async_mode=True)
+    fed = Federation.init(jax.random.PRNGKey(0), cfg, spec, ecfg, clients, va)
+    hist = fed.fit()
+    first = hist[0]["loss_partial"]
+    last = hist[-1]["loss_partial"]
+    assert np.isfinite(last) and last < first
+
+
+# ------------------------------------------------- sharded federation ------
+
+def _sharded_batch(spec, rng, idx=None):
+    batch = {}
+    for k, sd in batch_specs(spec).items():
+        if k == "perm_b":
+            batch[k] = jnp.asarray(
+                rng.permutation(spec.k_round * spec.n_frag).astype(np.int32))
+        elif k == "sampled":
+            batch[k] = jnp.asarray(idx, jnp.int32)
+        elif k.endswith("y") or k.endswith("ya") or k.endswith("yb"):
+            batch[k] = jnp.asarray((rng.random(sd.shape) < 0.3).astype(np.float32))
+        else:
+            batch[k] = jnp.asarray(rng.normal(0, 1, sd.shape).astype(np.float32))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def sharded_sampled():
+    spec = ShardedFedSpec(n_clients=6, n_sampled=3, d_hidden=32, n_layers=2,
+                          seq_a=8, feat_a=6, seq_b=8, feat_b=6, out_dim=5,
+                          n_partial=32, n_frag=32, n_paired=32, n_val=64,
+                          lr=5e-2)
+    return spec, np.random.default_rng(0)
+
+
+def test_sharded_sampled_round_bookkeeping(sharded_sampled):
+    spec, rng = sharded_sampled
+    state = init_round_state(jax.random.PRNGKey(0), spec)
+    assert state["last_round"].shape == (spec.n_clients,)
+    rf = jax.jit(make_blendfl_round(spec))
+    idx = np.array([1, 3, 4])
+    pre = jax.tree.map(jnp.copy, state["models"])
+    state, m = rf(state, _sharded_batch(spec, rng, idx))
+    assert np.isfinite(float(m["loss_uni"]))
+    assert len(np.asarray(m["omega_A"])) == spec.n_sampled
+    assert len(np.asarray(m["omega_M"])) == spec.n_sampled + 1
+    np.testing.assert_array_equal(
+        np.asarray(state["last_round"]), np.where(np.isin(np.arange(6), idx), 0, -1))
+    assert int(state["round"]) == 1
+    # async broadcast: stragglers' stacked rows are untouched
+    for a, b in zip(jax.tree.leaves(pre), jax.tree.leaves(state["models"])):
+        for k in (0, 2, 5):
+            np.testing.assert_array_equal(np.asarray(a)[k], np.asarray(b)[k])
+    # participants hold the new global
+    for grp in ("f_A", "g_M"):
+        for leaf, gleaf in zip(jax.tree.leaves(state["models"][grp]),
+                               jax.tree.leaves(state["global_models"][grp])):
+            for k in idx:
+                np.testing.assert_allclose(np.asarray(leaf)[k], np.asarray(gleaf),
+                                           rtol=1e-6, atol=1e-7)
+
+
+def test_sharded_sampled_compiles_once_across_subsets(sharded_sampled):
+    spec, _ = sharded_sampled
+    rng = np.random.default_rng(7)
+    state = init_round_state(jax.random.PRNGKey(0), spec)
+    rf = jax.jit(make_blendfl_round(spec))
+    losses = []
+    for _ in range(4):
+        idx = np.sort(rng.choice(spec.n_clients, spec.n_sampled, replace=False))
+        state, m = rf(state, _sharded_batch(spec, rng, idx))
+        losses.append(float(m["loss_uni"]))
+    assert rf._cache_size() == 1
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]  # sampled rounds still learn

@@ -52,6 +52,7 @@ def test_round_runs_and_losses_finite(small):
         assert np.isfinite(float(m[k]))
 
 
+@pytest.mark.slow
 def test_loss_decreases_over_rounds(small):
     spec, batch = small
     state = init_round_state(jax.random.PRNGKey(0), spec)
@@ -64,6 +65,7 @@ def test_loss_decreases_over_rounds(small):
     assert losses[-1] < losses[0]
 
 
+@pytest.mark.slow
 def test_adamw_round_decreases_loss(small):
     spec, batch = small
     spec = ShardedFedSpec(**{**spec.__dict__, "optimizer": "adamw", "lr": 1e-2})
@@ -103,6 +105,34 @@ def test_broadcast_resets_all_clients_to_blend(small):
             for c in range(spec.n_clients):
                 np.testing.assert_allclose(np.asarray(leaf[c]), np.asarray(gleaf),
                                            rtol=1e-6, atol=1e-7)
+
+
+def test_server_head_opt_state_uses_srv_opt():
+    """Regression: init_round_state used fns.opt.init for the server head,
+    so a spec with its own server schedule horizon would thread state
+    initialized by the WRONG optimizer. The state must come from
+    fns.srv_opt (the server_total_steps horizon), and a cosine round with
+    distinct client/server horizons must run."""
+    from repro.core.engine import make_phase_fns
+
+    spec = ShardedFedSpec(n_clients=2, d_hidden=16, n_layers=1, seq_a=4,
+                          feat_a=3, seq_b=4, feat_b=3, out_dim=2, n_partial=8,
+                          n_frag=8, n_paired=8, n_val=16, optimizer="adamw",
+                          schedule="cosine", total_steps=64,
+                          server_total_steps=4)
+    assert spec.engine_cfg.server_total_steps == 4  # plumbed through
+    fns = make_phase_fns(spec.engine_cfg)
+    assert fns.srv_opt is not fns.opt  # server horizon = its own optimizer
+    state = init_round_state(jax.random.PRNGKey(0), spec)
+    ref = fns.srv_opt.init(state["server_gmv"])
+    assert (jax.tree.structure(state["srv_opt"]) == jax.tree.structure(ref))
+    for a, b in zip(jax.tree.leaves(state["srv_opt"]), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    rf = jax.jit(make_blendfl_round(spec))
+    batch = _make_batch(spec, np.random.default_rng(0))
+    state, m = rf(state, batch)
+    assert np.isfinite(float(m["loss_vfl"]))
+    assert int(state["srv_opt"]["step"]) == 1
 
 
 def test_init_stacked_models_back_compat():
