@@ -3,7 +3,7 @@
 # verify loop stays under ~90 s.
 PYTEST = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -q
 
-.PHONY: test test-fast bench-sampled
+.PHONY: test test-fast bench-sampled bench-loader train-federated
 
 test:
 	$(PYTEST)
@@ -13,3 +13,13 @@ test-fast:
 
 bench-sampled:
 	PYTHONPATH=src python -m benchmarks.sampled_round_bench
+
+bench-loader:
+	PYTHONPATH=src python -m benchmarks.federated_loader_bench
+
+# Smoke lane: tiny ragged federation, 2 rounds, checkpoint at round 1,
+# kill-and-resume, assert bit-exact round-metric parity.
+train-federated:
+	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
+		--rounds 2 --clients 4 --n-train 384 --rows-cap 16 --d-hidden 16 \
+		--n-val 64 --log-every 0

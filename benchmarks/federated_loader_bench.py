@@ -1,0 +1,129 @@
+"""§Federated loader: ragged C=32 rounds, prefetch hides host build time.
+
+Pushes the federated batch loader past PR 2's 16 in-host clients: a
+C=32 ragged federation (partitioned synthetic multimodal data, per-client
+row counts heterogeneous by construction) drives the sharded
+``make_blendfl_round`` through ``FederatedBatcher``. Measures:
+
+  - rounds/sec with the double-buffered prefetch worker OFF and ON
+    (same jitted round function, same batch stream);
+  - mean host batch-build seconds per round, and the fraction of that
+    build time the prefetch overlap hides. Hidden time is measured
+    directly — ``stall_seconds`` is how long the consumer actually
+    blocked waiting for a staged batch, so
+        hidden = 1 - stall / build
+    (robust to wall-clock noise on a shared host; acceptance: >= 50%);
+  - the compile-cache size of the jitted round after both sweeps (must
+    stay 1: masks/weights/ids are data, not shape).
+
+Emits ``BENCH_federated_loader.json`` next to the other results.
+
+    PYTHONPATH=src python -m benchmarks.federated_loader_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _build(quick: bool):
+    from repro.core.federation_sharded import (
+        ShardedFedSpec, batch_specs, init_round_state, make_blendfl_round)
+    from repro.core.partitioner import partition
+    from repro.data.pipeline import FederatedBatcher
+    from repro.data.synthetic import make_task, train_val_test
+    from repro.launch import shardings as sh
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train_federated import client_arrays, place_state
+
+    task = make_task("smnist")
+    n_train = 8192 if quick else 16384
+    tr, va, _ = train_val_test(task, n_train, 512, 64, seed=0)
+    clients = partition(tr, 32, seed=1)
+    counts = sorted(len(cd.all_a()) for cd in clients)
+    print(f"ragged C=32 partition: per-client A rows "
+          f"min={counts[0]} median={counts[16]} max={counts[-1]}")
+    spec = ShardedFedSpec(
+        n_clients=32, d_hidden=64 if quick else 128, n_layers=2,
+        seq_a=task.seq_a, feat_a=task.feat_a, seq_b=task.seq_b,
+        feat_b=task.feat_b, out_dim=task.out_dim, kind=task.kind,
+        n_partial=128, n_frag=128, n_paired=128, n_val=512, lr=1e-2,
+        optimizer="adamw")
+    mesh = make_host_mesh()
+    shard = sh.batch_shardings(mesh, batch_specs(spec, ragged=True))
+    batcher = FederatedBatcher(
+        [client_arrays(cd) for cd in clients], spec,
+        {"val_a": va.x_a, "val_b": va.x_b, "val_y": va.y},
+        seed=0, shardings=shard)
+    return spec, batcher, jax.jit(make_blendfl_round(spec)), mesh
+
+
+def _sweep(batcher, round_fn, state0, start: int, n: int, prefetch: int):
+    """n timed rounds from a common start state; returns (s/round,
+    host-build s/round, consumer-stall s/round)."""
+    b0, s0 = batcher.build_seconds, batcher.stall_seconds
+    t0 = time.perf_counter()
+    state = state0
+    for _, batch in batcher.rounds(start, start + n, prefetch=prefetch):
+        state, metrics = round_fn(state, batch)
+    jax.block_until_ready(state)
+    return ((time.perf_counter() - t0) / n,
+            (batcher.build_seconds - b0) / n,
+            (batcher.stall_seconds - s0) / n)
+
+
+def main(quick: bool = False) -> None:
+    from repro.core.federation_sharded import init_round_state
+    from repro.launch.train_federated import place_state
+
+    print("\n=== federated loader: ragged C=32 round, prefetch overlap ===")
+    spec, batcher, round_fn, mesh = _build(quick)
+    state0 = place_state(init_round_state(jax.random.PRNGKey(0), spec), mesh)
+    # warmup: compile + first transfer
+    for _, batch in batcher.rounds(0, 1, prefetch=0):
+        jax.block_until_ready(round_fn(state0, batch)[0])
+
+    n = 4 if quick else 8
+    t_nopf, build_nopf, _ = _sweep(batcher, round_fn, state0, 1, n, prefetch=0)
+    t_pf, build_pf, stall = _sweep(batcher, round_fn, state0, 1, n, prefetch=1)
+    caches = int(round_fn._cache_size())
+    # build time the consumer never saw: it only waited `stall` (includes
+    # the unhideable first build of the stream)
+    hidden = 1.0 - stall / max(build_pf, 1e-9)
+    rec = {
+        "n_clients": 32, "rounds_timed": n,
+        "s_per_round_no_prefetch": round(t_nopf, 4),
+        "s_per_round_prefetch": round(t_pf, 4),
+        "rounds_per_sec_prefetch": round(1.0 / t_pf, 3),
+        "host_build_s_per_round": round(build_pf, 4),
+        "consumer_stall_s_per_round": round(stall, 4),
+        "hidden_frac_of_build": round(hidden, 3),
+        "compile_cache": caches,
+    }
+    print(f"no-prefetch {t_nopf:.3f}s/round | prefetch {t_pf:.3f}s/round "
+          f"({rec['rounds_per_sec_prefetch']} rounds/s) | host build "
+          f"{build_pf:.3f}s/round, stall {stall:.3f}s -> {hidden:.0%} hidden "
+          f"| cache {caches}")
+    assert caches == 1, "ragged rounds must reuse the one compiled program"
+    if hidden < 0.5:
+        print(f"WARNING: prefetch hid only {hidden:.0%} of host build time "
+              "(target >= 50%)")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out = os.path.join(RESULTS_DIR, "BENCH_federated_loader.json")
+    with open(out, "w") as f:
+        json.dump({"bench": "federated_loader",
+                   "backend": jax.default_backend(), "record": rec}, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

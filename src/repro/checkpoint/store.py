@@ -3,14 +3,25 @@
 Layout:  <dir>/step_<N>/arrays.npz   flattened leaves keyed by path string
          <dir>/step_<N>/manifest.json  treedef + shapes/dtypes + metadata
 
+Writes are atomic: both files land in a ``step_<N>.tmp`` staging dir
+that is ``os.rename``d into place only once complete, so a crash
+mid-write can never leave a partial ``step_<N>`` for ``latest_step`` to
+select (stale ``.tmp`` dirs are ignored by the step regex and swept on
+the next save of the same step).
+
 On restore we fetch to host then (optionally) device_put with the target
-sharding, which is how a multi-host restore distributes shards.
+sharding, which is how a multi-host restore distributes shards. Restored
+leaves are validated against the target tree's shapes AND dtypes: a
+kind mismatch (e.g. an int32 ``last_round`` leaf restored into a float
+tree) raises instead of silently reinterpreting; within-kind width
+differences (f64 -> f32) are cast to the target dtype.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import shutil
 
 import jax
 import numpy as np
@@ -21,15 +32,23 @@ def _flatten_with_paths(tree):
     items = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key in items:
+            # nested {"a": {"b": ...}} collides with a literal "a/b" key —
+            # one leaf would silently win on save and both would restore
+            # from the same array
+            raise ValueError(f"duplicate flattened checkpoint key {key!r}")
         items[key] = np.asarray(leaf)
     return items, treedef
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: dict | None = None) -> str:
     out = os.path.join(ckpt_dir, f"step_{step:08d}")
-    os.makedirs(out, exist_ok=True)
+    tmp = out + ".tmp"
+    if os.path.isdir(tmp):  # stale staging dir from a crashed writer
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     items, _ = _flatten_with_paths(tree)
-    np.savez(os.path.join(out, "arrays.npz"), **items)
+    np.savez(os.path.join(tmp, "arrays.npz"), **items)
     manifest = {
         "step": step,
         "keys": sorted(items.keys()),
@@ -37,19 +56,47 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: dict | None = None
         "dtypes": {k: str(v.dtype) for k, v in items.items()},
         "metadata": metadata or {},
     }
-    with open(os.path.join(out, "manifest.json"), "w") as f:
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
+    # overwrite via swap, never delete-before-rename: the old step moves
+    # aside as ``.old`` (which latest_step/restore treat as a readable
+    # fallback), the new one renames into place, and only then is the old
+    # data removed — at every instant a complete copy of the step stays
+    # findable (a stale .old is swept only while out exists and wins)
+    old = out + ".old"
+    if os.path.isdir(out):
+        if os.path.isdir(old):
+            shutil.rmtree(old)
+        os.rename(out, old)
+    os.rename(tmp, out)
+    shutil.rmtree(old, ignore_errors=True)
     return out
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    """Resolve a step to its directory, falling back to the ``.old`` copy
+    a crashed overwrite swap left aside. Pure read-path resolution — no
+    renames here, so concurrent readers never race a live writer's swap."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.isdir(path):
+        return path
+    if os.path.isdir(path + ".old"):
+        return path + ".old"
+    raise FileNotFoundError(f"no checkpoint for step {step} under {ckpt_dir}")
 
 
 def latest_step(ckpt_dir: str) -> int | None:
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [
+    # a ``step_N.old`` with no ``step_N`` is the complete previous copy a
+    # crashed overwrite swap moved aside — still a restorable step (the
+    # next save of that step sweeps it; .tmp dirs stay invisible: they
+    # may be partial or belong to a live writer)
+    steps = {
         int(m.group(1))
         for d in os.listdir(ckpt_dir)
-        if (m := re.fullmatch(r"step_(\d+)", d))
-    ]
+        if (m := re.fullmatch(r"step_(\d+)(\.old)?", d))
+    }
     return max(steps) if steps else None
 
 
@@ -59,7 +106,7 @@ def restore_checkpoint(ckpt_dir: str, target_tree, step: int | None = None, shar
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    path = _step_dir(ckpt_dir, step)
     data = np.load(os.path.join(path, "arrays.npz"))
     # `items` preserves tree-flatten order (dict insertion order), so the
     # restored leaves line up with the target treedef.
@@ -71,6 +118,13 @@ def restore_checkpoint(ckpt_dir: str, target_tree, step: int | None = None, shar
         arr = data[key]
         if tuple(arr.shape) != tuple(want.shape):
             raise ValueError(f"shape mismatch for {key!r}: {arr.shape} vs {want.shape}")
+        want_dtype = np.dtype(want.dtype)
+        if arr.dtype != want_dtype:
+            if arr.dtype.kind != want_dtype.kind:
+                raise ValueError(
+                    f"dtype mismatch for {key!r}: checkpoint {arr.dtype} vs "
+                    f"target {want_dtype} (different kinds — refusing to cast)")
+            arr = arr.astype(want_dtype)
         if sharding is not None:
             arr = jax.device_put(arr, sharding)
         out_leaves.append(arr)

@@ -311,10 +311,21 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
         flags = {"f_A": batch.get("part_a"), "f_B": batch.get("part_b")}
         sub = _state_subset(opt_state, VFL_GROUPS)
         new_params, sub = _masked_opt_update(opt, grads, sub, params, flags)
-        upd_srv, srv_state = srv_opt.update(g_srv, srv_state, server_gmv)
-        server_gmv = optim.apply_updates(server_gmv, upd_srv)
-        return (dict(models, **new_params), server_gmv,
-                _state_merge(opt_state, sub), srv_state, loss)
+        upd_srv, new_srv = srv_opt.update(g_srv, srv_state, server_gmv)
+        new_gmv = optim.apply_updates(server_gmv, upd_srv)
+        if batch.get("w") is not None:
+            # a weighted round with NO live aligned row has exactly-zero
+            # grads, but AdamW would still decay the server head's
+            # moments, advance its schedule step, and weight-decay the
+            # params — skip the server update entirely, the same "empty
+            # batch" contract the part flags enforce for clients
+            live = jnp.any(batch["w"] > 0)
+            new_gmv = jax.tree.map(
+                lambda n, o: jnp.where(live, n, o), new_gmv, server_gmv)
+            new_srv = jax.tree.map(
+                lambda n, o: jnp.where(live, n, o), new_srv, srv_state)
+        return (dict(models, **new_params), new_gmv,
+                _state_merge(opt_state, sub), new_srv, loss)
 
     # ---- phase 3: local multimodal training on paired rows (lines 24-29) ----
 

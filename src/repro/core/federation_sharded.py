@@ -250,29 +250,46 @@ def make_blendfl_round(spec: ShardedFedSpec):
             staleness = None
         server_gmv, srv_state = state["server_gmv"], state["srv_opt"]
 
-        # phase 1: local unimodal training (uniform rows -> all-ones masks)
+        # phase 1: local unimodal training. Ragged federations (the
+        # FederatedBatcher) ship real 0/1 row masks; the uniform synthetic
+        # path omits them and every padded row is live.
         p1 = {"xa": batch["partial_a"], "ya": batch["partial_ya"],
-              "ma": jnp.ones(batch["partial_ya"].shape[:2], jnp.float32),
+              "ma": batch.get("partial_ma",
+                              jnp.ones(batch["partial_ya"].shape[:2], jnp.float32)),
               "xb": batch["partial_b"], "yb": batch["partial_yb"],
-              "mb": jnp.ones(batch["partial_yb"].shape[:2], jnp.float32)}
+              "mb": batch.get("partial_mb",
+                              jnp.ones(batch["partial_yb"].shape[:2], jnp.float32))}
         models, opt_state, i1 = fns.unimodal_step(models, opt_state, p1)
-        loss_uni = (jnp.mean(i1["loss_a"]) + jnp.mean(i1["loss_b"])) / 2
+        # average over clients that actually held rows (all of them in the
+        # uniform layout, where this reduces to the plain mean)
+        wa = (i1["n_a"] > 0).astype(jnp.float32)
+        wb = (i1["n_b"] > 0).astype(jnp.float32)
+        loss_uni = ((jnp.sum(i1["loss_a"] * wa) + jnp.sum(i1["loss_b"] * wb))
+                    / jnp.maximum(jnp.sum(wa) + jnp.sum(wb), 1.0))
 
         # phase 2: split (VFL) training; identity gather on the a side,
-        # the PSI permutation on the b side
+        # the PSI permutation on the b side. ``frag_w`` zero-weights
+        # padded/unmatched alignment rows; ``frag_part_*`` excludes
+        # clients with no live aligned rows from the param update.
         p2 = {"xa": batch["frag_a"], "xb": batch["frag_b"],
               "gather_a": jnp.arange(K * spec.n_frag, dtype=jnp.int32),
               "gather_b": batch["perm_b"],
-              "y": batch["frag_y"].reshape(K * spec.n_frag, -1)}
+              "y": batch["frag_y"].reshape(K * spec.n_frag, -1),
+              "w": batch.get("frag_w"),
+              "part_a": batch.get("frag_part_a"),
+              "part_b": batch.get("frag_part_b")}
         models, server_gmv, opt_state, srv_state, loss_vfl = fns.vfl_step(
             models, server_gmv, opt_state, srv_state, p2)
 
         # phase 3: local multimodal training on paired rows
         p3 = {"xa": batch["paired_a"], "xb": batch["paired_b"],
               "y": batch["paired_y"],
-              "m": jnp.ones(batch["paired_y"].shape[:2], jnp.float32)}
+              "m": batch.get("paired_m",
+                             jnp.ones(batch["paired_y"].shape[:2], jnp.float32))}
         models, opt_state, i3 = fns.paired_step(models, opt_state, p3)
-        loss_paired = jnp.mean(i3["loss"])
+        wp = (i3["n"] > 0).astype(jnp.float32)
+        loss_paired = (jnp.sum(i3["loss"] * wp)
+                       / jnp.maximum(jnp.sum(wp), 1.0))
 
         # phase 4: BlendAvg aggregation + broadcast. Full participation:
         # the broadcast is free under SPMD (the reduction leaves the blend
@@ -303,11 +320,14 @@ def make_blendfl_round(spec: ShardedFedSpec):
     return round_fn
 
 
-def batch_specs(spec: ShardedFedSpec):
+def batch_specs(spec: ShardedFedSpec, ragged: bool = False):
     """ShapeDtypeStructs for one federated round's inputs (dry-run).
     Training arrays carry the per-round client axis K (= C at full
     participation); a sampled round additionally takes the K sampled
-    client ids."""
+    client ids. ``ragged=True`` adds the heterogeneous-row-count keys the
+    ``FederatedBatcher`` emits: per-row 0/1 masks for phases 1/3, the
+    per-aligned-row weight vector for phase 2, and the per-client VFL
+    participation flags."""
     f32 = jnp.float32
     K = spec.k_round
     sds = jax.ShapeDtypeStruct
@@ -327,6 +347,15 @@ def batch_specs(spec: ShardedFedSpec):
         "val_b": sds((spec.n_val, spec.seq_b, spec.feat_b), f32),
         "val_y": sds((spec.n_val, spec.out_dim), f32),
     }
+    if ragged:
+        specs.update({
+            "partial_ma": sds((K, spec.n_partial), f32),
+            "partial_mb": sds((K, spec.n_partial), f32),
+            "frag_w": sds((K * spec.n_frag,), f32),
+            "frag_part_a": sds((K,), jnp.bool_),
+            "frag_part_b": sds((K,), jnp.bool_),
+            "paired_m": sds((K, spec.n_paired), f32),
+        })
     if spec.n_sampled:
         specs["sampled"] = sds((K,), jnp.int32)
     return specs

@@ -1,4 +1,5 @@
 from repro.data.synthetic import SyntheticMultimodal, TaskSpec, make_task
-from repro.data.pipeline import Batcher, token_batches
+from repro.data.pipeline import Batcher, FederatedBatcher, token_batches
 
-__all__ = ["SyntheticMultimodal", "TaskSpec", "make_task", "Batcher", "token_batches"]
+__all__ = ["SyntheticMultimodal", "TaskSpec", "make_task", "Batcher",
+           "FederatedBatcher", "token_batches"]

@@ -1,9 +1,41 @@
 """Batching pipelines.
 
-``Batcher`` serves the federated experiments (numpy in, dict-of-arrays out).
-``token_batches`` serves the LM examples (synthetic token streams).
+``Batcher`` serves the in-host federated experiments (numpy in,
+dict-of-arrays out). ``token_batches`` serves the LM examples (synthetic
+token streams). ``FederatedBatcher`` is the federated data subsystem
+for the sharded SPMD round: it turns C ragged per-client datasets —
+heterogeneous row counts, zero-row modalities included — into the static
+``(K, N, ...)`` phase batches ``federation_sharded.make_blendfl_round``
+consumes, with real 0/1 masks instead of the uniform all-ones layout.
+
+Design points:
+
+- **Stateless per-round RNG.** Every batch is a pure function of
+  ``(seed, round)`` (``np.random.default_rng([seed, round])`` draws the
+  row subsets, the VFL alignment, and the K-of-C sampled client ids), so
+  a federation resumed from a round-``r`` checkpoint rebuilds the exact
+  byte-identical batch stream — the property the round-state
+  checkpointing in ``repro.launch.train_federated`` relies on for
+  bit-exact resume.
+- **Static shapes, data-dependent masks.** Row counts pad up to the
+  spec's ``n_partial``/``n_frag``/``n_paired``; masks mark live rows.
+  A client with a zero-row modality gets an all-zero mask and is
+  excluded from that phase's parameter/momentum update by the engine's
+  ``_where_clients`` semantics. The VFL alignment is rebuilt per round
+  from global sample ids: aligned rows keep weight 1, padded or
+  partner-less rows weight 0, so the alignment's flattened ``(K*Nf,)``
+  shape never changes and the round compiles once.
+- **Double-buffered host->device transfer.** ``rounds()`` stages the
+  next round's batch on a worker thread (build + ``jax.device_put`` with
+  the dry-run shardings from ``repro.launch.shardings``) while the
+  device executes the current round, hiding host batch-build time
+  behind device compute.
 """
 from __future__ import annotations
+
+import queue
+import threading
+import time
 
 import numpy as np
 
@@ -46,3 +78,267 @@ def token_batches(vocab_size: int, batch: int, seq: int, n_batches: int, seed: i
         # inject predictable bigram structure: even positions repeat previous token
         base[:, 2::2] = base[:, 1:-1:2]
         yield {"tokens": base[:, :-1].astype(np.int32), "labels": base[:, 1:].astype(np.int32)}
+
+
+# ------------------------------------------------- federated batch loader --
+
+_F32 = np.float32
+
+# per-client dataset keys the loader understands; all optional (missing or
+# zero-row = that client holds no such data)
+CLIENT_KEYS = ("partial_a", "partial_ya", "partial_b", "partial_yb",
+               "frag_a", "frag_y", "frag_ids_a", "frag_b", "frag_ids_b",
+               "paired_a", "paired_b", "paired_y")
+
+_SENTINEL = object()  # end-of-stream marker for the prefetch queue
+
+
+def _rows(ds: dict, key: str) -> int:
+    v = ds.get(key)
+    return 0 if v is None else len(v)
+
+
+class FederatedBatcher:
+    """Federated batch loader: C ragged per-client datasets -> one static
+    ``(K, N, ...)`` masked round batch per call, double-buffered to device.
+
+    Parameters
+    ----------
+    clients : list of per-client dict-of-arrays datasets (see
+        ``CLIENT_KEYS``; ``repro.launch.train_federated.client_arrays``
+        converts a ``partitioner.ClientData``). Row counts may differ per
+        client and any modality may be absent/zero-row.
+    spec : ``federation_sharded.ShardedFedSpec`` (duck-typed: only the
+        static shape fields and ``n_sampled``/``k_round`` are read). The
+        spec's seq/feat/out dims must match the data.
+    val : dict with ``val_a``/``val_b``/``val_y`` — the replicated server
+        validation set, transferred once and reused in every batch.
+    seed : base seed; round ``r``'s batch is a pure function of
+        ``(seed, r)`` (crash-safe resume rebuilds the identical stream).
+    shardings : optional pytree of shardings matching ``batch_specs()``
+        (e.g. from ``repro.launch.shardings.batch_shardings``); passed to
+        ``jax.device_put``. None = default placement.
+    prefetch : staging depth of ``rounds()``; 0 disables the worker
+        thread (build strictly alternates with compute).
+    """
+
+    def __init__(self, clients: list, spec, val: dict, *, seed: int = 0,
+                 shardings=None, prefetch: int = 1):
+        self.clients = [dict(c) for c in clients]
+        if len(self.clients) != spec.n_clients:
+            raise ValueError(f"{len(self.clients)} client datasets for "
+                             f"spec.n_clients={spec.n_clients}")
+        paired_keys = [("frag_a", "frag_ids_a"), ("frag_b", "frag_ids_b"),
+                       ("frag_a", "frag_y"), ("partial_a", "partial_ya"),
+                       ("partial_b", "partial_yb"), ("paired_a", "paired_b"),
+                       ("paired_a", "paired_y")]
+        for i, c in enumerate(self.clients):
+            for k in c:
+                if k not in CLIENT_KEYS:
+                    raise KeyError(f"unknown client dataset key {k!r}")
+            for ka, kb in paired_keys:
+                if _rows(c, ka) != _rows(c, kb):
+                    raise ValueError(
+                        f"client {i}: {ka} has {_rows(c, ka)} rows but {kb} "
+                        f"has {_rows(c, kb)} — per-client arrays of one "
+                        "group must align row-for-row")
+        self.spec = spec
+        self.seed = int(seed)
+        self.shardings = shardings
+        self.prefetch = int(prefetch)
+        self.build_seconds = 0.0  # cumulative host batch-build time
+        self.stall_seconds = 0.0  # prefetch mode: consumer time blocked
+        # waiting for a staged batch (the build time prefetch FAILED to hide)
+        self.rounds_built = 0
+        # the replicated val set never changes: transfer once, with the
+        # configured shardings so the jitted round never re-shards it
+        import jax
+
+        self._val = {
+            k: jax.device_put(np.ascontiguousarray(val[k], _F32),
+                              None if shardings is None else shardings.get(k))
+            for k in ("val_a", "val_b", "val_y")}
+
+    # ---- static interface ----
+
+    def batch_specs(self) -> dict:
+        """ShapeDtypeStructs of every key a round batch carries (the
+        ragged superset of ``federation_sharded.batch_specs``, including
+        ``perm_b`` and — under sampling — ``sampled``)."""
+        from repro.core.federation_sharded import batch_specs
+
+        return batch_specs(self.spec, ragged=True)
+
+    # ---- host-side batch construction (pure in (seed, round)) ----
+
+    def _draw(self, rng, avail: int, cap: int) -> np.ndarray:
+        """Row subset for one (client, phase): all rows when they fit,
+        else a without-replacement subsample of the static capacity."""
+        if avail <= cap:
+            return np.arange(avail)
+        return rng.permutation(avail)[:cap]
+
+    def build(self, round_no: int) -> dict:
+        """Build round ``round_no``'s host batch (numpy, unsharded)."""
+        t0 = time.perf_counter()
+        s = self.spec
+        rng = np.random.default_rng([self.seed, int(round_no)])
+        K = s.k_round
+        if s.n_sampled:
+            idx = np.sort(rng.choice(s.n_clients, size=K, replace=False))
+        else:
+            idx = np.arange(s.n_clients)
+        sub = [self.clients[i] for i in idx]
+
+        batch = {}
+        # phases 1 & 3: padded slabs + 0/1 row masks
+        slabs = [
+            ("partial_a", "partial_ya", "partial_ma", s.n_partial, s.seq_a, s.feat_a),
+            ("partial_b", "partial_yb", "partial_mb", s.n_partial, s.seq_b, s.feat_b),
+            ("paired_a", "paired_y", "paired_m", s.n_paired, s.seq_a, s.feat_a),
+            ("paired_b", None, None, s.n_paired, s.seq_b, s.feat_b),
+        ]
+        paired_sel = [None] * K  # paired rows must align across modalities
+        for xk, yk, mk, cap, seq, feat in slabs:
+            x = np.zeros((K, cap, seq, feat), _F32)
+            y = np.zeros((K, cap, s.out_dim), _F32) if yk else None
+            m = np.zeros((K, cap), _F32) if mk else None
+            for k, ds in enumerate(sub):
+                if xk == "paired_b":
+                    sel = paired_sel[k]  # same rows as paired_a
+                else:
+                    sel = self._draw(rng, _rows(ds, xk), cap)
+                    if xk == "paired_a":
+                        paired_sel[k] = sel
+                n = len(sel)
+                if n == 0:
+                    continue
+                x[k, :n] = ds[xk][sel]
+                if y is not None:
+                    y[k, :n] = ds[yk][sel]
+                if m is not None:
+                    m[k, :n] = 1.0
+            batch[xk] = x
+            if y is not None:
+                batch[yk] = y
+            if m is not None:
+                batch[mk] = m
+
+        # phase 2: fragmented slabs + id-based alignment (the PSI output).
+        # Flattened a-side row i pairs with flattened b-side row
+        # perm_b[i]; rows that are padding or whose partner modality was
+        # not drawn this round carry weight 0 (static shape, live mask).
+        nf = s.n_frag
+        fa = np.zeros((K, nf, s.seq_a, s.feat_a), _F32)
+        fb = np.zeros((K, nf, s.seq_b, s.feat_b), _F32)
+        fy = np.zeros((K, nf, s.out_dim), _F32)
+        ids_a = np.full(K * nf, -1, np.int64)
+        ids_b = np.full(K * nf, -2, np.int64)  # never matches ids_a padding
+        for k, ds in enumerate(sub):
+            sel_a = self._draw(rng, _rows(ds, "frag_a"), nf)
+            sel_b = self._draw(rng, _rows(ds, "frag_b"), nf)
+            if len(sel_a):
+                fa[k, : len(sel_a)] = ds["frag_a"][sel_a]
+                fy[k, : len(sel_a)] = ds["frag_y"][sel_a]
+                ids_a[k * nf : k * nf + len(sel_a)] = ds["frag_ids_a"][sel_a]
+            if len(sel_b):
+                fb[k, : len(sel_b)] = ds["frag_b"][sel_b]
+                ids_b[k * nf : k * nf + len(sel_b)] = ds["frag_ids_b"][sel_b]
+        bpos = np.flatnonzero(ids_b >= 0)
+        order = np.argsort(ids_b[bpos], kind="stable")
+        sorted_b = ids_b[bpos][order]
+        if len(sorted_b):
+            loc = np.clip(np.searchsorted(sorted_b, ids_a), 0, len(sorted_b) - 1)
+            hit = (ids_a >= 0) & (sorted_b[loc] == ids_a)
+            perm_b = np.where(hit, bpos[order][loc], 0)
+        else:
+            hit = np.zeros(K * nf, bool)
+            perm_b = np.zeros(K * nf, np.int64)
+        part_a = np.zeros(K, bool)
+        part_b = np.zeros(K, bool)
+        if hit.any():
+            part_a[np.unique(np.flatnonzero(hit) // nf)] = True
+            part_b[np.unique(perm_b[hit] // nf)] = True
+        fy[~hit.reshape(K, nf)] = 0.0  # padded/unmatched rows carry no label
+        batch.update({
+            "frag_a": fa, "frag_b": fb, "frag_y": fy,
+            "perm_b": perm_b.astype(np.int32),
+            "frag_w": hit.astype(_F32),
+            "frag_part_a": part_a, "frag_part_b": part_b,
+        })
+        if s.n_sampled:
+            batch["sampled"] = idx.astype(np.int32)
+        self.build_seconds += time.perf_counter() - t0
+        self.rounds_built += 1
+        return batch
+
+    def put(self, host_batch: dict) -> dict:
+        """Transfer one host batch to device with the configured
+        shardings; the cached val set rides along untouched."""
+        import jax
+
+        if self.shardings is not None:
+            moved = {k: jax.device_put(v, self.shardings[k])
+                     for k, v in host_batch.items()}
+        else:
+            moved = jax.device_put(host_batch)
+        return dict(moved, **self._val)
+
+    # ---- double-buffered round stream ----
+
+    def rounds(self, start: int, stop: int, prefetch: int | None = None):
+        """Yield ``(round_no, device_batch)`` for rounds [start, stop).
+
+        With ``prefetch > 0`` a daemon worker builds and stages up to
+        ``prefetch`` future HOST batches while the caller's round executes
+        on device (numpy slab assembly releases the GIL, and the caller
+        blocks in C++ when it reads round metrics — so the build
+        genuinely overlaps device compute). The device transfer itself
+        stays on the consumer thread: ``jax.device_put`` from a second
+        thread contends with the XLA CPU compute pool, and the copy is
+        cheap next to the build. ``stall_seconds`` accumulates consumer
+        time spent waiting for a staged batch — the build time prefetch
+        failed to hide."""
+        depth = self.prefetch if prefetch is None else int(prefetch)
+        if depth <= 0:
+            for r in range(start, stop):
+                yield r, self.put(self.build(r))
+            return
+
+        q: queue.Queue = queue.Queue(maxsize=depth)
+        stop_evt = threading.Event()
+
+        def _feed(item) -> bool:
+            while not stop_evt.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def worker():
+            try:
+                for r in range(start, stop):
+                    if stop_evt.is_set() or not _feed((r, self.build(r))):
+                        return
+                _feed(_SENTINEL)
+            except BaseException as e:  # surface build errors to the
+                _feed(e)  # consumer instead of hanging it on q.get()
+
+        t = threading.Thread(target=worker, daemon=True,
+                             name="federated-batcher-prefetch")
+        t.start()
+        try:
+            while True:
+                t0 = time.perf_counter()
+                item = q.get()
+                self.stall_seconds += time.perf_counter() - t0
+                if item is _SENTINEL:
+                    return
+                if isinstance(item, BaseException):
+                    raise item
+                r, host_batch = item
+                yield r, self.put(host_batch)
+        finally:
+            stop_evt.set()

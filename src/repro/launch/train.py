@@ -71,8 +71,21 @@ def main() -> None:
     start = 0
     if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
         start = latest_step(args.ckpt_dir)
-        params = restore_checkpoint(args.ckpt_dir, params, step=start)
-        print(f"restored step {start} from {args.ckpt_dir}")
+        try:
+            # restore params AND optimizer state together: restoring
+            # params alone into a fresh opt.init() would zero the AdamW
+            # moments and reset the schedule step, silently replaying
+            # warmup on resume
+            restored = restore_checkpoint(
+                args.ckpt_dir, {"params": params, "opt_state": opt_state},
+                step=start)
+            params, opt_state = restored["params"], restored["opt_state"]
+            print(f"restored step {start} (params + opt_state) from {args.ckpt_dir}")
+        except KeyError:  # legacy params-only layout: loudly degrade
+            params = restore_checkpoint(args.ckpt_dir, params, step=start)
+            print(f"restored step {start} from LEGACY params-only checkpoint "
+                  f"{args.ckpt_dir}: optimizer moments/schedule step start "
+                  "fresh (warmup replays)")
 
     p_specs = jax.eval_shape(lambda: params)
     jstep = jax.jit(step_fn,
@@ -90,7 +103,8 @@ def main() -> None:
                 print(f"step {i+1:5d} loss {loss:.4f} "
                       f"({(time.time()-t0)/(i+1-start):.2f}s/step)", flush=True)
             if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
-                save_checkpoint(args.ckpt_dir, i + 1, params,
+                save_checkpoint(args.ckpt_dir, i + 1,
+                                {"params": params, "opt_state": opt_state},
                                 {"arch": cfg.name, "loss": float(metrics['loss'])})
     print("done.")
 

@@ -135,6 +135,109 @@ def test_checkpoint_picks_latest(tmp_path):
     np.testing.assert_array_equal(np.asarray(out["a"]), np.ones(2))
 
 
+def test_checkpoint_save_is_atomic(tmp_path):
+    """A crash mid-write must never leave a partial ``step_N`` for
+    ``latest_step`` to pick up: writes stage in ``step_N.tmp`` and rename
+    into place; stale .tmp dirs are invisible to step selection."""
+    import os
+
+    # simulate a writer that died mid-write: a .tmp staging dir exists
+    crashed = tmp_path / "step_00000009.tmp"
+    crashed.mkdir()
+    (crashed / "arrays.npz").write_bytes(b"partial garbage")
+    assert latest_step(str(tmp_path)) is None  # .tmp is not a checkpoint
+
+    save_checkpoint(str(tmp_path), 3, {"a": jnp.ones(2)})
+    assert latest_step(str(tmp_path)) == 3
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path)
+                   if d.startswith("step_00000003"))
+    # a save of the crashed step sweeps the stale staging dir
+    save_checkpoint(str(tmp_path), 9, {"a": jnp.full(2, 5.0)})
+    assert not crashed.exists()
+    out = restore_checkpoint(str(tmp_path), {"a": jnp.zeros(2)})
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.full(2, 5.0))
+    # overwriting an existing step replaces it atomically
+    save_checkpoint(str(tmp_path), 9, {"a": jnp.full(2, 7.0)})
+    out = restore_checkpoint(str(tmp_path), {"a": jnp.zeros(2)}, step=9)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.full(2, 7.0))
+
+
+def test_checkpoint_recovers_crashed_overwrite_swap(tmp_path):
+    """Crash between the overwrite swap's two renames leaves the complete
+    previous step as ``step_N.old``; latest_step/restore must still find
+    it (read-only fallback — no rename, so readers can't race a live
+    writer) instead of silently falling back to an older step."""
+    import os
+
+    save_checkpoint(str(tmp_path), 3, {"a": jnp.ones(2)})
+    save_checkpoint(str(tmp_path), 9, {"a": jnp.full(2, 9.0)})
+    # simulate the crash window: step_9 moved aside, new rename never ran
+    os.rename(tmp_path / "step_00000009", tmp_path / "step_00000009.old")
+    assert latest_step(str(tmp_path)) == 9  # found via .old, not 3
+    out = restore_checkpoint(str(tmp_path), {"a": jnp.zeros(2)})
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.full(2, 9.0))
+    # the completed step wins over its own leftover .old, which the next
+    # save of that step sweeps
+    (tmp_path / "step_00000003.old").mkdir()
+    out = restore_checkpoint(str(tmp_path), {"a": jnp.zeros(2)}, step=3)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.ones(2))
+    save_checkpoint(str(tmp_path), 3, {"a": jnp.full(2, 4.0)})
+    assert not (tmp_path / "step_00000003.old").exists()
+    # re-saving the crashed step itself also sweeps the stale .old
+    save_checkpoint(str(tmp_path), 9, {"a": jnp.full(2, 10.0)})
+    assert not (tmp_path / "step_00000009.old").exists()
+    out = restore_checkpoint(str(tmp_path), {"a": jnp.zeros(2)}, step=9)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.full(2, 10.0))
+
+
+def test_checkpoint_dtype_kind_mismatch_raises(tmp_path):
+    """An int leaf restored into a float tree (e.g. ``last_round`` into a
+    model leaf) must raise instead of passing a shape-only check."""
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.arange(3, dtype=jnp.int32)})
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        restore_checkpoint(str(tmp_path), {"a": jnp.zeros(3, jnp.float32)})
+
+
+def test_checkpoint_within_kind_casts_to_target(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"a": np.arange(3, dtype=np.float64)})
+    out = restore_checkpoint(str(tmp_path), {"a": jnp.zeros(3, jnp.float32)})
+    assert np.asarray(out["a"]).dtype == np.float32
+    np.testing.assert_array_equal(np.asarray(out["a"]), [0.0, 1.0, 2.0])
+
+
+def test_checkpoint_duplicate_flat_key_raises(tmp_path):
+    """Nested {"a": {"b": ...}} collides with a literal "a/b" key in the
+    flattened npz namespace — one leaf would silently win."""
+    tree = {"a": {"b": jnp.zeros(2)}, "a/b": jnp.ones(2)}
+    with pytest.raises(ValueError, match="duplicate"):
+        save_checkpoint(str(tmp_path), 1, tree)
+
+
+def test_train_style_resume_restores_opt_state(tmp_path):
+    """Regression for the launch/train.py resume bug: params and
+    opt_state checkpoint and restore TOGETHER, so AdamW moments and the
+    schedule step survive a resume instead of replaying warmup."""
+    from repro import optim
+
+    params = {"w": jnp.ones((2, 2)), "b": jnp.zeros(2)}
+    opt = optim.adamw(optim.linear_warmup_cosine(1e-3, warmup=10, total_steps=100))
+    opt_state = opt.init(params)
+    grads = jax.tree.map(jnp.ones_like, params)
+    for _ in range(7):
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+    save_checkpoint(str(tmp_path), 7, {"params": params, "opt_state": opt_state})
+
+    fresh = {"w": jnp.ones((2, 2)), "b": jnp.zeros(2)}
+    target = {"params": fresh, "opt_state": opt.init(fresh)}
+    restored = restore_checkpoint(str(tmp_path), target)
+    assert int(restored["opt_state"]["step"]) == 7  # schedule step survives
+    assert restored["opt_state"]["step"].dtype == np.int32
+    for a, b in zip(jax.tree.leaves(restored["opt_state"]),
+                    jax.tree.leaves(opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # -------------------------------------------------------------------- data --
 
 def test_synthetic_is_learnable_and_complementary():
