@@ -1,21 +1,30 @@
-# Test lanes. `test` (the full suite) is the tier-1 gate; `test-fast`
-# skips the @pytest.mark.slow convergence/parity tests so the local
-# verify loop stays under ~90 s.
+# Test lanes. `test` (docs-check + the full suite) is the tier-1 gate;
+# `test-fast` skips the @pytest.mark.slow convergence/parity tests so
+# the local verify loop stays under ~90 s.
 PYTEST = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -q
 
-.PHONY: test test-fast bench-sampled bench-loader train-federated
+.PHONY: test test-fast docs-check bench-sampled bench-loader bench-store \
+	train-federated
 
-test:
+test: docs-check
 	$(PYTEST)
 
 test-fast:
 	$(PYTEST) -m "not slow"
+
+# Reference checker over README.md + docs/: every module path, file
+# path, and `make` target the docs mention must exist in the tree.
+docs-check:
+	python tools/docs_check.py
 
 bench-sampled:
 	PYTHONPATH=src python -m benchmarks.sampled_round_bench
 
 bench-loader:
 	PYTHONPATH=src python -m benchmarks.federated_loader_bench
+
+bench-store:
+	PYTHONPATH=src python -m benchmarks.client_store_bench
 
 # Smoke lane: tiny ragged federation, 2 rounds, checkpoint at round 1,
 # kill-and-resume, assert bit-exact round-metric parity.

@@ -23,14 +23,10 @@ Emits ``BENCH_federated_loader.json`` next to the other results.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import jax
 import numpy as np
-
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
 def _build(quick: bool):
@@ -97,6 +93,8 @@ def main(quick: bool = False) -> None:
     # build time the consumer never saw: it only waited `stall` (includes
     # the unhideable first build of the stream)
     hidden = 1.0 - stall / max(build_pf, 1e-9)
+    from benchmarks.common import max_rss_mb, write_bench_json
+
     rec = {
         "n_clients": 32, "rounds_timed": n,
         "s_per_round_no_prefetch": round(t_nopf, 4),
@@ -106,21 +104,21 @@ def main(quick: bool = False) -> None:
         "consumer_stall_s_per_round": round(stall, 4),
         "hidden_frac_of_build": round(hidden, 3),
         "compile_cache": caches,
+        "max_rss_mb": round(max_rss_mb(), 1),
     }
     print(f"no-prefetch {t_nopf:.3f}s/round | prefetch {t_pf:.3f}s/round "
           f"({rec['rounds_per_sec_prefetch']} rounds/s) | host build "
           f"{build_pf:.3f}s/round, stall {stall:.3f}s -> {hidden:.0%} hidden "
-          f"| cache {caches}")
+          f"| cache {caches} | maxrss {rec['max_rss_mb']:.0f} MiB")
+    # emit the record BEFORE any acceptance assert: a failed acceptance
+    # must leave evidence on disk, not silently skip the write
+    write_bench_json("BENCH_federated_loader.json",
+                     {"bench": "federated_loader",
+                      "backend": jax.default_backend(), "record": rec})
     assert caches == 1, "ragged rounds must reuse the one compiled program"
     if hidden < 0.5:
         print(f"WARNING: prefetch hid only {hidden:.0%} of host build time "
               "(target >= 50%)")
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    out = os.path.join(RESULTS_DIR, "BENCH_federated_loader.json")
-    with open(out, "w") as f:
-        json.dump({"bench": "federated_loader",
-                   "backend": jax.default_backend(), "record": rec}, f, indent=2)
-    print(f"wrote {out}")
 
 
 if __name__ == "__main__":

@@ -14,15 +14,11 @@ Emits a ``BENCH_round_engine.json`` record next to the other results.
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
 def _legacy_training_round(models, server_gmv, clients, ecfg, kind, lr, bs, rng):
@@ -163,14 +159,17 @@ def main(quick: bool = False) -> None:
               f"{r['s_per_round_legacy']:9.3f} {r['speedup']:8.2f} "
               f"{r['unimodal_compile_cache_engine']:9d} "
               f"{r['unimodal_compile_cache_legacy']:9d}")
+    # record first, assert after: a cache regression must still leave
+    # the measurement on disk for the next run to compare against
+    from benchmarks.common import write_bench_json
+
+    write_bench_json("BENCH_round_engine.json",
+                     {"bench": "round_engine", "backend": jax.default_backend(),
+                      "records": records})
+    for r in records:
         assert r["unimodal_compile_cache_engine"] == 1, \
             "engine must compile the unimodal phase exactly once"
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    out = os.path.join(RESULTS_DIR, "BENCH_round_engine.json")
-    with open(out, "w") as f:
-        json.dump({"bench": "round_engine", "backend": jax.default_backend(),
-                   "records": records}, f, indent=2)
-    print(f"--> one compiled program per phase regardless of C; wrote {out}")
+    print("--> one compiled program per phase regardless of C")
 
 
 if __name__ == "__main__":

@@ -17,13 +17,9 @@ acceptance target: K=4 per-round time ≤ ~40% of the full round.
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 
 import jax
-
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
 def _make_fed(n_sampled: int, quick: bool):
@@ -72,15 +68,18 @@ def main(quick: bool = False) -> None:
         r["frac_of_full"] = round(r["s_per_round"] / max(t_full, 1e-9), 3)
         print(f"{r['K']:3d} {r['mode']:>8s} {r['s_per_round']:12.3f} "
               f"{r['frac_of_full']:8.2f} {str(r['caches']):>9s}")
+    # record first, assert after: a cache regression must still leave
+    # the measurement on disk for the next run to compare against
+    from benchmarks.common import write_bench_json
+
+    write_bench_json("BENCH_sampled_round.json",
+                     {"bench": "sampled_round", "backend": jax.default_backend(),
+                      "n_clients": 16, "records": records})
+    for r in records:
         assert r["caches"] == [1, 1, 1], \
             "sampled rounds must reuse the one compiled program per phase"
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    out = os.path.join(RESULTS_DIR, "BENCH_sampled_round.json")
-    with open(out, "w") as f:
-        json.dump({"bench": "sampled_round", "backend": jax.default_backend(),
-                   "n_clients": 16, "records": records}, f, indent=2)
     k4 = records[-1]["frac_of_full"]
-    print(f"--> K=4 round at {k4:.0%} of the full-participation round; wrote {out}")
+    print(f"--> K=4 round at {k4:.0%} of the full-participation round")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,5 @@
-from repro.checkpoint.store import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.store import (latest_step, read_metadata,
+                                    restore_checkpoint, save_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "read_metadata"]

@@ -100,6 +100,19 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
+def read_metadata(ckpt_dir: str, step: int | None = None) -> dict:
+    """The ``metadata`` dict a step was saved with (``{}`` if none) —
+    without loading any arrays. Used e.g. by the federated driver to
+    validate a resume against the data store the run was checkpointed
+    from (``store_fingerprint``)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    with open(os.path.join(_step_dir(ckpt_dir, step), "manifest.json")) as f:
+        return json.load(f).get("metadata", {})
+
+
 def restore_checkpoint(ckpt_dir: str, target_tree, step: int | None = None, sharding=None):
     """Restore into the structure of ``target_tree`` (values replaced)."""
     if step is None:

@@ -1,5 +1,6 @@
 from repro.data.synthetic import SyntheticMultimodal, TaskSpec, make_task
 from repro.data.pipeline import Batcher, FederatedBatcher, token_batches
+from repro.data.store import ClientStore, write_store
 
 __all__ = ["SyntheticMultimodal", "TaskSpec", "make_task", "Batcher",
-           "FederatedBatcher", "token_batches"]
+           "FederatedBatcher", "token_batches", "ClientStore", "write_store"]

@@ -124,7 +124,10 @@ class FederatedBatcher:
 
     def __init__(self, clients: list, spec, val: dict, *, seed: int = 0,
                  shardings=None, prefetch: int = 1):
+        # dict(c) also accepts the lazy mapping views of a ClientStore
+        # (values stay ShardRows — no shard data is read at init)
         self.clients = [dict(c) for c in clients]
+        self.store = None  # set by from_store; used for checkpoint identity
         if len(self.clients) != spec.n_clients:
             raise ValueError(f"{len(self.clients)} client datasets for "
                              f"spec.n_clients={spec.n_clients}")
@@ -158,6 +161,26 @@ class FederatedBatcher:
             k: jax.device_put(np.ascontiguousarray(val[k], _F32),
                               None if shardings is None else shardings.get(k))
             for k in ("val_a", "val_b", "val_y")}
+
+    @classmethod
+    def from_store(cls, store, spec, val: dict | None = None, *, seed: int = 0,
+                   shardings=None, prefetch: int = 1) -> "FederatedBatcher":
+        """Out-of-core loader over a ``repro.data.store.ClientStore``.
+
+        Client arrays stay on disk: ``build()``'s ``ds[key][sel]`` reads
+        open each shard's memory map, gather only the drawn rows, and
+        unmap — peak host RAM per round is O(K*N*row_bytes), independent
+        of the total dataset size. Row counts, dtype/shape validation,
+        and ``_draw`` sizing come from the store manifest (no file IO),
+        and the batch stream is bit-identical to an in-memory
+        ``FederatedBatcher`` over the same arrays for the same
+        ``(seed, round)``. ``val=None`` reads the server validation set
+        the store's ``import`` recorded.
+        """
+        b = cls(store.clients(), spec, store.val() if val is None else val,
+                seed=seed, shardings=shardings, prefetch=prefetch)
+        b.store = store
+        return b
 
     # ---- static interface ----
 

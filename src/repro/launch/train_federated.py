@@ -20,6 +20,19 @@ this; the ``make train-federated`` smoke lane runs it).
     PYTHONPATH=src python -m repro.launch.train_federated \
         --rounds 8 --clients 8 --ckpt-dir /tmp/fedckpt --ckpt-every 2
     PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume
+
+Out-of-core federations: the one-shot ``import`` subcommand converts the
+in-memory synthetic partition to a ``repro.data.store.ClientStore`` of
+per-client shard files, and ``--store-dir`` runs the federation straight
+off those shards — ``build()`` memory-maps only the drawn row subsets, so
+peak host RSS per round is O(K*N*row_bytes) regardless of dataset size,
+and round-state checkpoints carry the store fingerprint so a resume
+against a different store fails loudly instead of silently diverging.
+
+    PYTHONPATH=src python -m repro.launch.train_federated import \
+        --store-dir /tmp/fedstore --clients 32 --n-train 65536
+    PYTHONPATH=src python -m repro.launch.train_federated \
+        --store-dir /tmp/fedstore --rounds 8 --ckpt-dir /tmp/fedckpt
 """
 from __future__ import annotations
 
@@ -29,7 +42,8 @@ import time
 import jax
 import numpy as np
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import (latest_step, read_metadata, restore_checkpoint,
+                              save_checkpoint)
 from repro.core.federation_sharded import (
     ShardedFedSpec,
     batch_specs,
@@ -38,6 +52,7 @@ from repro.core.federation_sharded import (
 )
 from repro.core.partitioner import ClientData, partition
 from repro.data.pipeline import FederatedBatcher
+from repro.data.store import ClientStore, write_store
 from repro.data.synthetic import make_task, train_val_test
 from repro.launch import shardings as sh
 from repro.launch.mesh import make_host_mesh
@@ -57,28 +72,77 @@ def client_arrays(cd: ClientData) -> dict:
     }
 
 
-def build_federation(args) -> tuple:
-    """(spec, batcher, round_fn) for a ragged synthetic federation."""
+def import_store(args) -> ClientStore:
+    """One-shot conversion: in-memory synthetic partition -> on-disk
+    ``ClientStore``. The manifest records the task dims, seeds, and val
+    size, so a later ``--store-dir`` run is fully self-describing (no
+    data-generation args needed, no dataset materialized in host RAM)."""
+    if not args.store_dir:
+        raise SystemExit("import requires --store-dir")
     task = make_task(args.task)
     tr, va, _ = train_val_test(task, args.n_train, args.n_val, 64,
                                seed=args.data_seed)
     clients = partition(tr, args.clients, seed=args.data_seed,
                         dirichlet_alpha=args.dirichlet_alpha)
+    meta = {"task": args.task, "kind": task.kind, "out_dim": task.out_dim,
+            "seq_a": task.seq_a, "feat_a": task.feat_a,
+            "seq_b": task.seq_b, "feat_b": task.feat_b,
+            "n_train": args.n_train, "n_val": args.n_val,
+            "data_seed": args.data_seed,
+            "dirichlet_alpha": args.dirichlet_alpha}
+    store = write_store(args.store_dir, [client_arrays(cd) for cd in clients],
+                        {"val_a": va.x_a, "val_b": va.x_b, "val_y": va.y},
+                        meta=meta, overwrite=args.overwrite)
+    rows = sum(store.rows(c, k) for c in range(store.n_clients)
+               for k in store.client_keys(c))
+    print(f"imported {store.n_clients} clients ({rows} shard rows, task "
+          f"{args.task!r}) -> {args.store_dir}  "
+          f"[fingerprint {store.fingerprint()[:12]}]")
+    return store
+
+
+def build_federation(args) -> tuple:
+    """(spec, batcher, round_fn, mesh) for a ragged federation — in-memory
+    synthetic by default, out-of-core when ``--store-dir`` names an
+    imported ``ClientStore`` (client arrays then stay on disk; only the
+    drawn row subsets are ever materialized)."""
     # static per-round capacities sized to the ragged partition
     n_partial = max(args.rows_cap, 1)
-    spec = ShardedFedSpec(
-        n_clients=args.clients, d_hidden=args.d_hidden, n_layers=args.n_layers,
-        seq_a=task.seq_a, feat_a=task.feat_a, seq_b=task.seq_b,
-        feat_b=task.feat_b, out_dim=task.out_dim, kind=task.kind,
-        n_partial=n_partial, n_frag=n_partial, n_paired=n_partial,
-        n_val=args.n_val, lr=args.lr, optimizer=args.optimizer,
-        n_sampled=args.n_sampled)
+    store = None
+    if getattr(args, "store_dir", None):
+        store = ClientStore(args.store_dir)
+        m = store.meta  # dims recorded at import time, not CLI args
+        spec = ShardedFedSpec(
+            n_clients=store.n_clients, d_hidden=args.d_hidden,
+            n_layers=args.n_layers, seq_a=m["seq_a"], feat_a=m["feat_a"],
+            seq_b=m["seq_b"], feat_b=m["feat_b"], out_dim=m["out_dim"],
+            kind=m["kind"], n_partial=n_partial, n_frag=n_partial,
+            n_paired=n_partial, n_val=m["n_val"], lr=args.lr,
+            optimizer=args.optimizer, n_sampled=args.n_sampled)
+    else:
+        task = make_task(args.task)
+        tr, va, _ = train_val_test(task, args.n_train, args.n_val, 64,
+                                   seed=args.data_seed)
+        clients = partition(tr, args.clients, seed=args.data_seed,
+                            dirichlet_alpha=args.dirichlet_alpha)
+        spec = ShardedFedSpec(
+            n_clients=args.clients, d_hidden=args.d_hidden, n_layers=args.n_layers,
+            seq_a=task.seq_a, feat_a=task.feat_a, seq_b=task.seq_b,
+            feat_b=task.feat_b, out_dim=task.out_dim, kind=task.kind,
+            n_partial=n_partial, n_frag=n_partial, n_paired=n_partial,
+            n_val=args.n_val, lr=args.lr, optimizer=args.optimizer,
+            n_sampled=args.n_sampled)
     mesh = make_host_mesh()
     shard = sh.batch_shardings(mesh, batch_specs(spec, ragged=True))
-    batcher = FederatedBatcher(
-        [client_arrays(cd) for cd in clients], spec,
-        {"val_a": va.x_a, "val_b": va.x_b, "val_y": va.y},
-        seed=args.seed, shardings=shard, prefetch=args.prefetch)
+    if store is not None:
+        batcher = FederatedBatcher.from_store(
+            store, spec, seed=args.seed, shardings=shard,
+            prefetch=args.prefetch)
+    else:
+        batcher = FederatedBatcher(
+            [client_arrays(cd) for cd in clients], spec,
+            {"val_a": va.x_a, "val_b": va.x_b, "val_y": va.y},
+            seed=args.seed, shardings=shard, prefetch=args.prefetch)
     return spec, batcher, jax.jit(make_blendfl_round(spec)), mesh
 
 
@@ -95,6 +159,9 @@ def run(args, spec, batcher, round_fn, start: int, state: dict,
     """Drive rounds [start, args.rounds), checkpointing the full round
     state every ``ckpt_every`` rounds. Returns per-round metric dicts."""
     history = []
+    # store-backed runs stamp the data identity into every checkpoint so
+    # init_or_restore can refuse to resume against a different store
+    fp = _fingerprint(batcher)
     t0 = time.time()
     for r, batch in batcher.rounds(start, args.rounds):
         state, metrics = round_fn(state, batch)
@@ -108,18 +175,48 @@ def run(args, spec, batcher, round_fn, start: int, state: dict,
                 f"loss_paired {row['loss_paired']:.4f} "
                 f"({(time.time() - t0) / (r + 1 - start):.2f}s/round)")
         if args.ckpt_dir and args.ckpt_every and (r + 1) % args.ckpt_every == 0:
-            out = save_checkpoint(args.ckpt_dir, r + 1, state,
-                                  {"round": r + 1, "loss_uni": row["loss_uni"]})
+            meta = {"round": r + 1, "loss_uni": row["loss_uni"]}
+            if fp is not None:
+                meta["store_fingerprint"] = fp
+            out = save_checkpoint(args.ckpt_dir, r + 1, state, meta)
             log(f"checkpointed round {r + 1} -> {out}")
     return history
 
 
-def init_or_restore(args, spec, mesh) -> tuple[int, dict]:
-    """Fresh ``init_round_state`` or the latest full-state checkpoint."""
+def _fingerprint(batcher) -> str | None:
+    return batcher.store.fingerprint() if batcher.store is not None else None
+
+
+def init_or_restore(args, spec, mesh, store_fingerprint: str | None = None
+                    ) -> tuple[int, dict]:
+    """Fresh ``init_round_state`` or the latest full-state checkpoint.
+
+    ``store_fingerprint`` is the current run's ``ClientStore`` identity
+    (None for in-memory data). A checkpoint stamped with a *different*
+    fingerprint belongs to another federation's data — resuming would
+    silently break the bit-exact batch-stream contract, so it raises.
+    """
     state = init_round_state(jax.random.PRNGKey(args.seed), spec)
     start = 0
     if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
         start = latest_step(args.ckpt_dir)
+        want = read_metadata(args.ckpt_dir, start).get("store_fingerprint")
+        if want is not None and store_fingerprint is None:
+            raise ValueError(
+                f"checkpoint at {args.ckpt_dir} round {start} was written "
+                "by a store-backed run (store_fingerprint "
+                f"{want[:12]}…) — resume it with the same --store-dir, "
+                "not in-memory data")
+        if want is not None and want != store_fingerprint:
+            raise ValueError(
+                f"checkpoint at {args.ckpt_dir} round {start} was written "
+                f"against a different client store (fingerprint {want[:12]}… "
+                f"vs current {store_fingerprint[:12]}…) — refusing to "
+                "resume: the (seed, round) batch stream would diverge")
+        if want is None and store_fingerprint is not None:
+            print("note: resuming a checkpoint with no store fingerprint "
+                  "from a store-backed run (ok if the store was imported "
+                  "from the same dataset)")
         state = restore_checkpoint(args.ckpt_dir, state, step=start)
         print(f"restored full round state at round {start} from {args.ckpt_dir}")
     return start, place_state(state, mesh)
@@ -147,7 +244,7 @@ def selftest_resume(args) -> None:
         # "crash": rebuild everything from scratch, restore from disk
         spec2, batcher2, round_fn2, mesh2 = build_federation(args)
         a2 = argparse.Namespace(**{**vars(args), "ckpt_dir": ckpt_dir})
-        start, state = init_or_restore(a2, spec2, mesh2)
+        start, state = init_or_restore(a2, spec2, mesh2, _fingerprint(batcher2))
         assert start == mid, f"expected restore at round {mid}, got {start}"
         part2 = run(a2, spec2, batcher2, round_fn2, start, state)
     # round_fn saw fresh-init + chained states; round_fn2 saw a RESTORED
@@ -172,6 +269,14 @@ def selftest_resume(args) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("command", nargs="?", choices=["import"], default=None,
+                    help="'import': convert the synthetic partition to an "
+                         "on-disk ClientStore at --store-dir and exit")
+    ap.add_argument("--store-dir", default=None,
+                    help="run out-of-core from this imported ClientStore "
+                         "(training) / write the store here (import)")
+    ap.add_argument("--overwrite", action="store_true",
+                    help="import: replace an existing store directory")
     ap.add_argument("--task", default="smnist")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--n-sampled", type=int, default=0)
@@ -195,11 +300,14 @@ def main() -> None:
                     help="run the killed-and-resumed parity assertion and exit")
     args = ap.parse_args()
 
+    if args.command == "import":
+        import_store(args)
+        return
     if args.selftest_resume:
         selftest_resume(args)
         return
     spec, batcher, round_fn, mesh = build_federation(args)
-    start, state = init_or_restore(args, spec, mesh)
+    start, state = init_or_restore(args, spec, mesh, _fingerprint(batcher))
     run(args, spec, batcher, round_fn, start, state)
     print(f"done ({args.rounds - start} rounds; host batch-build "
           f"{batcher.build_seconds:.2f}s over {batcher.rounds_built} builds).")

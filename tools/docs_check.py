@@ -1,0 +1,173 @@
+#!/usr/bin/env python
+"""Docs reference checker — keeps README.md and docs/ from rotting.
+
+Scans the given markdown files (default: README.md + docs/**/*.md) and
+verifies that everything they point at still exists in the tree:
+
+- markdown links ``[text](path)`` (non-URL): the path must exist,
+  resolved against the repo root or the doc's own directory;
+- inline-code file paths (``src/repro/data/store.py``, ``docs/...``,
+  ``benchmarks/...``): must exist; tried against the repo root, ``src/``,
+  ``src/repro/`` and the doc's directory so layer-relative mentions work;
+- inline-code module dotpaths (``repro.data.store``,
+  ``benchmarks.run``) and ``python -m <module>`` invocations inside
+  fenced blocks: must resolve to a module file or package; a trailing
+  attribute is allowed if its name appears in the module source;
+- ``make <target>`` mentions (inline or fenced): the target must be
+  defined in the Makefile.
+
+Paths under ``benchmarks/results/`` (gitignored run artifacts) and
+tokens containing glob wildcards are exempt. Exit status 1 lists every
+broken reference with file:line.
+
+    python tools/docs_check.py [files...]
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# bare (slash-less) filenames worth checking when mentioned
+ROOT_FILES = {"README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md",
+              "PAPERS.md", "SNIPPETS.md", "ISSUE.md", "Makefile",
+              "pytest.ini"}
+# run artifacts / scratch paths that legitimately may not exist
+EXEMPT_PREFIXES = ("benchmarks/results/", "/tmp/")
+
+_FENCE = re.compile(r"^(```|~~~)")
+_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
+_CODE = re.compile(r"`([^`\n]+)`")
+_PATHISH = re.compile(r"^[A-Za-z0-9_./-]+$")
+_DOTPATH = re.compile(r"^(repro|benchmarks)(\.[A-Za-z_][A-Za-z0-9_]*)+$")
+_MAKE = re.compile(r"\bmake\s+([A-Za-z][A-Za-z0-9_-]*)")
+_PYMOD = re.compile(r"-m\s+([A-Za-z_][A-Za-z0-9_.]*)")
+
+
+def _exists_any(token: str, doc_dir: str) -> bool:
+    for base in (ROOT, os.path.join(ROOT, "src"),
+                 os.path.join(ROOT, "src", "repro"), doc_dir):
+        if os.path.exists(os.path.join(base, token)):
+            return True
+    return False
+
+
+def _module_ok(dotpath: str) -> tuple[bool, str]:
+    """Resolve a dotted module path, tolerating one trailing attribute."""
+    parts = dotpath.split(".")
+    base = os.path.join(ROOT, "src") if parts[0] == "repro" else ROOT
+
+    def _file_for(comps):
+        p = os.path.join(base, *comps)
+        if os.path.isfile(p + ".py"):
+            return p + ".py"
+        if os.path.isdir(p) and os.path.isfile(os.path.join(p, "__init__.py")):
+            return os.path.join(p, "__init__.py")
+        return None
+
+    if _file_for(parts):
+        return True, ""
+    mod = _file_for(parts[:-1])
+    if mod:  # module.attr — require the attr name to appear in the source
+        attr = parts[-1]
+        with open(mod) as f:
+            if re.search(rf"\b{re.escape(attr)}\b", f.read()):
+                return True, ""
+        return False, f"module {'.'.join(parts[:-1])} has no {attr!r}"
+    return False, "no such module"
+
+
+def _make_targets() -> set:
+    targets = set()
+    mk = os.path.join(ROOT, "Makefile")
+    if os.path.isfile(mk):
+        for line in open(mk):
+            m = re.match(r"^([A-Za-z0-9_.-]+)\s*:", line)
+            if m:
+                targets.add(m.group(1))
+    return targets
+
+
+def check_file(path: str, make_targets: set) -> list:
+    doc_dir = os.path.dirname(os.path.abspath(path))
+    errors = []
+    in_fence = False
+    for lineno, line in enumerate(open(path), start=1):
+        if _FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+
+        def err(msg):
+            errors.append(f"{os.path.relpath(path, ROOT)}:{lineno}: {msg}")
+
+        # make targets + `python -m module` are checked in *command
+        # contexts only — fenced non-comment lines (the quickstart must
+        # run) and inline code spans — so prose like "make sure", in
+        # text or in a shell comment, never trips
+        if in_fence:
+            commands = [] if line.lstrip().startswith("#") else [line]
+        else:
+            commands = [m.group(1) for m in _CODE.finditer(line)]
+        for text in commands:
+            for m in _MAKE.finditer(text):
+                if m.group(1) not in make_targets:
+                    err(f"no Makefile target {m.group(1)!r}")
+            for m in _PYMOD.finditer(text):
+                ok, why = _module_ok(m.group(1))
+                if not ok:
+                    err(f"unresolvable module {m.group(1)!r} ({why})")
+        if in_fence:
+            continue
+
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if not _exists_any(target, doc_dir):
+                err(f"broken link target {target!r}")
+        for m in _CODE.finditer(line):
+            tok = m.group(0)[1:-1].strip()
+            if "*" in tok or not _PATHISH.match(tok):
+                continue
+            if tok.startswith(EXEMPT_PREFIXES) or tok.rstrip("/") == "":
+                continue
+            if _DOTPATH.match(tok):
+                ok, why = _module_ok(tok)
+                if not ok:
+                    err(f"unresolvable module {tok!r} ({why})")
+            elif "/" in tok:
+                if not _exists_any(tok.rstrip("/"), doc_dir):
+                    err(f"missing path {tok!r}")
+            elif tok in ROOT_FILES:
+                if not os.path.isfile(os.path.join(ROOT, tok)):
+                    err(f"missing root file {tok!r}")
+    return errors
+
+
+def main(argv: list) -> int:
+    files = argv or ([os.path.join(ROOT, "README.md")] +
+                     sorted(glob.glob(os.path.join(ROOT, "docs", "**", "*.md"),
+                                      recursive=True)))
+    missing = [f for f in files if not os.path.isfile(f)]
+    if missing:
+        print("docs-check: missing input files: " + ", ".join(missing))
+        return 1
+    make_targets = _make_targets()
+    errors = []
+    for f in files:
+        errors.extend(check_file(f, make_targets))
+    if errors:
+        print(f"docs-check: {len(errors)} broken reference(s):")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"docs-check: OK ({len(files)} files, "
+          f"{len(make_targets)} make targets known)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
