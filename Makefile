@@ -1,9 +1,13 @@
 # Test lanes. `test` (docs-check + the full suite) is the tier-1 gate;
 # `test-fast` skips the @pytest.mark.slow convergence/parity tests so
-# the local verify loop stays under ~90 s.
+# the local verify loop stays around the ~90 s budget (`ci-test`
+# enforces TEST_FAST_BUDGET_S as a hard ceiling — the default adds
+# headroom for slower CI runners; override with TEST_FAST_BUDGET_S=...).
 PYTEST = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -q
+TEST_FAST_BUDGET_S ?= 180
 
-.PHONY: test test-fast docs-check bench-sampled bench-loader bench-store \
+.PHONY: test test-fast docs-check bench-check ci ci-test ci-smoke \
+	bench-sampled bench-loader bench-store bench-participation \
 	train-federated
 
 test: docs-check
@@ -17,6 +21,38 @@ test-fast:
 docs-check:
 	python tools/docs_check.py
 
+# Schema checker over benchmarks/results/BENCH_*.json (docs/benchmarks.md
+# schema: envelope keys, finite numbers, cache counts >= 1). Passes on a
+# fresh checkout (results are gitignored).
+bench-check:
+	python tools/bench_check.py
+
+# CI gate — `.github/workflows/ci.yml` runs exactly these two lanes, so
+# the workflow and the local gate can't drift: `make ci` locally == CI.
+ci: ci-test ci-smoke
+
+# Lane 1: reference/schema checks + the fast test suite, with the
+# wall-clock budget enforced (a creeping fast lane breaks the local
+# verify loop long before it breaks CI).
+ci-test: docs-check bench-check
+	@start=$$(date +%s); \
+	$(PYTEST) -m "not slow" || exit $$?; \
+	elapsed=$$(($$(date +%s) - start)); \
+	echo "test-fast took $${elapsed}s (budget $(TEST_FAST_BUDGET_S)s)"; \
+	if [ $$elapsed -gt $(TEST_FAST_BUDGET_S) ]; then \
+		echo "FAIL: fast lane exceeded its $(TEST_FAST_BUDGET_S)s budget"; \
+		exit 1; \
+	fi
+
+# Lane 2: the kill-and-resume smoke — full participation (the
+# train-federated lane below) plus a K-of-C sampled run under the
+# state-reading omega_ema participation policy, so CI exercises the
+# scheduler's checkpoint/resume contract end to end.
+ci-smoke: train-federated
+	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
+		--rounds 4 --clients 6 --n-sampled 3 --policy omega_ema \
+		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
+
 bench-sampled:
 	PYTHONPATH=src python -m benchmarks.sampled_round_bench
 
@@ -25,6 +61,12 @@ bench-loader:
 
 bench-store:
 	PYTHONPATH=src python -m benchmarks.client_store_bench
+
+# Participation policies vs uniform on a straggler cohort (C=16, K=4):
+# rounds-to-target-AUROC + per-round wall time, one compiled round
+# shared across every policy.
+bench-participation:
+	PYTHONPATH=src python -m benchmarks.participation_bench
 
 # Smoke lane: tiny ragged federation, 2 rounds, checkpoint at round 1,
 # kill-and-resume, assert bit-exact round-metric parity.

@@ -27,11 +27,13 @@ def run_data_distribution(ratios=((0.9, 0.1), (0.7, 0.3), (0.5, 0.5),
         fa, _ = run_baseline("fedavg", exp)
         sp, _ = run_baseline("splitnn", exp)
         bl, _, _ = run_blendfl(exp)
-        row = (f"{int(paired*100)}/{int(part*100)}",
-               fa["multimodal_auroc"], sp["multimodal_auroc"],
-               bl["multimodal_auroc"])
+        row = {"paired_partial": f"{int(paired*100)}/{int(part*100)}",
+               "fedavg_auroc": fa["multimodal_auroc"],
+               "splitnn_auroc": sp["multimodal_auroc"],
+               "blendfl_auroc": bl["multimodal_auroc"]}
         rows.append(row)
-        print(f"{row[0]:>14s} {row[1]:8.3f} {row[2]:8.3f} {row[3]:8.3f}",
+        print(f"{row['paired_partial']:>14s} {row['fedavg_auroc']:8.3f} "
+              f"{row['splitnn_auroc']:8.3f} {row['blendfl_auroc']:8.3f}",
               flush=True)
     return rows
 
@@ -45,22 +47,33 @@ def run_client_counts(counts=(4, 8, 12), rounds: int = 20, seed: int = 0):
         fa, _ = run_baseline("fedavg", exp)
         sp, _ = run_baseline("splitnn", exp)
         bl, _, _ = run_blendfl(exp)
-        rows.append((n, fa["multimodal_auroc"], sp["multimodal_auroc"],
-                     bl["multimodal_auroc"]))
-        print(f"{n:8d} {rows[-1][1]:8.3f} {rows[-1][2]:8.3f} {rows[-1][3]:8.3f}",
-              flush=True)
+        rows.append({"n_clients": n, "fedavg_auroc": fa["multimodal_auroc"],
+                     "splitnn_auroc": sp["multimodal_auroc"],
+                     "blendfl_auroc": bl["multimodal_auroc"]})
+        print(f"{n:8d} {rows[-1]['fedavg_auroc']:8.3f} "
+              f"{rows[-1]['splitnn_auroc']:8.3f} "
+              f"{rows[-1]['blendfl_auroc']:8.3f}", flush=True)
     return rows
 
 
 def main(quick: bool = False) -> None:
+    import jax
+
+    from benchmarks.common import write_bench_json
+
     print("\n=== Fig. 3: data distribution (paired/partial) ===")
-    run_data_distribution(ratios=((0.7, 0.3), (0.3, 0.7)) if quick else
-                          ((0.9, 0.1), (0.7, 0.3), (0.5, 0.5), (0.3, 0.7),
-                           (0.1, 0.9)),
-                          rounds=10 if quick else 20)
+    fig3 = run_data_distribution(ratios=((0.7, 0.3), (0.3, 0.7)) if quick else
+                                 ((0.9, 0.1), (0.7, 0.3), (0.5, 0.5),
+                                  (0.3, 0.7), (0.1, 0.9)),
+                                 rounds=10 if quick else 20)
     print("\n=== Fig. 4: number of clients ===")
-    run_client_counts(counts=(4, 8) if quick else (4, 8, 12),
-                      rounds=10 if quick else 20)
+    fig4 = run_client_counts(counts=(4, 8) if quick else (4, 8, 12),
+                             rounds=10 if quick else 20)
+    write_bench_json("BENCH_ablations.json",
+                     {"bench": "ablations", "backend": jax.default_backend(),
+                      "quick": quick,
+                      "records": [dict(r, figure="fig3") for r in fig3]
+                      + [dict(r, figure="fig4") for r in fig4]})
 
 
 if __name__ == "__main__":

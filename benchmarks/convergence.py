@@ -42,17 +42,26 @@ def run(intervals=(1, 2, 4, 6), target: float = 0.78, rounds: int = 60,
         nf = float(np.mean(per["fedavg"]))
         nb = float(np.mean(per["blendavg"]))
         speedup = nf / nb
-        rows.append((k, nf, nb, speedup))
+        rows.append({"local_epochs": k, "rounds_fedavg": nf,
+                     "rounds_blendavg": nb, "speedup": round(speedup, 3),
+                     "target_auroc": target})
         print(f"{k:8d} {nf:8.1f} {nb:9.1f} {speedup:8.2f}", flush=True)
     return rows
 
 
 def main(quick: bool = False) -> None:
+    import jax
+
+    from benchmarks.common import write_bench_json
+
     print("\n=== Fig. 2: BlendAvg vs FedAvg convergence (non-IID) ===")
     if quick:
-        run(intervals=(1, 4), target=0.72, rounds=25, seeds=(0,))
+        rows = run(intervals=(1, 4), target=0.72, rounds=25, seeds=(0,))
     else:
-        run()
+        rows = run()
+    write_bench_json("BENCH_convergence.json",
+                     {"bench": "convergence", "backend": jax.default_backend(),
+                      "quick": quick, "records": rows})
 
 
 if __name__ == "__main__":

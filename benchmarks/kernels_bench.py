@@ -24,6 +24,13 @@ def main(quick: bool = False) -> None:
     print("\n=== kernel benches (CPU; reference paths) ===")
     print(f"{'name':34s} {'us_per_call':>12s} {'max_err':>10s}")
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    records = []
+
+    def rec(name, us, err=None):
+        r = {"name": name, "us_per_call": round(us, 1)}
+        if err is not None:
+            r["max_err"] = float(err)
+        records.append(r)
 
     # attention: einsum vs chunked (the long-seq production path)
     b, hq, hkv, s, d = 2, 8, 2, 512, 64
@@ -39,6 +46,8 @@ def main(quick: bool = False) -> None:
     t2 = timeit(lambda: jax.block_until_ready(f_chk(q, k, v)), n=5)
     print(f"{'attention_einsum_512':34s} {t1:12.0f} {'-':>10s}")
     print(f"{'attention_chunked_512':34s} {t2:12.0f} {err:10.2e}")
+    rec("attention_einsum_512", t1)
+    rec("attention_chunked_512", t2, err)
 
     # blendavg fused blend vs ref (memory-bound server aggregation)
     L, N = 8, 1_000_000 if not quick else 100_000
@@ -50,6 +59,7 @@ def main(quick: bool = False) -> None:
     err = float(jnp.max(jnp.abs(o_ref - o_ker)))
     t_ref = timeit(lambda: jax.block_until_ready(f_ref(stacked, omega)), n=5)
     print(f"{'blendavg_ref_8x1M':34s} {t_ref:12.0f} {err:10.2e}")
+    rec("blendavg_ref_8x1M", t_ref, err)
 
     # mlstm chunkwise vs sequential (recurrence hot path)
     s2 = 1024 if not quick else 256
@@ -65,8 +75,16 @@ def main(quick: bool = False) -> None:
     t_par = timeit(lambda: jax.block_until_ready(f_par(q2, k2, v2, lf)), n=5)
     print(f"{'mlstm_sequential_{}'.format(s2):34s} {t_seq:12.0f} {'-':>10s}")
     print(f"{'mlstm_chunkwise_{}'.format(s2):34s} {t_par:12.0f} {err:10.2e}")
+    rec(f"mlstm_sequential_{s2}", t_seq)
+    rec(f"mlstm_chunkwise_{s2}", t_par, err)
     print(f"--> chunkwise speedup over sequential: {t_seq/t_par:.1f}x "
           "(the schedule the Pallas kernel implements)")
+
+    from benchmarks.common import write_bench_json
+
+    write_bench_json("BENCH_kernels.json",
+                     {"bench": "kernels", "backend": jax.default_backend(),
+                      "quick": quick, "records": records})
 
 
 if __name__ == "__main__":

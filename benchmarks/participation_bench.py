@@ -1,0 +1,204 @@
+"""§Participation policies: adaptive selection beats uniform on stragglers.
+
+A ragged C=16 / K=4 federation with a **straggler cohort**: half the
+clients are data-rich (clean labels, many rows), half are stragglers
+(a handful of rows with permuted = noise labels). Uniform K-of-C
+sampling wastes ~half of every round's participation slots on clients
+whose updates BlendAvg will mostly reject; an adaptive policy
+(``repro.core.schedule`` — data_volume, omega_ema, staleness, ...)
+routes slots to clients that move the global model.
+
+For each policy the bench drives the SAME jitted sharded round (one
+``make_blendfl_round`` instance — the ids are data, so the compile cache
+must stay 1 across all policies) through a policy-specific
+``FederatedBatcher`` and measures:
+
+  - rounds to reach a target validation multimodal AUROC (host-side
+    ``repro.metrics.auroc`` of the blended global model, evaluated
+    outside the timed region);
+  - per-round wall time (device round + host batch build);
+  - the shared round's compile-cache size after the whole sweep.
+
+Emits ``BENCH_participation.json``. Acceptance: at least one adaptive
+policy reaches the target in fewer rounds than ``uniform``, and the
+compile cache is exactly 1.
+
+    PYTHONPATH=src python -m benchmarks.participation_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_bench_json
+
+POLICIES = ("uniform", "round_robin", "staleness", "omega_ema", "data_volume")
+N_CLIENTS, K = 16, 4
+TARGET_AUROC = 0.85
+
+
+def _straggler_clients(task, tr, rich_paired: int, rich_partial: int,
+                       straggler_rows: int, seed: int):
+    """16 ragged clients: 8 rich (clean rows) + 8 stragglers (few rows,
+    permuted labels — pure noise). Returns (clients, per-client rows)."""
+    rng = np.random.default_rng(seed)
+    clients, rows, cursor = [], [], 0
+
+    def take(n):
+        nonlocal cursor
+        sl = slice(cursor, cursor + n)
+        cursor += n
+        return tr.x_a[sl], tr.x_b[sl], tr.y[sl]
+
+    for c in range(N_CLIENTS):
+        rich = c < N_CLIENTS // 2
+        n_pair = rich_paired if rich else straggler_rows
+        n_part = rich_partial if rich else straggler_rows
+        pa, pb, py = take(n_pair)
+        ua, ub, uy = take(n_part)
+        if not rich:  # straggler labels are shuffled -> noise updates
+            py = py[rng.permutation(len(py))]
+            uy = uy[rng.permutation(len(uy))]
+        clients.append({
+            "paired_a": pa, "paired_b": pb, "paired_y": py,
+            "partial_a": ua, "partial_ya": uy,
+            "partial_b": ub, "partial_yb": uy,
+        })
+        rows.append(2 * n_pair + 2 * n_part)
+    return clients, rows
+
+
+def _build(quick: bool):
+    from repro.core.federation_sharded import (
+        ShardedFedSpec, batch_specs, make_blendfl_round)
+    from repro.data.synthetic import make_task, train_val_test
+    from repro.launch import shardings as sh
+    from repro.launch.mesh import make_host_mesh
+
+    task = make_task("smnist")
+    rich_paired, rich_partial, strag = ((96, 48, 8) if quick
+                                        else (160, 64, 8))
+    need = (N_CLIENTS // 2) * (rich_paired + rich_partial + 2 * strag) + 64
+    tr, va, _ = train_val_test(task, need, 512, 64, seed=0)
+    clients, rows = _straggler_clients(task, tr, rich_paired, rich_partial,
+                                       strag, seed=1)
+    print(f"straggler cohort: per-client rows {sorted(rows)}")
+    spec = ShardedFedSpec(
+        n_clients=N_CLIENTS, d_hidden=32, n_layers=2, seq_a=task.seq_a,
+        feat_a=task.feat_a, seq_b=task.seq_b, feat_b=task.feat_b,
+        out_dim=task.out_dim, kind=task.kind, n_partial=rich_partial,
+        n_frag=8, n_paired=rich_paired, n_val=512, lr=2e-2,
+        optimizer="adamw", n_sampled=K)
+    mesh = make_host_mesh()
+    shard = sh.batch_shardings(mesh, batch_specs(spec, ragged=True))
+    val = {"val_a": va.x_a, "val_b": va.x_b, "val_y": va.y}
+    return spec, clients, val, va, shard, mesh, jax.jit(make_blendfl_round(spec))
+
+
+def _run_policy(policy: str, spec, clients, val, va, shard, mesh, round_fn,
+                rounds: int):
+    """Drive one policy's federation. s_per_round is the true consumer
+    wall time of the round loop (device round + whatever host build/
+    stall the policy's path exposes — prefetch-hidden build time for
+    state-free policies, synchronous build for state-reading ones) with
+    the host-side AUROC eval subtracted out."""
+    from repro.core.federation import eval_multimodal
+    from repro.core.federation_sharded import init_round_state
+    from repro.core.schedule import telemetry_from_state
+    from repro.data.pipeline import FederatedBatcher
+    from repro.launch.train_federated import place_state
+
+    batcher = FederatedBatcher(clients, dataclasses.replace(spec, policy=policy),
+                               val, seed=0, shardings=shard)
+    state = place_state(init_round_state(jax.random.PRNGKey(0), spec), mesh)
+
+    aurocs, eval_spent, to_target = [], 0.0, None
+    t_loop = time.perf_counter()
+    for r, batch in batcher.rounds(0, rounds,
+                                   telemetry_fn=lambda: telemetry_from_state(state)):
+        state, _ = round_fn(state, batch)
+        jax.block_until_ready(state["global_models"])
+        t0 = time.perf_counter()
+        g = state["global_models"]
+        auc = eval_multimodal(g["f_A"], g["f_B"], g["g_M"], va.x_a, va.x_b,
+                              va.y, spec.ecfg, spec.kind)
+        eval_spent += time.perf_counter() - t0
+        aurocs.append(auc)
+        if to_target is None and auc >= TARGET_AUROC:
+            to_target = r + 1
+    loop_spent = time.perf_counter() - t_loop
+    part = np.asarray(jax.device_get(state["sched"]["part_count"]))
+    return {
+        "policy": policy,
+        "rounds_to_target": to_target,
+        "target_auroc": TARGET_AUROC,
+        "final_auroc": round(aurocs[-1], 4),
+        "best_auroc": round(max(aurocs), 4),
+        "s_per_round": round((loop_spent - eval_spent) / rounds, 4),
+        "rich_participation_frac": round(
+            float(part[: N_CLIENTS // 2].sum()) / max(float(part.sum()), 1.0),
+            3),
+    }
+
+
+def main(quick: bool = False) -> None:
+    print("\n=== participation policies: straggler cohort, C=16 K=4 ===")
+    spec, clients, val, va, shard, mesh, round_fn = _build(quick)
+    rounds = 12 if quick else 24
+    policies = (("uniform", "data_volume", "omega_ema") if quick else POLICIES)
+
+    # warmup: compile the shared round once on a throwaway state so the
+    # first policy's s_per_round doesn't carry the compile
+    from repro.core.federation_sharded import init_round_state
+    from repro.data.pipeline import FederatedBatcher
+    from repro.launch.train_federated import place_state
+
+    wb = FederatedBatcher(clients, spec, val, seed=0, shardings=shard)
+    wstate = place_state(init_round_state(jax.random.PRNGKey(0), spec), mesh)
+    for _, batch in wb.rounds(0, 1, prefetch=0):
+        jax.block_until_ready(round_fn(wstate, batch)[0])
+    print(f"{'policy':>12s} {'to_target':>9s} {'final':>7s} {'best':>7s} "
+          f"{'s/round':>8s} {'rich%':>6s}")
+    records = []
+    for p in policies:
+        rec = _run_policy(p, spec, clients, val, va, shard, mesh, round_fn,
+                          rounds)
+        records.append(rec)
+        tt = "-" if rec["rounds_to_target"] is None else rec["rounds_to_target"]
+        print(f"{p:>12s} {tt!s:>9s} {rec['final_auroc']:7.3f} "
+              f"{rec['best_auroc']:7.3f} {rec['s_per_round']:8.3f} "
+              f"{rec['rich_participation_frac']:6.2f}", flush=True)
+    cache = int(round_fn._cache_size())
+    print(f"round compile cache across all policies: {cache}")
+
+    # record first, assert after: a failed acceptance still leaves the
+    # measurement on disk for the next comparison
+    write_bench_json("BENCH_participation.json",
+                     {"bench": "participation",
+                      "backend": jax.default_backend(),
+                      "n_clients": N_CLIENTS, "k": K, "rounds": rounds,
+                      "compile_cache": cache, "records": records})
+    assert cache == 1, \
+        "participation policies must share the one compiled round program"
+    uni = next(r for r in records if r["policy"] == "uniform")
+    adaptive = [r for r in records if r["policy"] != "uniform"
+                and r["rounds_to_target"] is not None]
+    uni_rounds = (uni["rounds_to_target"] if uni["rounds_to_target"] is not None
+                  else rounds + 1)
+    best = min(adaptive, key=lambda r: r["rounds_to_target"], default=None)
+    assert best is not None and best["rounds_to_target"] < uni_rounds, \
+        f"no adaptive policy beat uniform ({uni_rounds} rounds) to " \
+        f"AUROC {TARGET_AUROC}"
+    print(f"--> {best['policy']} reached AUROC {TARGET_AUROC} in "
+          f"{best['rounds_to_target']} rounds vs uniform's "
+          f"{uni['rounds_to_target'] or 'never'}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

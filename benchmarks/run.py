@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
 
 Sections: tables (I-III), convergence (Fig 2), ablations (Fig 3-4),
-kernels, roofline, inference (decentralized-inference cost).
+kernels, roofline, inference (decentralized-inference cost),
+round_engine, participation (adaptive client selection vs uniform).
 """
 from __future__ import annotations
 
@@ -46,13 +47,15 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     choices=["tables", "convergence", "ablations", "kernels",
-                             "roofline", "inference", "round_engine"])
+                             "roofline", "inference", "round_engine",
+                             "participation"])
     args = ap.parse_args()
     t0 = time.time()
 
     sections = {}
     from benchmarks import (ablations, convergence, kernels_bench,
-                            roofline_report, round_engine_bench, tables)
+                            participation_bench, roofline_report,
+                            round_engine_bench, tables)
     sections["tables"] = tables.main
     sections["convergence"] = convergence.main
     sections["ablations"] = ablations.main
@@ -60,6 +63,7 @@ def main() -> None:
     sections["roofline"] = roofline_report.main
     sections["inference"] = run_inference_bench
     sections["round_engine"] = round_engine_bench.main
+    sections["participation"] = participation_bench.main
 
     todo = [args.only] if args.only else list(sections)
     for name in todo:

@@ -32,7 +32,9 @@ blended weights but keep their own moments (exact Algorithm 1 under plain
 SGD, standard stateful-FL practice under AdamW).
 
 Partial participation (``FedConfig.n_sampled`` = K > 0): each round a
-host-side RNG draws K of the C clients; their rows of the stacked
+host-side participation policy (``FedConfig.policy``, see
+``repro.core.schedule`` — uniform by default, bit-exact with the
+pre-scheduler RNG draw) picks K of the C clients; their rows of the stacked
 models/opt-state/batches are gathered to (K, ...) trees (a static-shape
 ``engine.sample_clients`` gather — the sampled *indices* are data, so the
 phase programs still compile exactly once), trained, and scattered back.
@@ -57,7 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.tree import tree_unstack
-from repro.core import vfl
+from repro.core import schedule, vfl
 from repro.core.blendavg import blendavg_weights
 from repro.core.encoders import (
     EncoderConfig,
@@ -111,6 +113,13 @@ class FedConfig:
     # partial participation (everyone syncs to the new global each round).
     async_mode: bool = False
     staleness_exp: float = 0.5  # omega damping (1+s)^-a; 0 disables
+    # Participation policy for sampled rounds (repro.core.schedule):
+    # which K of the C clients train, picked host-side from the sched
+    # telemetry (omega EMA / participation counts / last_round). The ids
+    # are data, so the policy never retraces a phase. "uniform" is the
+    # pre-scheduler behavior, bit-exact (same host_rng.choice draw).
+    policy: str = "uniform"
+    ema_beta: float = 0.9  # omega-EMA telemetry decay
 
 
 # ------------------------------------------------------------- evaluation --
@@ -266,6 +275,13 @@ class Federation:
     host_rng: np.random.Generator = None  # host-side client-sampling RNG
     last_round: np.ndarray = None  # (C,) round each client last synced
     round_no: int = 0  # index of the NEXT round to run
+    # participation-scheduler telemetry (repro.core.schedule): EMA of
+    # each client's BlendAvg omega + participation counts, updated every
+    # aggregation; the policy reads them (with last_round/round_no/rows)
+    # to pick the next round's K ids
+    policy_obj: object = None  # schedule.Policy
+    omega_ema: np.ndarray = None  # (C,) float64
+    part_count: np.ndarray = None  # (C,) int64
 
     @property
     def models(self) -> list[dict]:
@@ -283,6 +299,12 @@ class Federation:
         if cfg.async_mode and not cfg.n_sampled:
             raise ValueError("async_mode requires n_sampled > 0 (with full "
                              "participation every candidate is fresh)")
+        if cfg.policy != "uniform" and not cfg.n_sampled:
+            raise ValueError(f"policy={cfg.policy!r} requires n_sampled > 0 "
+                             "(full participation has nothing to schedule)")
+        # validates the policy name even when n_sampled == 0
+        policy_obj = schedule.make_policy(cfg.policy, cfg.n_clients,
+                                          cfg.n_sampled or cfg.n_clients)
         base = init_client_models(key, spec, ecfg)
         vfl_batch, vfl_host = _build_vfl_data(clients, spec)
         data = {
@@ -320,6 +342,9 @@ class Federation:
             val=val, data=data, key=jax.random.PRNGKey(cfg.seed),
             host_rng=np.random.default_rng(cfg.seed),
             last_round=np.full(cfg.n_clients, -1, np.int64),
+            policy_obj=policy_obj,
+            omega_ema=np.zeros(cfg.n_clients),
+            part_count=np.zeros(cfg.n_clients, np.int64),
         )
 
     def _next_key(self):
@@ -463,6 +488,18 @@ class Federation:
             self.stacked = dict(fns.broadcast(glob_groups, cfg.n_clients))
             self.last_round[:] = self.round_no
         self.server_gmv = jax.tree.map(jnp.asarray, self.global_models["g_M"])
+
+        # scheduler telemetry: fold this round's per-client omega (mean
+        # over the heads that competed; omega_M's server slot excluded)
+        # into the EMA at the participants' slots, count participation
+        heads = [np.asarray(info[k], np.float64)
+                 for k in ("omega_A", "omega_B") if k in info]
+        heads.append(np.asarray(info["omega_M"], np.float64)[: len(sub_clients)])
+        cli_omega = np.mean(np.stack(heads), axis=0)
+        sel = np.arange(cfg.n_clients) if idx is None else np.asarray(idx)
+        b = cfg.ema_beta
+        self.omega_ema[sel] = b * self.omega_ema[sel] + (1 - b) * cli_omega
+        self.part_count[sel] += 1
         return info
 
     # ---- K-of-C sampled round ----
@@ -498,14 +535,24 @@ class Federation:
             "part_b": jnp.asarray(np.bincount(pos[ob[keep]], minlength=k) > 0),
         }
 
+    def _sched_telemetry(self) -> dict:
+        """What the participation policy sees (``repro.core.schedule``
+        telemetry contract): round index, the sched block (omega EMA,
+        participation counts, last_round), and static data volumes."""
+        return {"round": self.round_no, "last_round": self.last_round,
+                "omega_ema": self.omega_ema, "part_count": self.part_count,
+                "rows": np.asarray([cd.n_samples() for cd in self.clients],
+                                   np.float64)}
+
     def _sampled_round(self) -> dict:
-        """Partial-participation round: gather the K sampled clients'
-        stacked rows, run the same compiled phase programs at leading axis
-        K, scatter optimizer state back, aggregate over the K candidates.
-        The sampled indices are data — fixed K means no retraces."""
-        k = self.cfg.n_sampled
-        idx = np.sort(self.host_rng.choice(self.cfg.n_clients, size=k,
-                                           replace=False))
+        """Partial-participation round: the policy picks the K ids from
+        the sched telemetry, then the round gathers those clients' stacked
+        rows, runs the same compiled phase programs at leading axis K,
+        scatters optimizer state back, and aggregates over the K
+        candidates. The sampled indices are data — fixed K means no
+        retraces, whatever the policy. ``policy="uniform"`` consumes the
+        host_rng identically to the pre-scheduler code (bit-exact)."""
+        idx = self.policy_obj.select(self.host_rng, self._sched_telemetry())
         idxd = jnp.asarray(idx, jnp.int32)
         sub = sample_clients(self.stacked, idxd)
         sub_opt = sample_opt_state(self.opt_state, idxd)

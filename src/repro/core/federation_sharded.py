@@ -48,6 +48,11 @@ staleness (``round - 1 - last_round[sampled]`` — non-sampled clients are
 simply absent from the blend, masked like empty batches), and scatters
 the broadcast back to the participants only. ``last_round``/``round``
 int vectors thread through the state dict alongside the opt moments.
+WHICH K ids arrive is the host's choice: ``ShardedFedSpec.policy`` names
+a ``repro.core.schedule`` participation policy fed by the ``sched``
+telemetry block (omega EMA / participation counts / last_round mirror)
+the round maintains in its state — the ids stay data, so every policy
+shares this one compiled program.
 
 Everything below is pure jnp under jit — sharding in_shardings do the
 distribution; no host round-trips inside a federated round.
@@ -59,6 +64,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import schedule
 from repro.core.encoders import EncoderConfig
 from repro.core.engine import (
     CLIENT_GROUPS,
@@ -106,6 +112,14 @@ class ShardedFedSpec:
     # client trains every round.
     n_sampled: int = 0
     staleness_exp: float = 0.5  # async omega damping (1+s)^-a
+    # Which K clients participate each sampled round — a host-side
+    # ``repro.core.schedule`` policy fed by the ``sched`` telemetry block
+    # this round threads through its state. The ids stay DATA (they feed
+    # the same static-shape gathers), so the policy choice never
+    # recompiles anything. "uniform" reproduces the pre-scheduler
+    # sampled round bit-exactly.
+    policy: str = "uniform"
+    ema_beta: float = 0.9  # omega-EMA telemetry decay (schedule.ema_update)
     # "reduce" so the blend lowers to the masked all-reduce over the
     # sharded client axis (a Pallas custom call would force an all-gather
     # of every client model — see EngineConfig.blend).
@@ -150,11 +164,17 @@ def init_stacked_models(key, spec: ShardedFedSpec):
 def init_round_state(key, spec: ShardedFedSpec) -> dict:
     """Full round-state pytree: stacked models + global/server models +
     stacked optimizer state + the async round bookkeeping (``round``
-    counter and per-client ``last_round`` sync vector). This is what
-    ``make_blendfl_round`` threads. The server head's state comes from
-    ``fns.srv_opt`` — the optimizer with the server's own schedule horizon
-    (``server_total_steps``), not the clients' — so the threaded schedule
-    state matches the optimizer that consumes it in ``vfl_step``."""
+    counter and per-client ``last_round`` sync vector) + the ``sched``
+    participation telemetry (omega EMA, participation counts, last_round
+    mirror — what the host-side ``repro.core.schedule`` policies read).
+    This is what ``make_blendfl_round`` threads; because the telemetry is
+    ordinary state leaves, it checkpoints/restores bit-exactly through
+    the existing full-round-state path and an adaptive policy resumes on
+    the same ids it would have picked uninterrupted. The server head's
+    state comes from ``fns.srv_opt`` — the optimizer with the server's
+    own schedule horizon (``server_total_steps``), not the clients' — so
+    the threaded schedule state matches the optimizer that consumes it in
+    ``vfl_step``."""
     stacked, server_gmv, global_models = init_stacked_models(key, spec)
     fns = make_phase_fns(spec.engine_cfg)
     return {
@@ -165,6 +185,7 @@ def init_round_state(key, spec: ShardedFedSpec) -> dict:
         "srv_opt": fns.srv_opt.init(server_gmv),
         "last_round": jnp.full((spec.n_clients,), -1, jnp.int32),
         "round": jnp.zeros((), jnp.int32),
+        "sched": schedule.sched_state(spec.n_clients),
     }
 
 
@@ -309,10 +330,27 @@ def make_blendfl_round(spec: ShardedFedSpec):
             last_round = jnp.full_like(state["last_round"], state["round"])
         server_gmv = new_global["g_M"]
 
+        # participation telemetry for the host-side scheduler: this
+        # round's per-client omega (mean over the three heads' Eq. 10
+        # weights; omega_M's trailing server-head slot excluded) folds
+        # into the EMA at the participants' slots only, mirroring the
+        # async broadcast. Pure jnp — the policy choice is host-side, so
+        # the compiled round is identical across policies.
+        cli_omega = (infos["omega_A"] + infos["omega_B"]
+                     + infos["omega_M"][: K]) / 3.0
+        sched = state["sched"]
+        new_sched = {
+            "omega_ema": schedule.ema_update(sched["omega_ema"], cli_omega,
+                                             spec.ema_beta, idx=idx),
+            "part_count": (sched["part_count"].at[idx].add(1)
+                           if spec.n_sampled else sched["part_count"] + 1),
+            "last_round": last_round,
+        }
+
         state = {"models": models, "server_gmv": server_gmv,
                  "global_models": new_global, "opt": opt_state,
                  "srv_opt": srv_state, "last_round": last_round,
-                 "round": state["round"] + 1}
+                 "round": state["round"] + 1, "sched": new_sched}
         metrics = dict(loss_uni=loss_uni, loss_vfl=loss_vfl,
                        loss_paired=loss_paired, **infos)
         return state, metrics

@@ -1,0 +1,242 @@
+"""Participation scheduling — WHICH K clients train each sampled round.
+
+BlendAvg already weights *aggregation* by per-client performance
+(Eq. 9-11); this module makes round *participation* adaptive too. The
+sampled-round machinery treats the K client ids as data (they feed the
+static-shape ``engine.sample_clients``/``scatter_clients`` gathers), so a
+policy that picks ids host-side plugs in without recompiling anything:
+every phase keeps its single compiled program across policies and
+subsets.
+
+A policy is a pure host-side function
+
+    select(rng, telemetry) -> sorted (K,) int64 client ids
+
+of a ``np.random.Generator`` and a **telemetry** dict. Determinism
+contract: given the same rng state and the same telemetry, ``select``
+returns the same ids — the property bit-exact checkpoint/resume rests
+on (both drivers feed a reproducible rng: the in-host federation its
+seeded ``host_rng``, the ``FederatedBatcher`` its stateless
+``default_rng([seed, round])``).
+
+Telemetry keys (callers fill what they have; policies read what they
+need — see each policy's ``needs_state``):
+
+    round       int    index of the round being scheduled
+    last_round  (C,)   round each client last synced (-1 = never)
+    omega_ema   (C,)   EMA of each client's BlendAvg omega (see
+                       ``ema_update``)
+    part_count  (C,)   how many rounds each client has participated in
+    rows        (C,)   per-client training-row counts (static data volume)
+
+``last_round``/``omega_ema``/``part_count`` live in the drivers' round
+state as the ``sched`` telemetry block (``sched_state``), so they
+checkpoint/restore bit-exactly through the existing full-round-state
+path; ``round`` and ``rows`` are caller-local.
+
+Policies (``make_policy``):
+
+    uniform      today's behavior, bit-exact: one
+                 ``rng.choice(C, K, replace=False)`` draw, sorted —
+                 byte-identical rng consumption to the pre-scheduler code
+    round_robin  deterministic coverage: rounds r..r+ceil(C/K)-1 select a
+                 contiguous (mod C) block of K ids each, so every client
+                 participates at least once per ceil(C/K) rounds
+    staleness    prioritize the largest ``round - 1 - last_round`` gaps
+                 (random tie-break) — bounds how stale any client's
+                 weights can get under async rounds
+    omega_ema    power-of-choice: oversample a uniform candidate pool of
+                 ``pool_factor * K`` clients, keep the top K by omega EMA
+                 (random tie-break) — exploits BlendAvg's own signal of
+                 which clients' updates actually improve the global model
+                 while the pool keeps exploration alive
+    data_volume  rows-proportional sampling without replacement
+                 (Efraimidis-Spirakis exponential keys) — clients with
+                 more data participate proportionally more often
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+POLICIES = ("uniform", "round_robin", "staleness", "omega_ema", "data_volume")
+
+# power-of-choice candidate-pool oversampling factor (omega_ema policy)
+POOL_FACTOR = 2
+
+
+# ----------------------------------------------------- telemetry helpers --
+
+def sched_state(n_clients: int):
+    """The ``sched`` telemetry block a driver threads through its round
+    state: omega EMA, participation counts, and a ``last_round`` mirror —
+    jnp leaves, so the block rides the existing full-round-state
+    checkpoint path bit-exactly."""
+    import jax.numpy as jnp
+
+    return {
+        "omega_ema": jnp.zeros((n_clients,), jnp.float32),
+        "part_count": jnp.zeros((n_clients,), jnp.int32),
+        "last_round": jnp.full((n_clients,), -1, jnp.int32),
+    }
+
+
+def telemetry_from_state(state: dict) -> dict:
+    """Pull a round state's ``sched`` block to host numpy — the dict a
+    driver's ``telemetry_fn`` hands ``FederatedBatcher.rounds`` for
+    state-reading policies. Blocks until the round that produced the
+    state has finished (the unavoidable serialization of telemetry-
+    dependent selection)."""
+    import jax
+    import numpy as np
+
+    return {k: np.asarray(v)
+            for k, v in jax.device_get(state["sched"]).items()}
+
+
+def ema_update(ema, omega, beta, idx=None):
+    """One exponential-moving-average step of the per-client omega
+    telemetry: ``ema' = beta * ema + (1 - beta) * omega``.
+
+    With ``idx`` (a (K,) id vector), only the participants' slots move —
+    non-sampled clients keep their EMA untouched, exactly like their
+    weights under the async broadcast. Pure jnp (jit-safe scatter); the
+    numpy reference lives in ``tests/test_schedule.py``.
+    """
+    import jax.numpy as jnp
+
+    ema = jnp.asarray(ema, jnp.float32)
+    beta = jnp.float32(beta)
+    new = beta * (ema if idx is None else ema[jnp.asarray(idx, jnp.int32)])
+    new = new + (jnp.float32(1.0) - beta) * jnp.asarray(omega, jnp.float32)
+    if idx is None:
+        return new
+    return ema.at[jnp.asarray(idx, jnp.int32)].set(new)
+
+
+# ------------------------------------------------------------- policies ----
+
+class Policy:
+    """Base participation policy: picks the K ids of one sampled round.
+
+    ``needs_state`` marks policies that read round-state telemetry
+    (``last_round`` / ``omega_ema``) — their selection for round r depends
+    on round r-1's outcome, so a loader cannot prefetch-build their
+    batches ahead of the device (``FederatedBatcher.rounds`` drops to the
+    synchronous path and asks the driver for fresh telemetry per round).
+    """
+
+    name = ""
+    needs_state = False
+
+    def __init__(self, n_clients: int, k: int):
+        if not 0 < k <= n_clients:
+            raise ValueError(f"k={k} must be in (0, n_clients={n_clients}]")
+        self.n_clients = int(n_clients)
+        self.k = int(k)
+
+    def select(self, rng: np.random.Generator, telemetry: dict) -> np.ndarray:
+        raise NotImplementedError
+
+    def _top_k(self, keys: np.ndarray, jitter: np.ndarray) -> np.ndarray:
+        """Sorted ids of the K largest keys, ties broken by jitter."""
+        order = np.lexsort((jitter, -np.asarray(keys, np.float64)))
+        return np.sort(order[: self.k]).astype(np.int64)
+
+
+class Uniform(Policy):
+    """K-of-C uniform sampling — byte-identical rng consumption to the
+    pre-scheduler sampled round (the bit-exactness anchor)."""
+
+    name = "uniform"
+
+    def select(self, rng, telemetry):
+        return np.sort(rng.choice(self.n_clients, size=self.k, replace=False))
+
+
+class RoundRobin(Policy):
+    """Deterministic rotation: round r takes the K ids starting at
+    ``r * K (mod C)``. Any ceil(C/K) consecutive rounds select ceil(C/K)*K
+    >= C consecutive (mod C) ids — every client participates at least
+    once per ceil(C/K) rounds, whatever the start round."""
+
+    name = "round_robin"
+
+    @property
+    def coverage_rounds(self) -> int:
+        return math.ceil(self.n_clients / self.k)
+
+    def select(self, rng, telemetry):
+        r = int(telemetry["round"])
+        return np.sort((r * self.k + np.arange(self.k)) % self.n_clients
+                       ).astype(np.int64)
+
+
+class Staleness(Policy):
+    """Largest ``round - 1 - last_round`` gaps first (never-synced clients
+    count from -1, so they lead). Ties — e.g. the all-fresh first round —
+    break by rng jitter, keeping the policy unbiased at equal staleness."""
+
+    name = "staleness"
+    needs_state = True
+
+    def select(self, rng, telemetry):
+        last = np.asarray(telemetry["last_round"], np.int64)
+        stale = np.maximum(int(telemetry["round"]) - 1 - last, 0)
+        return self._top_k(stale, rng.random(self.n_clients))
+
+
+class OmegaEMA(Policy):
+    """Power-of-choice over BlendAvg's own signal: draw a uniform pool of
+    ``pool_factor * K`` candidates, keep the top K by omega EMA. The
+    uniform pool keeps exploration alive (a client whose EMA never got a
+    chance to rise can still enter); the top-K exploit step routes
+    participation to clients whose updates have actually been improving
+    the global model."""
+
+    name = "omega_ema"
+    needs_state = True
+
+    def __init__(self, n_clients: int, k: int, pool_factor: int = POOL_FACTOR):
+        super().__init__(n_clients, k)
+        self.pool = min(n_clients, max(k, int(pool_factor) * k))
+
+    def select(self, rng, telemetry):
+        pool = rng.choice(self.n_clients, size=self.pool, replace=False)
+        ema = np.asarray(telemetry["omega_ema"], np.float64)[pool]
+        order = np.lexsort((rng.random(self.pool), -ema))
+        return np.sort(pool[order[: self.k]]).astype(np.int64)
+
+
+class DataVolume(Policy):
+    """Rows-proportional sampling without replacement via Efraimidis-
+    Spirakis keys (``u ** (1/w)``): P(client in the K) grows with its row
+    count, zero-row clients sink to the bottom (picked only when fewer
+    than K clients hold data)."""
+
+    name = "data_volume"
+
+    def select(self, rng, telemetry):
+        w = np.maximum(np.asarray(telemetry["rows"], np.float64), 0.0)
+        u = rng.random(self.n_clients)
+        if not (w > 0).any():  # degenerate: nobody holds rows -> uniform
+            return self._top_k(np.zeros(self.n_clients), u)
+        keys = np.where(w > 0, u ** (1.0 / np.maximum(w, 1e-300)), -1.0)
+        return self._top_k(keys, u)
+
+
+_POLICY_CLASSES = {p.name: p for p in
+                   (Uniform, RoundRobin, Staleness, OmegaEMA, DataVolume)}
+assert tuple(_POLICY_CLASSES) == POLICIES
+
+
+def make_policy(name: str, n_clients: int, k: int, **kw) -> Policy:
+    """Policy factory; raises on unknown names so a typo'd ``--policy``
+    fails at federation construction, not mid-run."""
+    try:
+        cls = _POLICY_CLASSES[name]
+    except KeyError:
+        raise ValueError(f"unknown participation policy {name!r}; "
+                         f"known: {', '.join(POLICIES)}") from None
+    return cls(n_clients, k, **kw)

@@ -16,7 +16,10 @@ Design points:
   a federation resumed from a round-``r`` checkpoint rebuilds the exact
   byte-identical batch stream — the property the round-state
   checkpointing in ``repro.launch.train_federated`` relies on for
-  bit-exact resume.
+  bit-exact resume. Adaptive participation policies
+  (``repro.core.schedule``, selected by ``spec.policy``) extend the pure
+  inputs to ``(seed, round, sched telemetry)`` — and the telemetry is
+  checkpointed round state, so the resume contract survives unchanged.
 - **Static shapes, data-dependent masks.** Row counts pad up to the
   spec's ``n_partial``/``n_frag``/``n_paired``; masks mark live rows.
   A client with a zero-row modality gets an all-zero mask and is
@@ -149,6 +152,26 @@ class FederatedBatcher:
         self.seed = int(seed)
         self.shardings = shardings
         self.prefetch = int(prefetch)
+        # participation policy for sampled rounds (repro.core.schedule):
+        # selection is host-side data, so the policy never recompiles the
+        # round. Per-client row totals (manifest lengths for store-backed
+        # clients — no shard IO) feed the data_volume policy.
+        from repro.core.schedule import make_policy
+
+        policy_name = getattr(spec, "policy", "uniform")
+        if getattr(spec, "n_sampled", 0):
+            self.policy = make_policy(policy_name, spec.n_clients,
+                                      spec.k_round)
+        elif policy_name != "uniform":
+            raise ValueError(f"participation policy {policy_name!r} requires "
+                             "spec.n_sampled > 0 (full participation has "
+                             "nothing to schedule)")
+        else:
+            self.policy = None
+        self._client_rows = np.asarray(
+            [sum(_rows(c, k) for k in ("partial_a", "partial_b", "frag_a",
+                                       "frag_b", "paired_a"))
+             for c in self.clients], np.float64)
         self.build_seconds = 0.0  # cumulative host batch-build time
         self.stall_seconds = 0.0  # prefetch mode: consumer time blocked
         # waiting for a staged batch (the build time prefetch FAILED to hide)
@@ -201,14 +224,34 @@ class FederatedBatcher:
             return np.arange(avail)
         return rng.permutation(avail)[:cap]
 
-    def build(self, round_no: int) -> dict:
-        """Build round ``round_no``'s host batch (numpy, unsharded)."""
+    def build(self, round_no: int, sched: dict | None = None) -> dict:
+        """Build round ``round_no``'s host batch (numpy, unsharded).
+
+        ``sched`` is the round-state telemetry block (numpy ``omega_ema``
+        / ``part_count`` / ``last_round``) a state-reading participation
+        policy selects from; policies that don't read state (uniform,
+        round_robin, data_volume) ignore it, keeping the batch a pure
+        function of ``(seed, round)``. With telemetry, purity extends to
+        ``(seed, round, sched)`` — and sched is checkpointed round state,
+        so bit-exact resume holds for every policy.
+        """
         t0 = time.perf_counter()
         s = self.spec
         rng = np.random.default_rng([self.seed, int(round_no)])
         K = s.k_round
         if s.n_sampled:
-            idx = np.sort(rng.choice(s.n_clients, size=K, replace=False))
+            t = {"round": int(round_no), "rows": self._client_rows}
+            if sched is not None:
+                t.update(sched)
+            elif self.policy.needs_state:
+                raise ValueError(
+                    f"policy {self.policy.name!r} selects clients from "
+                    "round-state telemetry; build() needs the sched block "
+                    "(drive it via rounds(..., telemetry_fn=...))")
+            # the uniform policy consumes this rng exactly like the
+            # pre-scheduler code (one choice draw), so the whole batch
+            # stream stays bit-identical under the default policy
+            idx = self.policy.select(rng, t)
         else:
             idx = np.arange(s.n_clients)
         sub = [self.clients[i] for i in idx]
@@ -309,7 +352,8 @@ class FederatedBatcher:
 
     # ---- double-buffered round stream ----
 
-    def rounds(self, start: int, stop: int, prefetch: int | None = None):
+    def rounds(self, start: int, stop: int, prefetch: int | None = None,
+               telemetry_fn=None):
         """Yield ``(round_no, device_batch)`` for rounds [start, stop).
 
         With ``prefetch > 0`` a daemon worker builds and stages up to
@@ -321,7 +365,23 @@ class FederatedBatcher:
         thread contends with the XLA CPU compute pool, and the copy is
         cheap next to the build. ``stall_seconds`` accumulates consumer
         time spent waiting for a staged batch — the build time prefetch
-        failed to hide."""
+        failed to hide.
+
+        ``telemetry_fn() -> dict`` supplies the current round-state sched
+        telemetry for a state-reading participation policy (staleness /
+        omega_ema). Round r's selection depends on round r-1's outcome —
+        a true data dependency — so those policies run the synchronous
+        path regardless of ``prefetch``: each batch builds only after the
+        caller's previous round updated the state the telemetry reads.
+        State-free policies keep the full prefetch overlap."""
+        if (self.policy is not None and self.policy.needs_state):
+            if telemetry_fn is None:
+                raise ValueError(
+                    f"policy {self.policy.name!r} needs per-round state "
+                    "telemetry; pass telemetry_fn to rounds()")
+            for r in range(start, stop):
+                yield r, self.put(self.build(r, telemetry_fn()))
+            return
         depth = self.prefetch if prefetch is None else int(prefetch)
         if depth <= 0:
             for r in range(start, stop):

@@ -51,6 +51,7 @@ from repro.core.federation_sharded import (
     make_blendfl_round,
 )
 from repro.core.partitioner import ClientData, partition
+from repro.core.schedule import POLICIES, telemetry_from_state
 from repro.data.pipeline import FederatedBatcher
 from repro.data.store import ClientStore, write_store
 from repro.data.synthetic import make_task, train_val_test
@@ -118,7 +119,8 @@ def build_federation(args) -> tuple:
             seq_b=m["seq_b"], feat_b=m["feat_b"], out_dim=m["out_dim"],
             kind=m["kind"], n_partial=n_partial, n_frag=n_partial,
             n_paired=n_partial, n_val=m["n_val"], lr=args.lr,
-            optimizer=args.optimizer, n_sampled=args.n_sampled)
+            optimizer=args.optimizer, n_sampled=args.n_sampled,
+            policy=getattr(args, "policy", "uniform"))
     else:
         task = make_task(args.task)
         tr, va, _ = train_val_test(task, args.n_train, args.n_val, 64,
@@ -131,7 +133,7 @@ def build_federation(args) -> tuple:
             feat_b=task.feat_b, out_dim=task.out_dim, kind=task.kind,
             n_partial=n_partial, n_frag=n_partial, n_paired=n_partial,
             n_val=args.n_val, lr=args.lr, optimizer=args.optimizer,
-            n_sampled=args.n_sampled)
+            n_sampled=args.n_sampled, policy=getattr(args, "policy", "uniform"))
     mesh = make_host_mesh()
     shard = sh.batch_shardings(mesh, batch_specs(spec, ragged=True))
     if store is not None:
@@ -162,8 +164,16 @@ def run(args, spec, batcher, round_fn, start: int, state: dict,
     # store-backed runs stamp the data identity into every checkpoint so
     # init_or_restore can refuse to resume against a different store
     fp = _fingerprint(batcher)
+
+    def sched_telemetry() -> dict:
+        # state-reading participation policies (staleness / omega_ema)
+        # pull the sched block before each build; ``state`` rebinds every
+        # round below, so this always reads the latest round's telemetry
+        return telemetry_from_state(state)
+
     t0 = time.time()
-    for r, batch in batcher.rounds(start, args.rounds):
+    for r, batch in batcher.rounds(start, args.rounds,
+                                   telemetry_fn=sched_telemetry):
         state, metrics = round_fn(state, batch)
         row = {k: float(np.asarray(v)) for k, v in metrics.items()
                if np.asarray(v).ndim == 0}
@@ -264,7 +274,8 @@ def selftest_resume(args) -> None:
                     f"resume parity broken at round {want['round']}: "
                     f"{k} {got[k]!r} != {want[k]!r}")
     print(f"resume parity OK: {len(ref)} rounds bit-identical "
-          f"(interrupted at round {mid}, n_sampled={args.n_sampled})")
+          f"(interrupted at round {mid}, n_sampled={args.n_sampled}, "
+          f"policy={getattr(args, 'policy', 'uniform')})")
 
 
 def main() -> None:
@@ -280,6 +291,10 @@ def main() -> None:
     ap.add_argument("--task", default="smnist")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--n-sampled", type=int, default=0)
+    ap.add_argument("--policy", default="uniform", choices=POLICIES,
+                    help="participation policy for K-of-C sampled rounds "
+                         "(repro.core.schedule); uniform = bit-exact "
+                         "pre-scheduler sampling")
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--n-train", type=int, default=2048)
     ap.add_argument("--n-val", type=int, default=256)

@@ -1,0 +1,76 @@
+"""``tools/bench_check.py`` — the BENCH_*.json schema gate in `make ci`.
+
+Runs the checker as a subprocess against scratch results directories
+(the same way the Makefile invokes it), covering: empty-dir pass,
+conforming records pass, and one failure per schema rule — unparseable
+JSON, missing envelope keys, record/records ambiguity, non-finite
+numbers (incl. the non-RFC ``NaN`` literal ``json.dump`` emits), and
+compile-cache counts < 1.
+"""
+import json
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(results_dir):
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO_ROOT, "tools", "bench_check.py"),
+         str(results_dir)], capture_output=True, text=True)
+
+
+def _write(tmp_path, name, payload):
+    path = tmp_path / name
+    path.write_text(payload if isinstance(payload, str)
+                    else json.dumps(payload))
+    return path
+
+
+GOOD = {"bench": "round_engine", "backend": "cpu",
+        "records": [{"n_clients": 3, "s_per_round": 0.12, "caches": [1, 1]},
+                    {"n_clients": 8, "s_per_round": 0.33, "compile_cache": 1}]}
+
+
+def test_empty_dir_passes(tmp_path):
+    r = _run(tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "nothing to validate" in r.stdout
+
+
+def test_conforming_records_pass(tmp_path):
+    _write(tmp_path, "BENCH_a.json", GOOD)
+    _write(tmp_path, "BENCH_b.json",
+           {"bench": "loader", "backend": "cpu", "record": {"x": 1.5}})
+    r = _run(tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "2 record file(s)" in r.stdout
+
+
+def test_violations_fail_with_paths(tmp_path):
+    _write(tmp_path, "BENCH_trunc.json", '{"bench": "x", "backend":')
+    _write(tmp_path, "BENCH_envelope.json", {"record": {"x": 1}})
+    _write(tmp_path, "BENCH_both.json",
+           {"bench": "b", "backend": "cpu", "record": {}, "records": []})
+    # json.dump writes NaN as a bare literal; the checker must flag it
+    _write(tmp_path, "BENCH_nan.json",
+           '{"bench": "n", "backend": "cpu", "record": {"t": NaN}}')
+    _write(tmp_path, "BENCH_cache.json",
+           {"bench": "c", "backend": "cpu",
+            "records": [{"compile_cache": 0}]})
+    r = _run(tmp_path)
+    assert r.returncode == 1
+    out = r.stdout
+    assert "unparseable JSON" in out
+    assert "BENCH_envelope.json.bench" in out
+    assert "need exactly one of" in out
+    assert "non-finite number" in out
+    assert "cache count must be an int >= 1" in out
+
+
+def test_repo_results_dir_conforms():
+    """Whatever records this machine's bench runs have produced must
+    already conform — the gate `make ci` applies."""
+    r = _run(os.path.join(REPO_ROOT, "benchmarks", "results"))
+    assert r.returncode == 0, r.stdout + r.stderr

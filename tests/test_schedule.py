@@ -1,0 +1,270 @@
+"""Participation scheduler (``repro.core.schedule``) + its integration
+into both federation drivers.
+
+Core invariants:
+  * every policy is deterministic given (rng state, telemetry) — the
+    property bit-exact checkpoint/resume rests on;
+  * ``uniform`` consumes the rng byte-identically to the pre-scheduler
+    sampled round (the existing K-of-C parity tests stay green);
+  * ``round_robin`` covers every client at least once per ceil(C/K)
+    consecutive rounds, from any start round;
+  * the omega-EMA telemetry update matches a plain numpy reference,
+    participants-only;
+  * at K = C every policy selects all clients — scheduling is a no-op
+    and the batch stream matches ``uniform`` exactly;
+  * checkpoint/resume stays bit-exact under a state-reading policy
+    (slow lane, ``--policy omega_ema``).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedule
+from repro.core.schedule import POLICIES, make_policy
+from repro.data.pipeline import FederatedBatcher
+from test_federated_loader import _ragged_clients, _spec, _val
+
+C, K = 8, 3
+
+
+def _telemetry(round_no=5, last_round=None, omega_ema=None, rows=None):
+    return {
+        "round": round_no,
+        "last_round": np.full(C, -1, np.int64) if last_round is None
+        else np.asarray(last_round),
+        "omega_ema": np.zeros(C) if omega_ema is None else np.asarray(omega_ema),
+        "part_count": np.zeros(C, np.int64),
+        "rows": np.ones(C) if rows is None else np.asarray(rows, np.float64),
+    }
+
+
+# ------------------------------------------------------- policy semantics --
+
+@pytest.mark.parametrize("name", POLICIES)
+def test_policy_deterministic_and_well_formed(name):
+    """Same (seed, round)-keyed rng + same telemetry -> same sorted ids;
+    ids are a valid K-subset of [0, C)."""
+    pol = make_policy(name, C, K)
+    t = _telemetry(rows=np.arange(1, C + 1.0))
+    picks = [pol.select(np.random.default_rng([7, 5]), t) for _ in range(2)]
+    np.testing.assert_array_equal(picks[0], picks[1])
+    ids = picks[0]
+    assert ids.shape == (K,)
+    assert (np.diff(ids) > 0).all(), "ids must be sorted and distinct"
+    assert 0 <= ids.min() and ids.max() < C
+
+
+def test_policies_vary_across_rounds():
+    """Different per-round rng keys / round indices give the scheduler
+    room to vary the subset (no policy is stuck on one cohort)."""
+    t_rows = np.arange(1, C + 1.0)
+    for name in POLICIES:
+        pol = make_policy(name, C, K)
+        subsets = {tuple(pol.select(np.random.default_rng([7, r]),
+                                    _telemetry(round_no=r, rows=t_rows)))
+                   for r in range(8)}
+        assert len(subsets) > 1, name
+
+
+def test_uniform_matches_prescheduler_draw():
+    """Bit-exactness anchor: the uniform policy consumes the rng exactly
+    like the code it replaced (one sorted no-replacement choice)."""
+    pol = make_policy("uniform", C, K)
+    for r in range(4):
+        want_rng = np.random.default_rng([3, r])
+        want = np.sort(want_rng.choice(C, size=K, replace=False))
+        got_rng = np.random.default_rng([3, r])
+        np.testing.assert_array_equal(pol.select(got_rng, _telemetry()), want)
+        # and the post-selection stream position is identical too (the
+        # row draws that follow in build() must not shift)
+        np.testing.assert_array_equal(want_rng.random(4), got_rng.random(4))
+
+
+@pytest.mark.parametrize("c,k", [(8, 3), (7, 2), (16, 4), (5, 5)])
+def test_round_robin_coverage_bound(c, k):
+    """Every client participates at least once in ANY ceil(C/K)
+    consecutive rounds — the coverage guarantee."""
+    pol = make_policy("round_robin", c, k)
+    w = pol.coverage_rounds
+    rng = np.random.default_rng(0)
+    for start in (0, 1, 5, 123):
+        seen = set()
+        for r in range(start, start + w):
+            seen.update(pol.select(rng, _telemetry(round_no=r)).tolist())
+        assert seen == set(range(c)), (c, k, start)
+
+
+def test_staleness_prefers_stale_clients():
+    pol = make_policy("staleness", C, K)
+    last = np.full(C, 9)  # all fresh at round 10 …
+    last[[1, 4, 6]] = 2  # … except three 7-rounds-stale clients
+    ids = pol.select(np.random.default_rng(0),
+                     _telemetry(round_no=10, last_round=last))
+    np.testing.assert_array_equal(ids, [1, 4, 6])
+
+
+def test_omega_ema_prefers_high_ema_within_pool():
+    """Power-of-choice: the K picks are the top-EMA members of the
+    oversampled pool (never a lower-EMA pool member over a higher one)."""
+    pol = make_policy("omega_ema", C, K)
+    ema = np.arange(C, dtype=float)
+    for r in range(6):
+        rng = np.random.default_rng([1, r])
+        ids = pol.select(rng, _telemetry(omega_ema=ema))
+        # reconstruct the pool this rng drew
+        pool = np.random.default_rng([1, r]).choice(C, size=pol.pool,
+                                                    replace=False)
+        want = np.sort(pool[np.argsort(-ema[pool], kind="stable")[:K]])
+        np.testing.assert_array_equal(ids, want)
+
+
+def test_data_volume_tracks_row_counts():
+    """Rows-proportional sampling: over many draws, a client with 50x
+    the rows participates far more often than a near-empty one; zero-row
+    clients are never picked while K data-holding clients exist."""
+    pol = make_policy("data_volume", C, K)
+    rows = np.array([500.0, 500, 500, 10, 10, 10, 10, 0])
+    counts = np.zeros(C)
+    for r in range(300):
+        ids = pol.select(np.random.default_rng([2, r]), _telemetry(rows=rows))
+        counts[ids] += 1
+    assert counts[7] == 0
+    assert counts[:3].min() > 2 * counts[3:7].max()
+
+
+def test_make_policy_validates():
+    with pytest.raises(ValueError, match="unknown participation policy"):
+        make_policy("best_effort", C, K)
+    with pytest.raises(ValueError, match="must be in"):
+        make_policy("uniform", C, C + 1)
+
+
+# ------------------------------------------------------- omega-EMA update --
+
+def test_ema_update_matches_numpy_reference():
+    """schedule.ema_update (the jnp scatter the sharded round jits) vs a
+    plain numpy reference, participants-only and full-participation."""
+    rng = np.random.default_rng(0)
+    ema = rng.random(C).astype(np.float32)
+    omega = rng.random(K).astype(np.float32)
+    idx = np.array([1, 4, 6])
+    beta = 0.9
+
+    ref = ema.copy()
+    ref[idx] = beta * ref[idx] + (1 - beta) * omega
+    got = np.asarray(schedule.ema_update(jnp.asarray(ema), jnp.asarray(omega),
+                                         beta, idx=jnp.asarray(idx)))
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+    # untouched slots are BIT-identical, not merely close
+    mask = np.ones(C, bool)
+    mask[idx] = False
+    np.testing.assert_array_equal(got[mask], ema[mask])
+
+    omega_full = rng.random(C).astype(np.float32)
+    ref_full = beta * ema + (1 - beta) * omega_full
+    got_full = np.asarray(schedule.ema_update(jnp.asarray(ema),
+                                              jnp.asarray(omega_full), beta))
+    np.testing.assert_allclose(got_full, ref_full, rtol=1e-6)
+
+
+# ----------------------------------------------- K = C no-op parity --------
+
+def test_k_equals_c_selects_everyone():
+    for name in POLICIES:
+        pol = make_policy(name, C, C)
+        ids = pol.select(np.random.default_rng(0),
+                         _telemetry(rows=np.arange(1, C + 1.0)))
+        np.testing.assert_array_equal(ids, np.arange(C), err_msg=name)
+
+
+def test_k_equals_c_batch_stream_matches_uniform():
+    """With K = C and capacities >= every client's rows, build() draws no
+    row subsets — so every policy's batch stream is bit-identical to
+    uniform's (scheduling degenerates to a no-op)."""
+    import dataclasses
+
+    # generate clients against smaller caps, batch against roomier ones:
+    # every client's rows then fit, so _draw never consumes the rng and
+    # the only stream divergence between policies would be selection
+    gen = _spec()
+    rng = np.random.default_rng(0)
+    clients = _ragged_clients(gen, rng)
+    val = _val(gen, rng)
+    spec = _spec(n_sampled=4, n_partial=gen.n_partial + 4,
+                 n_frag=gen.n_frag + 4, n_paired=gen.n_paired + 4)
+    ref = FederatedBatcher(clients, spec, val, seed=1).build(3)
+    sched = {"last_round": np.full(4, -1, np.int64),
+             "omega_ema": np.zeros(4), "part_count": np.zeros(4, np.int64)}
+    for name in POLICIES:
+        b = FederatedBatcher(clients, dataclasses.replace(spec, policy=name),
+                             val, seed=1)
+        got = b.build(3, sched=sched)
+        for k in ref:
+            np.testing.assert_array_equal(got[k], ref[k],
+                                          err_msg=f"{name}:{k}")
+
+
+# --------------------------------------------------- driver integration ----
+
+def test_nonuniform_policy_requires_sampling():
+    spec = _spec(policy="staleness")  # n_sampled defaults to 0
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="requires spec.n_sampled"):
+        FederatedBatcher(_ragged_clients(spec, rng), spec, _val(spec, rng))
+
+
+def test_needs_state_policy_requires_telemetry():
+    spec = _spec(n_sampled=2, policy="staleness")
+    rng = np.random.default_rng(0)
+    b = FederatedBatcher(_ragged_clients(spec, rng), spec, _val(spec, rng))
+    with pytest.raises(ValueError, match="telemetry"):
+        b.build(0)
+    with pytest.raises(ValueError, match="telemetry_fn"):
+        next(b.rounds(0, 1))
+
+
+def test_inhost_federation_policy_telemetry():
+    """In-host driver: a state-reading policy runs end to end, fills the
+    omega-EMA/participation telemetry, and never retraces a phase."""
+    from repro.core.encoders import EncoderConfig
+    from repro.core.federation import FedConfig, Federation
+    from repro.core.partitioner import partition
+    from repro.data.synthetic import make_task, train_val_test
+
+    spec = make_task("smnist")
+    tr, va, _ = train_val_test(spec, 240, 200, 100, seed=3)
+    clients = partition(tr, 4, frac_paired=0.6, frac_fragmented=0.3,
+                        frac_partial=0.1, seed=4)
+    ecfg = EncoderConfig(d_hidden=32, n_layers=1, enc_type="mlp")
+    cfg = FedConfig(n_clients=4, rounds=3, lr=1e-2, batch_size=32, seed=0,
+                    n_sampled=2, async_mode=True, policy="staleness")
+    fed = Federation.init(jax.random.PRNGKey(0), cfg, spec, ecfg, clients, va)
+    for _ in range(3):
+        logs = fed.round()
+        assert len(logs["sampled"]) == 2
+    # staleness policy + async broadcast bounds the sync gap: after
+    # ceil(C/K)+1 = 3 rounds every client has participated
+    assert (fed.part_count > 0).all()
+    assert int(fed.part_count.sum()) == 6
+    assert np.isfinite(fed.omega_ema).all()
+    assert fed.engine.unimodal_phase._cache_size() == 1
+
+    with pytest.raises(ValueError, match="requires n_sampled"):
+        Federation.init(jax.random.PRNGKey(0),
+                        FedConfig(n_clients=4, policy="omega_ema"),
+                        spec, ecfg, clients, va)
+
+
+@pytest.mark.slow
+def test_resume_parity_omega_ema_policy(tmp_path):
+    """Slow lane: killed-and-resumed parity is bit-exact under a
+    state-reading adaptive policy — the sched telemetry block rides the
+    full-round-state checkpoint, so the resumed scheduler picks the same
+    ids the uninterrupted run did."""
+    from repro.launch.train_federated import selftest_resume
+    from test_federated_loader import _loader_args
+
+    selftest_resume(_loader_args(clients=6, n_sampled=3, policy="omega_ema"))

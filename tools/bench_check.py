@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Bench-record schema checker — fails fast on emission regressions.
+
+Validates every ``benchmarks/results/BENCH_*.json`` against the record
+schema documented in ``docs/benchmarks.md``:
+
+- the file parses as a JSON object (a truncated/interleaved write is the
+  exact failure ``benchmarks.common.write_bench_json`` exists to prevent
+  — this checker is its backstop);
+- required envelope keys: ``bench`` (snake_case id) and ``backend``
+  (string, ``jax.default_backend()`` at run time);
+- exactly one of ``record`` (non-empty object) / ``records`` (non-empty
+  list of objects);
+- every number anywhere in the payload is finite — a NaN/Infinity
+  measurement is a broken measurement, and ``json.dump`` happily emits
+  non-RFC ``NaN`` literals that would poison cross-PR comparisons;
+- ``compile_cache`` / ``caches`` values (the retrace regression signal)
+  are integers >= 1.
+
+``benchmarks/results/`` is gitignored, so a fresh checkout has nothing
+to validate — that's a pass (the checker guards whatever records the
+current machine has produced, e.g. the benches CI or a dev ran earlier
+in the same job). Exit status 1 lists every violation with file:path.
+
+    python tools/bench_check.py [results_dir]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+import re
+import sys
+
+DEFAULT_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "results")
+
+_BENCH_ID = re.compile(r"^[a-z][a-z0-9_]*$")
+_CACHE_KEYS = ("compile_cache", "caches")
+
+
+def _walk_numbers(node, path, errors):
+    """Recursive finiteness check; bools are not numbers."""
+    if isinstance(node, bool) or node is None or isinstance(node, str):
+        return
+    if isinstance(node, (int, float)):
+        if not math.isfinite(node):
+            errors.append(f"{path}: non-finite number {node!r}")
+        return
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _walk_numbers(v, f"{path}.{k}", errors)
+        return
+    if isinstance(node, list):
+        for i, v in enumerate(node):
+            _walk_numbers(v, f"{path}[{i}]", errors)
+
+
+def _check_caches(node, path, errors):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            p = f"{path}.{k}"
+            if k in _CACHE_KEYS:
+                vals = v if isinstance(v, list) else [v]
+                for c in vals:
+                    if isinstance(c, bool) or not isinstance(c, int) or c < 1:
+                        errors.append(
+                            f"{p}: cache count must be an int >= 1, got {c!r}")
+            else:
+                _check_caches(v, p, errors)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _check_caches(v, f"{path}[{i}]", errors)
+
+
+def check_payload(payload, name: str) -> list:
+    """Schema violations for one parsed BENCH_*.json payload."""
+    errors = []
+    if not isinstance(payload, dict):
+        return [f"{name}: top level must be a JSON object"]
+    bench = payload.get("bench")
+    if not (isinstance(bench, str) and _BENCH_ID.match(bench)):
+        errors.append(f"{name}.bench: missing or not a snake_case id "
+                      f"({bench!r})")
+    if not isinstance(payload.get("backend"), str):
+        errors.append(f"{name}.backend: missing or not a string")
+    has_rec = "record" in payload
+    has_recs = "records" in payload
+    if has_rec == has_recs:
+        errors.append(f"{name}: need exactly one of 'record'/'records'")
+    if has_rec and not (isinstance(payload["record"], dict)
+                        and payload["record"]):
+        errors.append(f"{name}.record: must be a non-empty object")
+    if has_recs and not (isinstance(payload["records"], list)
+                         and payload["records"]
+                         and all(isinstance(r, dict)
+                                 for r in payload["records"])):
+        errors.append(f"{name}.records: must be a non-empty list of objects")
+    _walk_numbers(payload, name, errors)
+    _check_caches(payload, name, errors)
+    return errors
+
+
+def check_file(path: str) -> list:
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            # json.loads accepts NaN/Infinity literals by default; we
+            # want them flagged, so parse them into floats and let the
+            # finiteness walk report the path
+            payload = json.load(f)
+    except ValueError as e:
+        return [f"{name}: unparseable JSON ({e})"]
+    return check_payload(payload, name)
+
+
+def main(argv: list) -> int:
+    results_dir = argv[0] if argv else DEFAULT_DIR
+    files = sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json")))
+    if not files:
+        print(f"bench-check: no BENCH_*.json under {results_dir} "
+              "(nothing to validate — OK)")
+        return 0
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    if errors:
+        print(f"bench-check: {len(errors)} schema violation(s):")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"bench-check: OK ({len(files)} record file(s) conform)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
