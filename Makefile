@@ -1,14 +1,14 @@
 # Test lanes. `test` (docs-check + the full suite) is the tier-1 gate;
 # `test-fast` skips the @pytest.mark.slow convergence/parity tests so
-# the local verify loop stays around the ~90 s budget (`ci-test`
-# enforces TEST_FAST_BUDGET_S as a hard ceiling — the default adds
-# headroom for slower CI runners; override with TEST_FAST_BUDGET_S=...).
+# the local verify loop stays within a few minutes (`ci-test` enforces
+# TEST_FAST_BUDGET_S as a hard ceiling — the default adds headroom for
+# slower CI runners; override with TEST_FAST_BUDGET_S=...).
 PYTEST = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest -q
-TEST_FAST_BUDGET_S ?= 180
+TEST_FAST_BUDGET_S ?= 240
 
 .PHONY: test test-fast docs-check bench-check ci ci-test ci-smoke \
 	bench-sampled bench-loader bench-store bench-participation \
-	train-federated
+	bench-comm train-federated
 
 test: docs-check
 	$(PYTEST)
@@ -46,11 +46,16 @@ ci-test: docs-check bench-check
 
 # Lane 2: the kill-and-resume smoke — full participation (the
 # train-federated lane below) plus a K-of-C sampled run under the
-# state-reading omega_ema participation policy, so CI exercises the
-# scheduler's checkpoint/resume contract end to end.
+# state-reading omega_ema participation policy, plus a codec-enabled
+# sampled run (int8_topk with error feedback), so CI exercises both the
+# scheduler's and the wire codec's checkpoint/resume contracts end to
+# end (the codec's residual trees must restore bit-exactly).
 ci-smoke: train-federated
 	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
 		--rounds 4 --clients 6 --n-sampled 3 --policy omega_ema \
+		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
+	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
+		--rounds 4 --clients 6 --n-sampled 3 --codec int8_topk \
 		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
 
 bench-sampled:
@@ -67,6 +72,12 @@ bench-store:
 # shared across every policy.
 bench-participation:
 	PYTHONPATH=src python -m benchmarks.participation_bench
+
+# Wire codecs (none/int8/topk/int8_topk) on the same straggler cohort:
+# analytic bytes/round + compression ratio vs rounds-to-target-AUROC,
+# one compiled round per codec. Emits BENCH_comm.json.
+bench-comm:
+	PYTHONPATH=src python -m benchmarks.comm_bench
 
 # Smoke lane: tiny ragged federation, 2 rounds, checkpoint at round 1,
 # kill-and-resume, assert bit-exact round-metric parity.

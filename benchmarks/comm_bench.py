@@ -1,0 +1,159 @@
+"""§Wire codec: bytes/round vs rounds-to-target tradeoff across codecs.
+
+The same straggler cohort as ``benchmarks.participation_bench`` (C=16
+ragged clients, K=4 uniform sampling), swept over the wire codecs of
+``repro.core.codec`` (``none`` / ``int8`` / ``topk`` / ``int8_topk``).
+For each codec the bench drives its own jitted sharded round — the
+codec is STATIC round structure (a different program, like a different
+optimizer), so the invariant is per-program: each codec's round must
+compile exactly once across all its rounds. Measured per codec:
+
+  - analytic wire bytes/round (``repro.core.codec.round_bytes``: K
+    candidate uploads + K broadcast downloads of the model-group tree)
+    and the compression ratio vs. the dense fp32 baseline;
+  - rounds to reach a target validation multimodal AUROC (host-side
+    eval of the blended global, outside the timed region) — the cost of
+    compression in convergence currency;
+  - bytes-to-target: the product, the number that actually matters on
+    a metered uplink.
+
+Emits ``BENCH_comm.json``. Acceptance: ``int8_topk`` cuts bytes/round
+by >= 3.5x vs ``none`` while reaching the target AUROC within +2
+rounds, and every codec's compile cache is exactly 1.
+
+    PYTHONPATH=src python -m benchmarks.comm_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_bench_json
+from benchmarks.participation_bench import (
+    K,
+    N_CLIENTS,
+    TARGET_AUROC,
+    _straggler_clients,
+)
+
+TOPK_FRAC = 0.25
+
+
+def _build(quick: bool):
+    from repro.core.federation_sharded import ShardedFedSpec, batch_specs
+    from repro.data.synthetic import make_task, train_val_test
+    from repro.launch import shardings as sh
+    from repro.launch.mesh import make_host_mesh
+
+    task = make_task("smnist")
+    rich_paired, rich_partial, strag = ((96, 48, 8) if quick
+                                        else (160, 64, 8))
+    need = (N_CLIENTS // 2) * (rich_paired + rich_partial + 2 * strag) + 64
+    tr, va, _ = train_val_test(task, need, 512, 64, seed=0)
+    clients, rows = _straggler_clients(task, tr, rich_paired, rich_partial,
+                                       strag, seed=1)
+    print(f"straggler cohort: per-client rows {sorted(rows)}")
+    spec = ShardedFedSpec(
+        n_clients=N_CLIENTS, d_hidden=32, n_layers=2, seq_a=task.seq_a,
+        feat_a=task.feat_a, seq_b=task.seq_b, feat_b=task.feat_b,
+        out_dim=task.out_dim, kind=task.kind, n_partial=rich_partial,
+        n_frag=8, n_paired=rich_paired, n_val=512, lr=2e-2,
+        optimizer="adamw", n_sampled=K, topk_frac=TOPK_FRAC)
+    mesh = make_host_mesh()
+    # batch shapes are codec-independent: one sharding set for the sweep
+    shard = sh.batch_shardings(mesh, batch_specs(spec, ragged=True))
+    val = {"val_a": va.x_a, "val_b": va.x_b, "val_y": va.y}
+    return spec, clients, val, va, shard, mesh
+
+
+def _run_codec(codec: str, spec0, clients, val, va, shard, mesh, rounds: int):
+    from repro.core.codec import make_codec, round_bytes
+    from repro.core.federation import eval_multimodal
+    from repro.core.federation_sharded import (
+        init_round_state, make_blendfl_round)
+    from repro.data.pipeline import FederatedBatcher
+    from repro.launch.train_federated import place_state
+
+    spec = dataclasses.replace(spec0, codec=codec)
+    round_fn = jax.jit(make_blendfl_round(spec))
+    batcher = FederatedBatcher(clients, spec, val, seed=0, shardings=shard)
+    state = place_state(init_round_state(jax.random.PRNGKey(0), spec), mesh)
+
+    aurocs, to_target = [], None
+    for r, batch in batcher.rounds(0, rounds):
+        state, _ = round_fn(state, batch)
+        g = state["global_models"]
+        auc = eval_multimodal(g["f_A"], g["f_B"], g["g_M"], va.x_a, va.x_b,
+                              va.y, spec.ecfg, spec.kind)
+        aurocs.append(auc)
+        if to_target is None and auc >= TARGET_AUROC:
+            to_target = r + 1
+    rb = round_bytes(state["global_models"],
+                     make_codec(codec, spec.topk_frac), n_up=K, n_down=K)
+    return {
+        "codec": codec,
+        "topk_frac": spec.topk_frac if codec in ("topk", "int8_topk") else None,
+        "rounds_to_target": to_target,
+        "target_auroc": TARGET_AUROC,
+        "final_auroc": round(aurocs[-1], 4),
+        "best_auroc": round(max(aurocs), 4),
+        "bytes_per_round": rb["bytes_per_round"],
+        "compression_ratio": round(rb["compression_ratio"], 3),
+        "bytes_to_target": (None if to_target is None
+                            else rb["bytes_per_round"] * to_target),
+        "compile_cache": int(round_fn._cache_size()),
+    }
+
+
+def main(quick: bool = False) -> None:
+    from repro.core.codec import CODECS
+
+    print(f"\n=== wire codecs: straggler cohort, C={N_CLIENTS} K={K}, "
+          f"topk_frac={TOPK_FRAC} ===")
+    spec, clients, val, va, shard, mesh = _build(quick)
+    rounds = 12 if quick else 24
+    codecs = ("none", "int8_topk") if quick else CODECS
+
+    print(f"{'codec':>10s} {'to_target':>9s} {'final':>7s} {'best':>7s} "
+          f"{'MB/round':>9s} {'ratio':>6s}")
+    records = []
+    for c in codecs:
+        rec = _run_codec(c, spec, clients, val, va, shard, mesh, rounds)
+        records.append(rec)
+        tt = "-" if rec["rounds_to_target"] is None else rec["rounds_to_target"]
+        print(f"{c:>10s} {tt!s:>9s} {rec['final_auroc']:7.3f} "
+              f"{rec['best_auroc']:7.3f} {rec['bytes_per_round']/1e6:9.3f} "
+              f"{rec['compression_ratio']:6.2f}", flush=True)
+
+    # record first, assert after: a failed acceptance still leaves the
+    # measurement on disk for the next comparison
+    write_bench_json("BENCH_comm.json",
+                     {"bench": "comm_codec",
+                      "backend": jax.default_backend(),
+                      "n_clients": N_CLIENTS, "k": K, "rounds": rounds,
+                      "topk_frac": TOPK_FRAC, "records": records})
+
+    for rec in records:
+        assert rec["compile_cache"] == 1, \
+            f"codec {rec['codec']} retraced: cache {rec['compile_cache']}"
+    by = {r["codec"]: r for r in records}
+    ratio = by["int8_topk"]["compression_ratio"]
+    assert ratio >= 3.5, \
+        f"int8_topk compression {ratio}x < 3.5x vs none"
+    none_rounds = by["none"]["rounds_to_target"] or (rounds + 1)
+    it_rounds = by["int8_topk"]["rounds_to_target"]
+    assert it_rounds is not None and it_rounds <= none_rounds + 2, \
+        f"int8_topk took {it_rounds} rounds to AUROC {TARGET_AUROC} vs " \
+        f"none's {none_rounds} (+2 budget)"
+    print(f"--> int8_topk: {ratio:.1f}x fewer bytes/round, target AUROC in "
+          f"{it_rounds} rounds vs none's "
+          f"{by['none']['rounds_to_target'] or 'never'}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

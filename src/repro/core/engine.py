@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
+from repro.core import codec as wire
 from repro.core.encoders import (
     EncoderConfig,
     encoder_apply,
@@ -105,6 +106,13 @@ class EngineConfig:
     # partition rule, so the Pallas kernel would force an all-gather of
     # every client model).
     blend: str = "pallas"  # pallas | reduce
+    # Wire codec applied to the simulated round traffic (uplink candidate
+    # deltas, downlink broadcast deltas) between the phase outputs and
+    # blendavg_update/fedavg_update. CodecConfig is frozen/hashable, so
+    # it is static round structure: codec "none" traces no codec ops at
+    # all, and switching codecs means a new round program — never a
+    # retrace of an existing one.
+    codec: wire.CodecConfig = wire.CodecConfig()
 
 
 def make_optimizer(cfg: EngineConfig) -> optim.Optimizer:
@@ -418,13 +426,36 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
         return jax.tree.map(
             lambda g: jnp.broadcast_to(g[None], (n_clients,) + g.shape), global_tree)
 
+    # ---- wire codec: between the phase outputs and phase-4 aggregation ----
+
+    def codec_uplink(trained, base, resid):
+        """Client -> server wire for the stacked phase-3 candidates.
+
+        Each participant ships its training delta vs. the ``base`` tree
+        it started the round from (+ its error-feedback residual row)
+        through the lossy codec; aggregation then scores and blends the
+        DECODED candidates — exactly what a real server would hold.
+        Returns (decoded candidate tree, new residual rows).
+        """
+        return wire.uplink_roundtrip(trained, base, resid, cfg.codec)
+
+    def codec_downlink(new_global, prev_global, resid):
+        """Server -> clients broadcast wire: the blend delta vs. the
+        global the clients already hold, through the same codec. The
+        decoded tree becomes the clients' view of the global model (the
+        server's own g_M^v head never crosses a wire and keeps the true
+        blend). Returns (decoded global tree, new residual)."""
+        return wire.downlink_roundtrip(new_global, prev_global, resid,
+                                       cfg.codec)
+
     return SimpleNamespace(
         opt=opt, srv_opt=srv_opt, unimodal_loss=unimodal_loss,
         paired_loss=paired_loss,
         unimodal_step=unimodal_step, vfl_step=vfl_step, paired_step=paired_step,
         omega_from_scores=omega_from_scores, blend_stacked=blend_stacked,
         blendavg_update=blendavg_update, fedavg_update=fedavg_update,
-        broadcast=broadcast)
+        broadcast=broadcast, codec_uplink=codec_uplink,
+        codec_downlink=codec_downlink)
 
 
 # ------------------------------------------------------- in-host driver ----
@@ -447,6 +478,11 @@ class RoundEngine:
         self.vfl_phase = jax.jit(self.fns.vfl_step)
         self.uni_scores = jax.jit(self._build_uni_scores())
         self.multi_scores = jax.jit(self._build_multi_scores())
+        # wire-codec stages (identity-free: only jitted when a codec is
+        # configured, so the uncompressed engine traces no codec ops)
+        if cfg.codec.enabled:
+            self.codec_uplink = jax.jit(self.fns.codec_uplink)
+            self.codec_downlink = jax.jit(self.fns.codec_downlink)
 
     def init_opt_state(self, stacked_models):
         return self.opt.init({k: stacked_models[k] for k in CLIENT_GROUPS})

@@ -59,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.tree import tree_unstack
+from repro.core import codec as wire
 from repro.core import schedule, vfl
 from repro.core.blendavg import blendavg_weights
 from repro.core.encoders import (
@@ -120,6 +121,11 @@ class FedConfig:
     # pre-scheduler behavior, bit-exact (same host_rng.choice draw).
     policy: str = "uniform"
     ema_beta: float = 0.9  # omega-EMA telemetry decay
+    # Wire codec for the simulated round traffic (candidate uplink +
+    # broadcast downlink deltas with error-feedback residuals; see
+    # ``repro.core.codec``). "none" = uncompressed fp32.
+    codec: str = "none"  # none | int8 | topk | int8_topk
+    topk_frac: float = 0.25  # entries kept per leaf by sparsifying codecs
 
 
 # ------------------------------------------------------------- evaluation --
@@ -282,6 +288,10 @@ class Federation:
     policy_obj: object = None  # schedule.Policy
     omega_ema: np.ndarray = None  # (C,) float64
     part_count: np.ndarray = None  # (C,) int64
+    # wire-codec error-feedback residuals (None when cfg.codec == "none"):
+    # stacked per-client uplink rows + one server-side downlink tree
+    resid_up: dict = None
+    resid_down: dict = None
 
     @property
     def models(self) -> list[dict]:
@@ -329,10 +339,12 @@ class Federation:
                          # the server head steps once per epoch (one
                          # full-batch VFL exchange), not once per minibatch
                          server_total_steps=cfg.rounds * cfg.local_epochs,
-                         staleness_exp=cfg.staleness_exp),
+                         staleness_exp=cfg.staleness_exp,
+                         codec=wire.make_codec(cfg.codec, cfg.topk_frac)),
             cfg.batch_size)
         # all clients start from the same global init (standard FL practice)
         stacked = engine.fns.broadcast(base, cfg.n_clients)
+        codec_on = cfg.codec != "none"
         return Federation(
             cfg=cfg, spec=spec, ecfg=ecfg, clients=clients, engine=engine,
             stacked=stacked, opt_state=engine.init_opt_state(stacked),
@@ -345,6 +357,9 @@ class Federation:
             policy_obj=policy_obj,
             omega_ema=np.zeros(cfg.n_clients),
             part_count=np.zeros(cfg.n_clients, np.int64),
+            resid_up=wire.zeros_like_tree(stacked) if codec_on else None,
+            resid_down=(wire.zeros_like_tree(
+                {k: base[k] for k in CLIENT_GROUPS}) if codec_on else None),
         )
 
     def _next_key(self):
@@ -408,12 +423,16 @@ class Federation:
         tot = w.sum()
         return new, (w / tot if tot > 0 else w)
 
-    def _aggregate(self, cand_stacked=None, idx=None) -> dict:
+    def _aggregate(self, cand_stacked=None, idx=None, base=None) -> dict:
         """Phase 4. Full participation: candidates are ``self.stacked``.
         Sampled round: ``cand_stacked`` holds the K trained client trees
         and ``idx`` the sampled client ids — only those clients compete in
         the blend (non-finished clients are masked out entirely), and in
-        async mode their omegas are staleness-damped."""
+        async mode their omegas are staleness-damped. With a wire codec
+        configured, ``base`` is the tree the participants started the
+        round from: candidates arrive as decoded uplink deltas (scoring
+        and blending see what the server would actually receive), and the
+        new global leaves as a decoded downlink delta."""
         cfg, val, fns = self.cfg, self.val, self.engine.fns
         ecfg, kind, metric = self.ecfg, self.spec.kind, self.cfg.metric
         x_a, x_b = self.data["val"]["x_a"], self.data["val"]["x_b"]
@@ -421,6 +440,17 @@ class Federation:
 
         if cand_stacked is None:
             cand_stacked = self.stacked
+        codec_on = self.resid_up is not None
+        if codec_on:
+            assert base is not None, "codec rounds must pass the uplink base"
+            prev_glob = {k: self.global_models[k] for k in CLIENT_GROUPS}
+            idxd = None if idx is None else jnp.asarray(idx, jnp.int32)
+            resid = (self.resid_up if idxd is None
+                     else sample_clients(self.resid_up, idxd))
+            cand_stacked, resid = self.engine.codec_uplink(cand_stacked, base,
+                                                           resid)
+            self.resid_up = (resid if idxd is None else
+                             dict(scatter_clients(self.resid_up, resid, idxd)))
         sub_clients = (self.clients if idx is None
                        else [self.clients[i] for i in idx])
         stale = None
@@ -474,6 +504,17 @@ class Federation:
                                            scores, gscore, ns, staleness=stale_m)
         info["omega_M"] = omega
         self.global_models["g_M"] = blended
+        # the server's split-training head re-seeds from the TRUE blend
+        # (it never crosses a wire), codec or not
+        gmv_true = blended
+
+        # wire codec, downlink leg: what the clients adopt is the blend
+        # as decoded from the broadcast delta vs. the global they held
+        if codec_on:
+            glob = {k: self.global_models[k] for k in CLIENT_GROUPS}
+            glob, self.resid_down = self.engine.codec_downlink(
+                glob, prev_glob, self.resid_down)
+            self.global_models.update(glob)
 
         # LocalUpdate: broadcast blended models back (line 32). Clients keep
         # their optimizer moments; only the weights are replaced. Async
@@ -487,7 +528,7 @@ class Federation:
         else:
             self.stacked = dict(fns.broadcast(glob_groups, cfg.n_clients))
             self.last_round[:] = self.round_no
-        self.server_gmv = jax.tree.map(jnp.asarray, self.global_models["g_M"])
+        self.server_gmv = jax.tree.map(jnp.asarray, gmv_true)
 
         # scheduler telemetry: fold this round's per-client omega (mean
         # over the heads that competed; omega_M's server slot excluded)
@@ -555,6 +596,7 @@ class Federation:
         idx = self.policy_obj.select(self.host_rng, self._sched_telemetry())
         idxd = jnp.asarray(idx, jnp.int32)
         sub = sample_clients(self.stacked, idxd)
+        base = sub  # codec uplink base: the weights each participant starts from
         sub_opt = sample_opt_state(self.opt_state, idxd)
         uni = sample_clients(self.data["uni"], idxd)
         paired = (sample_clients(self.data["paired"], idxd)
@@ -582,7 +624,7 @@ class Federation:
         # moments ride home with their clients; the trained weights only
         # matter as aggregation candidates (broadcast decides what sticks)
         self.opt_state = scatter_opt_state(self.opt_state, sub_opt, idxd)
-        logs.update(self._aggregate(cand_stacked=sub, idx=idx))
+        logs.update(self._aggregate(cand_stacked=sub, idx=idx, base=base))
         return logs
 
     # ---- round / fit ----
@@ -595,11 +637,12 @@ class Federation:
             self.round_no += 1
             return logs
         logs = {}
+        base = self.stacked  # codec uplink base (pre-round weights)
         for _ in range(self.cfg.local_epochs):
             logs["loss_partial"] = self._unimodal_phase()
             logs["loss_vfl"] = self._vfl_phase()
             logs["loss_paired"] = self._paired_phase()
-        logs.update(self._aggregate())
+        logs.update(self._aggregate(base=base))
         self.round_no += 1
         return logs
 

@@ -64,6 +64,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import codec as wire
 from repro.core import schedule
 from repro.core.encoders import EncoderConfig
 from repro.core.engine import (
@@ -124,6 +125,11 @@ class ShardedFedSpec:
     # sharded client axis (a Pallas custom call would force an all-gather
     # of every client model — see EngineConfig.blend).
     blend: str = "reduce"  # reduce | pallas
+    # Wire codec for the simulated round traffic (candidate uplink +
+    # broadcast downlink deltas, with error-feedback residuals in round
+    # state). "none" = uncompressed fp32; see ``repro.core.codec``.
+    codec: str = "none"  # none | int8 | topk | int8_topk
+    topk_frac: float = 0.25  # entries kept per leaf by sparsifying codecs
 
     @property
     def ecfg(self) -> EncoderConfig:
@@ -142,7 +148,8 @@ class ShardedFedSpec:
                             weight_decay=self.weight_decay,
                             schedule=self.schedule, total_steps=self.total_steps,
                             server_total_steps=self.server_total_steps,
-                            staleness_exp=self.staleness_exp, blend=self.blend)
+                            staleness_exp=self.staleness_exp, blend=self.blend,
+                            codec=wire.make_codec(self.codec, self.topk_frac))
 
 
 def init_stacked_models(key, spec: ShardedFedSpec):
@@ -177,7 +184,7 @@ def init_round_state(key, spec: ShardedFedSpec) -> dict:
     ``vfl_step``."""
     stacked, server_gmv, global_models = init_stacked_models(key, spec)
     fns = make_phase_fns(spec.engine_cfg)
-    return {
+    state = {
         "models": stacked,
         "server_gmv": server_gmv,
         "global_models": global_models,
@@ -187,6 +194,17 @@ def init_round_state(key, spec: ShardedFedSpec) -> dict:
         "round": jnp.zeros((), jnp.int32),
         "sched": schedule.sched_state(spec.n_clients),
     }
+    if spec.codec != "none":
+        # Error-feedback residuals are round state like everything else:
+        # per-client uplink rows (stacked, gathered/scattered with the
+        # sampled ids exactly like opt moments) + one server-side
+        # downlink tree. Codec "none" adds NO keys, so existing
+        # checkpoints and the uncompressed round are untouched.
+        state["codec"] = {
+            "resid_up": wire.zeros_like_tree(stacked),
+            "resid_down": wire.zeros_like_tree(global_models),
+        }
+    return state
 
 
 def make_blendfl_round(spec: ShardedFedSpec):
@@ -270,6 +288,14 @@ def make_blendfl_round(spec: ShardedFedSpec):
             models, opt_state = state["models"], state["opt"]
             staleness = None
         server_gmv, srv_state = state["server_gmv"], state["srv_opt"]
+        codec_on = spec.codec != "none"
+        if codec_on:
+            # uplink base: the weights each participant starts this
+            # round from (its delta is what crosses the wire), plus its
+            # error-feedback residual rows
+            base = models
+            resid_up = (sample_clients(state["codec"]["resid_up"], idx)
+                        if spec.n_sampled else state["codec"]["resid_up"])
 
         # phase 1: local unimodal training. Ragged federations (the
         # FederatedBatcher) ship real 0/1 row masks; the uniform synthetic
@@ -312,6 +338,12 @@ def make_blendfl_round(spec: ShardedFedSpec):
         loss_paired = (jnp.sum(i3["loss"] * wp)
                        / jnp.maximum(jnp.sum(wp), 1.0))
 
+        # wire codec, uplink leg: the trained weights become candidates
+        # only after the lossy client->server round-trip — aggregation
+        # scores and blends what the server would actually receive
+        if codec_on:
+            models, resid_up = fns.codec_uplink(models, base, resid_up)
+
         # phase 4: BlendAvg aggregation + broadcast. Full participation:
         # the broadcast is free under SPMD (the reduction leaves the blend
         # resident on every slice). Sampled: participants-only scatter —
@@ -319,6 +351,13 @@ def make_blendfl_round(spec: ShardedFedSpec):
         # mattered as candidates, while opt moments ride home per client.
         new_global, infos = aggregate(models, server_gmv, global_models=state[
             "global_models"], batch=batch, staleness=staleness)
+        # wire codec, downlink leg: clients adopt the blend as decoded
+        # from the broadcast delta. The server's own g_M^v head never
+        # crosses a wire — it re-seeds from the TRUE blend below.
+        srv_gmv_true = new_global["g_M"]
+        if codec_on:
+            new_global, resid_down = fns.codec_downlink(
+                new_global, state["global_models"], state["codec"]["resid_down"])
         bcast = dict(fns.broadcast(
             {k: new_global[k] for k in CLIENT_GROUPS}, K))
         if spec.n_sampled:
@@ -328,7 +367,7 @@ def make_blendfl_round(spec: ShardedFedSpec):
         else:
             models = bcast
             last_round = jnp.full_like(state["last_round"], state["round"])
-        server_gmv = new_global["g_M"]
+        server_gmv = srv_gmv_true
 
         # participation telemetry for the host-side scheduler: this
         # round's per-client omega (mean over the three heads' Eq. 10
@@ -347,10 +386,18 @@ def make_blendfl_round(spec: ShardedFedSpec):
             "last_round": last_round,
         }
 
-        state = {"models": models, "server_gmv": server_gmv,
-                 "global_models": new_global, "opt": opt_state,
-                 "srv_opt": srv_state, "last_round": last_round,
-                 "round": state["round"] + 1, "sched": new_sched}
+        new_state = {"models": models, "server_gmv": server_gmv,
+                     "global_models": new_global, "opt": opt_state,
+                     "srv_opt": srv_state, "last_round": last_round,
+                     "round": state["round"] + 1, "sched": new_sched}
+        if codec_on:
+            new_state["codec"] = {
+                "resid_up": (scatter_clients(state["codec"]["resid_up"],
+                                             resid_up, idx)
+                             if spec.n_sampled else resid_up),
+                "resid_down": resid_down,
+            }
+        state = new_state
         metrics = dict(loss_uni=loss_uni, loss_vfl=loss_vfl,
                        loss_paired=loss_paired, **infos)
         return state, metrics

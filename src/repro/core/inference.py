@@ -20,6 +20,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import codec as wire
 from repro.core.encoders import EncoderConfig, encoder_apply, fusion_apply, task_scores
 from repro.models.common import dense
 
@@ -56,16 +57,28 @@ def vfl_server_inference(client_models: dict, server_gmv: dict, req: InferenceRe
     return task_scores(fusion_apply(server_gmv, h_a, h_b), kind), 3  # 2 up + 1 down
 
 
-def communication_cost(batch: int, d_hidden: int, mode: str, out_dim: int) -> dict:
-    """Bytes over the network per inference batch (fp32 payloads).
+def communication_cost(batch: int, d_hidden: int, mode: str, out_dim: int,
+                       *, dtype_bytes: int = 4, codec=None) -> dict:
+    """Bytes over the network per inference batch.
 
     decentralized: 0 — the blended models are local.
-    vfl: two feature uploads (batch * d_hidden floats each) + one score
-    download (batch * out_dim floats) per batch — all 3 messages the
+    vfl: two feature uploads (batch * d_hidden values each) + one score
+    download (batch * out_dim values) per batch — all 3 messages the
     ``vfl_server_inference`` exchange reports are counted.
+
+    ``dtype_bytes`` sizes a dense payload value (4 = fp32 default, 2 =
+    bf16 activations); ``codec`` (a ``repro.core.codec.CodecConfig`` or
+    codec name) prices each message through the wire codec's format
+    instead, so codec savings show up in the decentralized-inference gap
+    quantity, not just in training rounds.
     """
     if mode == "decentralized":
         return {"messages": 0, "bytes": 0}
-    feat_bytes = 2 * batch * d_hidden * 4
-    score_bytes = batch * out_dim * 4
+    if isinstance(codec, str):
+        codec = wire.make_codec(codec)
+    if codec is None:
+        codec = wire.CodecConfig()  # "none": dense dtype_bytes payloads
+    feat_bytes = 2 * wire.leaf_payload_bytes(batch * d_hidden, codec,
+                                             dtype_bytes)
+    score_bytes = wire.leaf_payload_bytes(batch * out_dim, codec, dtype_bytes)
     return {"messages": 3, "bytes": feat_bytes + score_bytes}

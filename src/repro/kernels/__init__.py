@@ -8,8 +8,28 @@ On the CPU backend (this container) kernels execute with interpret=True
 (the kernel body runs in Python), which is how correctness is validated;
 on TPU the same pallas_call lowers through Mosaic.
 """
-from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.blendavg.ops import blend_params
-from repro.kernels.mlstm_scan.ops import mlstm_scan
+import functools
 
-__all__ = ["flash_attention", "blend_params", "mlstm_scan"]
+import jax
+
+
+@functools.cache
+def on_tpu() -> bool:
+    """Shared backend probe for the jit'd kernel wrappers.
+
+    The backend cannot change within a process, so the probe is cached:
+    wrappers decide ``interpret=not on_tpu()`` once instead of calling
+    ``jax.default_backend()`` (which walks the backend registry) on
+    every trace. Defined above the subpackage imports so that ops
+    modules can ``from repro.kernels import on_tpu`` without a cycle.
+    """
+    return jax.default_backend() == "tpu"
+
+
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: E402
+from repro.kernels.blendavg.ops import blend_params  # noqa: E402
+from repro.kernels.mlstm_scan.ops import mlstm_scan  # noqa: E402
+from repro.kernels.wire_codec.ops import wire_codec_roundtrip  # noqa: E402
+
+__all__ = ["on_tpu", "flash_attention", "blend_params", "mlstm_scan",
+           "wire_codec_roundtrip"]

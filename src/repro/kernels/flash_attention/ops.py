@@ -10,11 +10,8 @@ import functools
 
 import jax
 
+from repro.kernels import on_tpu
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
@@ -22,4 +19,4 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128):
     return flash_attention_pallas(
         q, k, v, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, interpret=not _on_tpu())
+        block_q=block_q, block_k=block_k, interpret=not on_tpu())

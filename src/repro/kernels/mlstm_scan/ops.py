@@ -5,14 +5,11 @@ import functools
 
 import jax
 
+from repro.kernels import on_tpu
 from repro.kernels.mlstm_scan.mlstm_scan import mlstm_scan_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "normalize"))
 def mlstm_scan(q, k, v, log_f, *, chunk: int = 128, normalize: bool = True):
     return mlstm_scan_pallas(q, k, v, log_f, chunk=chunk, normalize=normalize,
-                             interpret=not _on_tpu())
+                             interpret=not on_tpu())

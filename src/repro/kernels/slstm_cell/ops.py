@@ -5,13 +5,10 @@ import functools
 
 import jax
 
+from repro.kernels import on_tpu
 from repro.kernels.slstm_cell.slstm_cell import slstm_cell_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def slstm_cell(pre_x, r, *, chunk: int = 256):
-    return slstm_cell_pallas(pre_x, r, chunk=chunk, interpret=not _on_tpu())
+    return slstm_cell_pallas(pre_x, r, chunk=chunk, interpret=not on_tpu())

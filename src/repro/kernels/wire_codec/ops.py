@@ -1,0 +1,49 @@
+"""Public jit'd wrapper: lossy wire round-trip of a batch of messages.
+
+``wire_codec_roundtrip`` is the encode+decode hot path used by
+``repro.core.codec``: one batched ``lax.top_k`` over |x| yields, per
+row, both the symmetric int8 scale (vals[:, 0] = abs-max) and the
+magnitude top-k threshold (vals[:, k-1]); the fused Pallas kernel then
+streams each row once, applying sparsify + quantize + dequantize.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.wire_codec.wire_codec import wire_codec_pallas
+
+# guards all-zero rows: q = x * 127/eps is still exactly 0 for x == 0
+_EPS = 1e-30
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "quantize", "block_n", "interpret"))
+def _roundtrip(x, k, quantize, block_n, interpret):
+    ax = jnp.abs(x.astype(jnp.float32))
+    n = x.shape[1]
+    if k is not None and k < n:
+        vals = jax.lax.top_k(ax, k)[0]  # (L, k) descending magnitudes
+        amax, thresh = vals[:, 0], vals[:, -1]
+    else:  # dense: keep everything (thresh 0 keeps exact zeros too)
+        amax = jnp.max(ax, axis=1)
+        thresh = jnp.zeros_like(amax)
+    scale = jnp.maximum(amax, _EPS)
+    st = jnp.stack([scale, thresh], axis=1)
+    return wire_codec_pallas(x, st, quantize=quantize, block_n=block_n,
+                             interpret=interpret)
+
+
+def wire_codec_roundtrip(x, *, k: int | None = None, quantize: bool = False,
+                         block_n: int = 2048):
+    """x (L, N) float rows -> (L, N) decoded reconstruction.
+
+    k: keep the k largest-|x| entries per row (None = dense); ties at
+    the threshold magnitude are all kept. quantize: round-trip kept
+    entries through per-row symmetric int8. k >= N with quantize=False
+    is exactly the identity.
+    """
+    return _roundtrip(x, k, quantize, block_n, not on_tpu())

@@ -50,6 +50,7 @@ from repro.core.federation_sharded import (
     init_round_state,
     make_blendfl_round,
 )
+from repro.core.codec import CODECS, make_codec, round_bytes
 from repro.core.partitioner import ClientData, partition
 from repro.core.schedule import POLICIES, telemetry_from_state
 from repro.data.pipeline import FederatedBatcher
@@ -120,7 +121,9 @@ def build_federation(args) -> tuple:
             kind=m["kind"], n_partial=n_partial, n_frag=n_partial,
             n_paired=n_partial, n_val=m["n_val"], lr=args.lr,
             optimizer=args.optimizer, n_sampled=args.n_sampled,
-            policy=getattr(args, "policy", "uniform"))
+            policy=getattr(args, "policy", "uniform"),
+            codec=getattr(args, "codec", "none"),
+            topk_frac=getattr(args, "topk_frac", 0.25))
     else:
         task = make_task(args.task)
         tr, va, _ = train_val_test(task, args.n_train, args.n_val, 64,
@@ -133,7 +136,9 @@ def build_federation(args) -> tuple:
             feat_b=task.feat_b, out_dim=task.out_dim, kind=task.kind,
             n_partial=n_partial, n_frag=n_partial, n_paired=n_partial,
             n_val=args.n_val, lr=args.lr, optimizer=args.optimizer,
-            n_sampled=args.n_sampled, policy=getattr(args, "policy", "uniform"))
+            n_sampled=args.n_sampled, policy=getattr(args, "policy", "uniform"),
+            codec=getattr(args, "codec", "none"),
+            topk_frac=getattr(args, "topk_frac", 0.25))
     mesh = make_host_mesh()
     shard = sh.batch_shardings(mesh, batch_specs(spec, ragged=True))
     if store is not None:
@@ -295,6 +300,13 @@ def main() -> None:
                     help="participation policy for K-of-C sampled rounds "
                          "(repro.core.schedule); uniform = bit-exact "
                          "pre-scheduler sampling")
+    ap.add_argument("--codec", default="none", choices=CODECS,
+                    help="wire codec for the simulated round traffic "
+                         "(repro.core.codec): candidate uplink + broadcast "
+                         "downlink deltas with error-feedback residuals")
+    ap.add_argument("--topk-frac", type=float, default=0.25,
+                    help="fraction of entries per leaf kept by the "
+                         "sparsifying codecs (topk / int8_topk)")
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--n-train", type=int, default=2048)
     ap.add_argument("--n-val", type=int, default=256)
@@ -323,6 +335,13 @@ def main() -> None:
         return
     spec, batcher, round_fn, mesh = build_federation(args)
     start, state = init_or_restore(args, spec, mesh, _fingerprint(batcher))
+    if spec.codec != "none":
+        rb = round_bytes(state["global_models"],
+                         make_codec(spec.codec, spec.topk_frac),
+                         n_up=spec.k_round, n_down=spec.k_round)
+        print(f"codec {spec.codec} (topk_frac={spec.topk_frac}): "
+              f"{rb['bytes_per_round']:,} bytes/round, "
+              f"{rb['compression_ratio']:.1f}x vs dense fp32")
     run(args, spec, batcher, round_fn, start, state)
     print(f"done ({args.rounds - start} rounds; host batch-build "
           f"{batcher.build_seconds:.2f}s over {batcher.rounds_built} builds).")

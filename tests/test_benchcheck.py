@@ -4,8 +4,9 @@ Runs the checker as a subprocess against scratch results directories
 (the same way the Makefile invokes it), covering: empty-dir pass,
 conforming records pass, and one failure per schema rule — unparseable
 JSON, missing envelope keys, record/records ambiguity, non-finite
-numbers (incl. the non-RFC ``NaN`` literal ``json.dump`` emits), and
-compile-cache counts < 1.
+numbers (incl. the non-RFC ``NaN`` literal ``json.dump`` emits),
+compile-cache counts < 1, and wire-codec compression fields (ratio < 1,
+zero byte counts; null ``bytes_to_target`` stays valid).
 """
 import json
 import os
@@ -67,6 +68,31 @@ def test_violations_fail_with_paths(tmp_path):
     assert "need exactly one of" in out
     assert "non-finite number" in out
     assert "cache count must be an int >= 1" in out
+
+
+def test_compression_fields_validated(tmp_path):
+    _write(tmp_path, "BENCH_ratio.json",
+           {"bench": "comm", "backend": "cpu",
+            "records": [{"codec": "int8_topk", "compression_ratio": 0.8}]})
+    _write(tmp_path, "BENCH_bytes.json",
+           {"bench": "comm", "backend": "cpu",
+            "record": {"bytes_per_round": 0}})
+    r = _run(tmp_path)
+    assert r.returncode == 1
+    assert "compression ratio must be a number >= 1" in r.stdout
+    assert "byte count must be a number > 0" in r.stdout
+
+
+def test_null_bytes_to_target_is_valid(tmp_path):
+    """`bytes_to_target: null` means the run never hit the target AUROC —
+    a legitimate measurement, not a schema violation."""
+    _write(tmp_path, "BENCH_comm.json",
+           {"bench": "comm_codec", "backend": "cpu",
+            "records": [{"codec": "topk", "compression_ratio": 2.7,
+                         "bytes_per_round": 96816, "bytes_to_target": None,
+                         "compile_cache": 1}]})
+    r = _run(tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
 
 
 def test_repo_results_dir_conforms():

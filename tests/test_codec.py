@@ -1,0 +1,306 @@
+"""Wire codec (repro.core.codec): round-trip error bounds, identity
+cases, error-feedback accumulation vs a numpy reference, analytic byte
+accounting, and codec-enabled federation rounds (both drivers) incl.
+resume parity."""
+import argparse
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codec as wire
+from repro.core.codec import (
+    CODECS,
+    CodecConfig,
+    encode_decode_stacked,
+    leaf_payload_bytes,
+    make_codec,
+    round_bytes,
+    topk_k,
+    uplink_roundtrip,
+    zeros_like_tree,
+)
+
+
+def _tree(key, l=3):
+    ks = jax.random.split(key, 3)
+    return {"w": jax.random.normal(ks[0], (l, 16, 8)),
+            "b": jax.random.normal(ks[1], (l, 8)) * 0.1,
+            "v": jax.random.normal(ks[2], (l, 333))}
+
+
+# ------------------------------------------------------------ round-trips --
+
+def test_codec_names_validated():
+    assert set(CODECS) == {"none", "int8", "topk", "int8_topk"}
+    with pytest.raises(ValueError):
+        CodecConfig(name="fp8")
+    with pytest.raises(ValueError):
+        CodecConfig(name="topk", topk_frac=0.0)
+
+
+def test_none_codec_is_identity_object():
+    t = _tree(jax.random.PRNGKey(0))
+    assert encode_decode_stacked(t, CodecConfig()) is t
+
+
+def test_int8_roundtrip_error_bound():
+    """Symmetric int8: |dec - x| <= scale/254 per element (nearest
+    rounding over a 127-level grid, scale = per-(row, leaf) abs-max)."""
+    t = _tree(jax.random.PRNGKey(1))
+    dec = encode_decode_stacked(t, make_codec("int8"))
+    for k in t:
+        x = np.asarray(t[k]).reshape(t[k].shape[0], -1)
+        d = np.asarray(dec[k]).reshape(x.shape)
+        scale = np.abs(x).max(axis=1, keepdims=True)
+        assert (np.abs(d - x) <= scale / 254 + 1e-7).all()
+
+
+def test_topk_full_frac_bitexact_with_none():
+    """topk at frac=1.0 is the identity codec — bit-exact with none."""
+    t = _tree(jax.random.PRNGKey(2))
+    dec = encode_decode_stacked(t, make_codec("topk", topk_frac=1.0))
+    for k in t:
+        np.testing.assert_array_equal(np.asarray(dec[k]), np.asarray(t[k]))
+
+
+def test_topk_keeps_largest_magnitudes():
+    x = {"w": jnp.asarray(np.random.default_rng(0)
+                          .permutation(np.arange(1.0, 101.0))
+                          .reshape(1, 100))}
+    dec = encode_decode_stacked(x, make_codec("topk", topk_frac=0.25))
+    got = np.asarray(dec["w"])[0]
+    keep = got != 0
+    assert keep.sum() == 25
+    assert set(np.asarray(x["w"])[0][keep]) == set(range(76, 101))
+    np.testing.assert_array_equal(got[keep], np.asarray(x["w"])[0][keep])
+
+
+def _np_int8_topk(x, frac):
+    """Numpy oracle of one int8_topk message round-trip (per row)."""
+    out = np.zeros_like(x)
+    for i, row in enumerate(x):
+        k = max(1, math.ceil(frac * row.size))
+        mags = np.sort(np.abs(row))[::-1]
+        thresh, scale = mags[k - 1], max(mags[0], 1e-30)
+        q = np.clip(np.round(row * (127.0 / scale)), -127, 127)
+        deq = q * (scale / 127.0)
+        out[i] = np.where(np.abs(row) >= thresh, deq, 0.0)
+    return out
+
+
+def test_error_feedback_matches_numpy_reference():
+    """Drive uplink_roundtrip for several rounds against a numpy EF loop
+    and check the telescoping identity sum(dec) = sum(delta) - resid_T."""
+    cfg = make_codec("int8_topk", topk_frac=0.25)
+    rng = np.random.default_rng(3)
+    base_np = rng.normal(size=(2, 40)).astype(np.float32)
+    base = {"w": jnp.asarray(base_np)}
+    resid = zeros_like_tree(base)
+    resid_np = np.zeros_like(base_np)
+    cur_np = base_np.copy()
+    sum_delta = np.zeros_like(base_np)
+    sum_dec = np.zeros_like(base_np)
+
+    for step in range(4):
+        delta = rng.normal(scale=0.1, size=base_np.shape).astype(np.float32)
+        trained = {"w": jnp.asarray(cur_np + delta)}
+        cand, resid = uplink_roundtrip(trained, {"w": jnp.asarray(cur_np)},
+                                       resid, cfg)
+        # numpy reference: c = delta + resid; dec = codec(c); resid' = c - dec
+        delta_np = np.asarray(trained["w"]) - cur_np
+        c = delta_np + resid_np
+        dec = _np_int8_topk(c, 0.25)
+        resid_np = c - dec
+        np.testing.assert_allclose(np.asarray(resid["w"]), resid_np,
+                                   atol=1e-6, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(cand["w"]), cur_np + dec,
+                                   atol=1e-6, rtol=1e-5)
+        sum_delta += delta_np
+        sum_dec += dec
+        cur_np = cur_np + dec  # receiver view advances by the decoded delta
+
+    np.testing.assert_allclose(sum_dec + resid_np, sum_delta,
+                               atol=1e-6, rtol=1e-5)
+    # lossy codec on noise: the residual must actually be carrying error
+    assert np.abs(resid_np).max() > 0
+
+
+def test_error_feedback_off_keeps_residual():
+    cfg = CodecConfig(name="int8", error_feedback=False)
+    base = {"w": jnp.zeros((1, 8))}
+    resid = zeros_like_tree(base)
+    trained = {"w": jnp.full((1, 8), 0.3)}
+    _, new_resid = uplink_roundtrip(trained, base, resid, cfg)
+    assert new_resid is resid  # untouched, not accumulated
+
+
+# --------------------------------------------------------- byte accounting --
+
+def test_leaf_payload_bytes():
+    n = 1000
+    assert leaf_payload_bytes(n, CodecConfig()) == 4 * n
+    assert leaf_payload_bytes(n, make_codec("int8")) == n + 4
+    k = topk_k(n, 0.25)
+    assert leaf_payload_bytes(n, make_codec("topk")) == k * (4 + 2)
+    assert leaf_payload_bytes(n, make_codec("int8_topk")) == 4 + k * (1 + 2)
+    # wide leaves need 4-byte indices
+    wide = 70000
+    kw = topk_k(wide, 0.25)
+    assert leaf_payload_bytes(wide, make_codec("topk")) == kw * (4 + 4)
+
+
+def test_round_bytes_ratio_meets_target():
+    """int8_topk at the default frac must price >= 3.5x below dense —
+    the bench acceptance is analytic, so the unit test can assert it."""
+    t = {"w": jnp.zeros((64, 64)), "b": jnp.zeros((64,))}
+    rb = round_bytes(t, make_codec("int8_topk", topk_frac=0.25),
+                     n_up=4, n_down=4)
+    assert rb["compression_ratio"] >= 3.5
+    assert rb["bytes_per_round"] == 8 * rb["bytes_per_message"]
+    assert rb["dense_bytes_per_round"] == 8 * (64 * 64 + 64) * 4
+
+
+def test_communication_cost_codec_aware():
+    from repro.core.inference import communication_cost
+
+    dec = communication_cost(8, 64, "decentralized", 25)
+    assert dec == {"messages": 0, "bytes": 0}
+    dense = communication_cost(8, 64, "vfl", 25)
+    assert dense["bytes"] == (2 * 8 * 64 + 8 * 25) * 4  # fp32 default
+    bf16 = communication_cost(8, 64, "vfl", 25, dtype_bytes=2)
+    assert bf16["bytes"] == dense["bytes"] // 2
+    i8 = communication_cost(8, 64, "vfl", 25, codec="int8")
+    assert i8["bytes"] == (2 * 8 * 64 + 8 * 25) + 3 * 4  # values + 3 scales
+    assert i8["messages"] == 3
+
+
+# ------------------------------------------------- federation integration --
+
+def _sharded_batch(spec, rng):
+    from repro.core.federation_sharded import batch_specs
+
+    batch = {}
+    for k, sd in batch_specs(spec).items():
+        if k == "perm_b":
+            batch[k] = jnp.asarray(
+                rng.permutation(spec.k_round * spec.n_frag).astype(np.int32))
+        elif k == "sampled":
+            batch[k] = jnp.asarray(rng.choice(
+                spec.n_clients, spec.n_sampled, replace=False).astype(np.int32))
+        elif k.endswith("_y") or k.startswith("partial_y") or k == "val_y":
+            batch[k] = jnp.asarray((rng.random(sd.shape) < 0.3).astype(np.float32))
+        else:
+            batch[k] = jnp.asarray(rng.normal(0, 1, sd.shape).astype(np.float32))
+    return batch
+
+
+def _tiny_spec(**kw):
+    from repro.core.federation_sharded import ShardedFedSpec
+
+    base = dict(n_clients=4, d_hidden=16, n_layers=1, seq_a=4, feat_a=3,
+                seq_b=4, feat_b=3, out_dim=2, n_partial=8, n_frag=8,
+                n_paired=8, n_val=16, lr=5e-2)
+    base.update(kw)
+    return ShardedFedSpec(**base)
+
+
+@pytest.mark.slow
+def test_sharded_codec_round_state_and_cache():
+    """Codec rounds thread residual state, keep the one-compile-per-
+    round invariant, and accumulate a nonzero uplink residual; codec
+    "none" adds no state keys (checkpoint layout unchanged)."""
+    from repro.core.federation_sharded import (
+        init_round_state, make_blendfl_round)
+
+    assert "codec" not in init_round_state(jax.random.PRNGKey(0), _tiny_spec())
+
+    spec = _tiny_spec(codec="int8_topk", n_sampled=2)
+    state = init_round_state(jax.random.PRNGKey(0), spec)
+    assert set(state["codec"]) == {"resid_up", "resid_down"}
+    for leaf in jax.tree.leaves(state["codec"]["resid_up"]):
+        assert leaf.shape[0] == spec.n_clients
+    rf = jax.jit(make_blendfl_round(spec))
+    rng = np.random.default_rng(0)
+    for _ in range(2):
+        state, m = rf(state, _sharded_batch(spec, rng))
+    assert rf._cache_size() == 1
+    for k in ("loss_uni", "loss_vfl", "loss_paired"):
+        assert np.isfinite(float(m[k]))
+    rmax = max(float(jnp.abs(l).max())
+               for l in jax.tree.leaves(state["codec"]["resid_up"]))
+    assert rmax > 0
+
+
+@pytest.mark.slow
+def test_sharded_identity_codec_bitexact_with_none():
+    """topk at frac=1.0 must leave the whole round bit-identical to the
+    uncompressed round — the codec stage adds no float noise of its own."""
+    from repro.core.federation_sharded import (
+        init_round_state, make_blendfl_round)
+
+    outs = []
+    for codec in ("none", "topk"):
+        spec = _tiny_spec(codec=codec, topk_frac=1.0)
+        state = init_round_state(jax.random.PRNGKey(0), spec)
+        rf = jax.jit(make_blendfl_round(spec))
+        rng = np.random.default_rng(1)
+        for _ in range(2):
+            state, _ = rf(state, _sharded_batch(spec, rng))
+        outs.append(state)
+    for key in ("models", "global_models", "server_gmv", "opt"):
+        for a, b in zip(jax.tree.leaves(outs[0][key]),
+                        jax.tree.leaves(outs[1][key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # identity codec: residuals stay exactly zero
+    for leaf in jax.tree.leaves(outs[1]["codec"]):
+        assert not np.asarray(leaf).any()
+
+
+@pytest.mark.slow
+def test_inhost_codec_round_runs():
+    """In-host driver: codec rounds run (full + sampled/async), losses
+    finite, residuals accumulate."""
+    from repro.core.encoders import EncoderConfig
+    from repro.core.federation import FedConfig, Federation
+    from repro.core.partitioner import partition
+    from repro.data.synthetic import make_task, train_val_test
+
+    spec = make_task("smnist")
+    tr, va, _ = train_val_test(spec, 200, 100, 100, seed=0)
+    ecfg = EncoderConfig(d_hidden=16, n_layers=1, enc_type="mlp")
+
+    cfg = FedConfig(n_clients=3, rounds=2, lr=1e-2, batch_size=64, seed=0,
+                    codec="int8_topk", topk_frac=0.25)
+    fed = Federation.init(jax.random.PRNGKey(0), cfg, spec, ecfg,
+                          partition(tr, 3, seed=1), va)
+    for _ in range(2):
+        logs = fed.round()
+    assert np.isfinite(logs["loss_partial"])
+    rmax = max(float(abs(np.asarray(l)).max())
+               for l in jax.tree.leaves(fed.resid_up))
+    assert rmax > 0
+
+    cfg = FedConfig(n_clients=4, rounds=2, lr=1e-2, batch_size=64, seed=0,
+                    n_sampled=2, async_mode=True, codec="int8")
+    fed = Federation.init(jax.random.PRNGKey(0), cfg, spec, ecfg,
+                          partition(tr, 4, seed=1), va)
+    for _ in range(2):
+        logs = fed.round()
+    assert len(logs["sampled"]) == 2
+
+
+@pytest.mark.slow
+def test_resume_parity_codec(tmp_path):
+    """Killed-and-resumed codec runs stay bit-identical: the residual
+    trees checkpoint/restore through the full-round-state path."""
+    from repro.launch.train_federated import selftest_resume
+
+    selftest_resume(argparse.Namespace(
+        task="smnist", clients=6, n_sampled=3, rounds=4, n_train=384,
+        n_val=64, rows_cap=16, d_hidden=16, n_layers=1, lr=1e-2,
+        optimizer="adamw", dirichlet_alpha=None, seed=0, data_seed=0,
+        prefetch=1, ckpt_dir=None, ckpt_every=2, log_every=0,
+        codec="int8_topk", topk_frac=0.25))

@@ -156,3 +156,56 @@ def test_slstm_cell_matches_model_cell():
     got = got.transpose(0, 2, 1, 3).reshape(2, 12, d)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=1e-5, rtol=1e-4)
+
+
+# -------------------------------------------------------------- wire codec ----
+
+def _codec_inputs(key, l, n, frac=None):
+    from repro.kernels.wire_codec.ops import _EPS
+
+    x = jax.random.normal(key, (l, n)) * jax.random.uniform(
+        jax.random.split(key)[0], (l, 1), minval=0.1, maxval=10.0)
+    mags = jnp.sort(jnp.abs(x), axis=1)[:, ::-1]
+    scale = jnp.maximum(mags[:, :1], _EPS)
+    if frac is None:
+        thresh = jnp.zeros_like(scale)
+    else:
+        k = max(1, int(np.ceil(frac * n)))
+        thresh = mags[:, k - 1:k]
+    return x, jnp.concatenate([scale, thresh], axis=1)
+
+
+@pytest.mark.parametrize("l,n,block,quantize,frac", [
+    (1, 64, 64, False, 0.25),
+    (3, 333, 128, True, 0.25),    # ragged N (padding path)
+    (5, 2048, 512, True, None),   # dense int8 (thresh=0)
+    (2, 100, 256, False, 0.01),   # k=1 extreme sparsity
+    (4, 512, 128, True, 1.0),     # keep-all + quantize
+])
+def test_wire_codec_vs_ref(l, n, block, quantize, frac):
+    from repro.kernels.wire_codec.ref import wire_codec_ref
+    from repro.kernels.wire_codec.wire_codec import wire_codec_pallas
+
+    x, st = _codec_inputs(jax.random.PRNGKey(7), l, n, frac)
+    out = wire_codec_pallas(x, st, quantize=quantize, block_n=block,
+                            interpret=True)
+    ref = wire_codec_ref(x, st, quantize=quantize)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_wire_codec_roundtrip_bounds():
+    """The public roundtrip keeps exactly k entries per row and its
+    quantization error is bounded by scale/254."""
+    from repro.kernels.wire_codec.ops import wire_codec_roundtrip
+
+    x, _ = _codec_inputs(jax.random.PRNGKey(8), 4, 400)
+    dec = np.asarray(wire_codec_roundtrip(x, k=100, quantize=True))
+    xn = np.asarray(x)
+    assert ((dec != 0).sum(axis=1) <= 100).all()
+    keep = dec != 0
+    scale = np.abs(xn).max(axis=1, keepdims=True)
+    assert (np.abs(dec - xn)[keep] <= (scale / 254 + 1e-7).repeat(
+        400, axis=1)[keep]).all()
+    # dense float path (k=None, quantize=False) is exact identity
+    ident = wire_codec_roundtrip(x)
+    np.testing.assert_array_equal(np.asarray(ident), xn)

@@ -15,7 +15,13 @@ schema documented in ``docs/benchmarks.md``:
   measurement is a broken measurement, and ``json.dump`` happily emits
   non-RFC ``NaN`` literals that would poison cross-PR comparisons;
 - ``compile_cache`` / ``caches`` values (the retrace regression signal)
-  are integers >= 1.
+  are integers >= 1;
+- compression fields (the wire-codec regression signal, wherever they
+  appear — ``BENCH_comm.json`` today): ``compression_ratio`` is a
+  number >= 1 (a "compressed" payload larger than dense means the byte
+  accounting broke) and ``bytes_per_round`` / ``bytes_to_target`` /
+  ``bytes_per_message`` are numbers > 0 (zero wire bytes means the
+  accounting saw an empty model tree).
 
 ``benchmarks/results/`` is gitignored, so a fresh checkout has nothing
 to validate — that's a pass (the checker guards whatever records the
@@ -38,6 +44,10 @@ DEFAULT_DIR = os.path.join(os.path.dirname(os.path.dirname(
 
 _BENCH_ID = re.compile(r"^[a-z][a-z0-9_]*$")
 _CACHE_KEYS = ("compile_cache", "caches")
+# wire-codec accounting fields: ratio >= 1, byte counts > 0 (None is
+# allowed for *_to_target fields — "never reached" is a valid outcome)
+_RATIO_KEYS = ("compression_ratio",)
+_BYTES_KEYS = ("bytes_per_round", "bytes_to_target", "bytes_per_message")
 
 
 def _walk_numbers(node, path, errors):
@@ -57,6 +67,10 @@ def _walk_numbers(node, path, errors):
             _walk_numbers(v, f"{path}[{i}]", errors)
 
 
+def _is_number(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
 def _check_caches(node, path, errors):
     if isinstance(node, dict):
         for k, v in node.items():
@@ -67,6 +81,14 @@ def _check_caches(node, path, errors):
                     if isinstance(c, bool) or not isinstance(c, int) or c < 1:
                         errors.append(
                             f"{p}: cache count must be an int >= 1, got {c!r}")
+            elif k in _RATIO_KEYS:
+                if not (_is_number(v) and v >= 1):
+                    errors.append(f"{p}: compression ratio must be a number "
+                                  f">= 1, got {v!r}")
+            elif k in _BYTES_KEYS:
+                if v is not None and not (_is_number(v) and v > 0):
+                    errors.append(f"{p}: byte count must be a number > 0 "
+                                  f"(or null), got {v!r}")
             else:
                 _check_caches(v, p, errors)
     elif isinstance(node, list):
