@@ -8,7 +8,7 @@ TEST_FAST_BUDGET_S ?= 240
 
 .PHONY: test test-fast docs-check bench-check ci ci-test ci-smoke \
 	bench-sampled bench-loader bench-store bench-participation \
-	bench-comm train-federated
+	bench-comm bench-agg train-federated
 
 test: docs-check
 	$(PYTEST)
@@ -47,15 +47,20 @@ ci-test: docs-check bench-check
 # Lane 2: the kill-and-resume smoke — full participation (the
 # train-federated lane below) plus a K-of-C sampled run under the
 # state-reading omega_ema participation policy, plus a codec-enabled
-# sampled run (int8_topk with error feedback), so CI exercises both the
-# scheduler's and the wire codec's checkpoint/resume contracts end to
-# end (the codec's residual trees must restore bit-exactly).
+# sampled run (int8_topk with error feedback), plus a SCAFFOLD run
+# (stacked per-client control variates), so CI exercises the
+# scheduler's, the wire codec's, and the aggregation strategies'
+# checkpoint/resume contracts end to end (residual trees and control
+# variates must restore bit-exactly).
 ci-smoke: train-federated
 	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
 		--rounds 4 --clients 6 --n-sampled 3 --policy omega_ema \
 		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
 	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
 		--rounds 4 --clients 6 --n-sampled 3 --codec int8_topk \
+		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
+	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
+		--rounds 4 --clients 6 --n-sampled 3 --strategy scaffold \
 		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
 
 bench-sampled:
@@ -78,6 +83,13 @@ bench-participation:
 # one compiled round per codec. Emits BENCH_comm.json.
 bench-comm:
 	PYTHONPATH=src python -m benchmarks.comm_bench
+
+# Aggregation strategies (blendavg/fedavg/scaffold/fedprox/fedavg+adam)
+# on the straggler cohort + a high-skew Dirichlet cohort (alpha=0.1):
+# rounds-to-target-AUROC per strategy, one compiled round each. Emits
+# BENCH_aggregation.json.
+bench-agg:
+	PYTHONPATH=src python -m benchmarks.aggregation_bench
 
 # Smoke lane: tiny ragged federation, 2 rounds, checkpoint at round 1,
 # kill-and-resume, assert bit-exact round-metric parity.

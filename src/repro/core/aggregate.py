@@ -1,0 +1,291 @@
+"""Aggregation strategies — the pluggable drift-robust family.
+
+BlendAvg (paper §III-B, Eq. 9-11) is one point in a design space the
+non-IID FL literature has mapped thoroughly: under client drift the
+standard remedies are control variates (SCAFFOLD), proximal client
+objectives (FedProx), and server-side adaptive optimizers (FedAdam /
+FedAvgM). This module factors that family into one strategy interface
+over the **stacked client pytrees** the round engine already speaks:
+
+    init_state      strategy state pytrees, threaded through round state
+                    exactly like opt moments ("" = stateless: blendavg /
+                    fedavg / fedprox add NO state keys, so default runs
+                    keep the pre-strategy checkpoint layout bit-for-bit)
+    client_term     additive per-step gradient correction applied inside
+                    the engine's phase functions: the FedProx proximal
+                    pull  mu * (w - anchor)  and/or the SCAFFOLD
+                    control-variate correction  c_global - c_local
+    scaffold_round  post-round control-variate update (SCAFFOLD Option
+                    II): participants' c_local rows move by
+                    (anchor - trained) / (steps * lr), c_global absorbs
+                    the participation-weighted mean shift
+    server_update   server-side optimizer (FedAdam / momentum) applied
+                    to the blended delta before broadcast — composes
+                    with ANY aggregator
+
+Aggregation weights per strategy (the engine's ``fedavg_update`` /
+``blendavg_update`` consume them):
+
+    blendavg   Eq. 9-10 validation-improvement omegas (score-based)
+    fedavg     data-volume weights
+    fedprox    data-volume weights (the prox term is client-side)
+    scaffold   uniform over participants (SCAFFOLD's x + mean(y_i - x)
+               server step at eta_g = 1)
+
+State layout (only the keys a strategy needs exist — mirrors the codec
+block's "none adds no keys" contract):
+
+    c_global   per-group trees, unstacked (the server's control variate)
+    c_local    per-group trees with leading C axis — gathered/scattered
+               by sampled ids exactly like opt moments (``sample_state``
+               / ``scatter_state``)
+    srv        server-optimizer moments: {m, t} (momentum) or {m, v, t}
+               (adam), trees matching the global model groups
+
+Everything here is pure jnp over pytrees: jit-safe, shard-safe, and
+checkpointable through the existing full-round-state path (bit-exact
+``--selftest-resume`` holds under ``--strategy scaffold``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+STRATEGIES = ("blendavg", "fedavg", "scaffold", "fedprox")
+SERVER_OPTS = ("none", "adam", "momentum")
+
+# strategy-state trees that carry a leading client axis (gathered /
+# scattered by sampled ids, like the optimizer moment trees)
+_STACKED_KEYS = ("c_local",)
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyConfig:
+    """Static aggregation-strategy configuration (hashable: lives in
+    ``EngineConfig``, so a strategy choice is round *structure* — the
+    default traces zero extra ops and switching strategies is a new
+    compiled round, never a retrace of an existing one)."""
+
+    name: str = "blendavg"  # one of STRATEGIES
+    # FedProx proximal coefficient: adds mu/2 * ||w - anchor||^2 to every
+    # client objective (as the exact gradient term mu * (w - anchor)).
+    # mu = 0 is the identity — "fedprox" at mu 0 IS plain fedavg.
+    fedprox_mu: float = 0.0
+    # SCAFFOLD Option-II scaling uses the *client* lr; a schedule makes
+    # the 1/(steps*lr) term approximate (standard practice).
+    # Server-side optimizer applied to the blended delta before
+    # broadcast; composes with any strategy name.
+    server_opt: str = "none"  # one of SERVER_OPTS
+    server_lr: float = 1.0
+    server_beta1: float = 0.9
+    server_beta2: float = 0.99
+    server_eps: float = 1e-3  # FedAdam tau (Reddi et al. 2021)
+
+    def __post_init__(self):
+        if self.name not in STRATEGIES:
+            raise ValueError(f"strategy {self.name!r} not in {STRATEGIES}")
+        if self.server_opt not in SERVER_OPTS:
+            raise ValueError(
+                f"server_opt {self.server_opt!r} not in {SERVER_OPTS}")
+        if self.fedprox_mu < 0:
+            raise ValueError(f"fedprox_mu must be >= 0, got {self.fedprox_mu}")
+        if self.fedprox_mu and self.name not in ("fedprox",):
+            raise ValueError("fedprox_mu > 0 requires strategy 'fedprox' "
+                             f"(got {self.name!r})")
+
+    # -- static structure queries (drivers branch on these at trace time) --
+
+    @property
+    def prox(self) -> bool:
+        """Client loss carries the proximal pull."""
+        return self.fedprox_mu > 0
+
+    @property
+    def control(self) -> bool:
+        """Client steps carry SCAFFOLD control-variate corrections."""
+        return self.name == "scaffold"
+
+    @property
+    def client_active(self) -> bool:
+        """Phase functions need the per-client ``strat`` block (anchor
+        and/or control variates)."""
+        return self.prox or self.control
+
+    @property
+    def stateful(self) -> bool:
+        """The strategy threads state through round state."""
+        return self.control or self.server_opt != "none"
+
+    @property
+    def score_based(self) -> bool:
+        """Aggregation weights come from validation scores (Eq. 9-10)."""
+        return self.name == "blendavg"
+
+
+def make_strategy(name: str = "blendavg", fedprox_mu: float = 0.0,
+                  server_opt: str = "none", server_lr: float = 1.0
+                  ) -> StrategyConfig:
+    return StrategyConfig(name=name, fedprox_mu=fedprox_mu,
+                          server_opt=server_opt, server_lr=server_lr)
+
+
+# ------------------------------------------------------------ state layout --
+
+def _zeros_like(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def init_state(scfg: StrategyConfig, stacked_models: dict,
+               global_models: dict) -> dict:
+    """Strategy state for one federation: ``{}`` when the strategy is
+    stateless (no key is ever added to round state — the default layout
+    is untouched, like codec \"none\").
+
+    ``stacked_models`` / ``global_models`` are the engine's client-group
+    dicts (stacked leaves carry the leading C axis).
+    """
+    out = {}
+    if scfg.control:
+        out["c_global"] = _zeros_like(global_models)
+        out["c_local"] = _zeros_like(stacked_models)
+    if scfg.server_opt == "momentum":
+        out["srv"] = {"m": _zeros_like(global_models),
+                      "t": jnp.zeros((), jnp.int32)}
+    elif scfg.server_opt == "adam":
+        out["srv"] = {"m": _zeros_like(global_models),
+                      "v": _zeros_like(global_models),
+                      "t": jnp.zeros((), jnp.int32)}
+    return out
+
+
+def sample_state(state: dict, idx) -> dict:
+    """Gather the sampled clients' rows of the stacked strategy trees
+    ((C, ...) -> (K, ...)); unstacked entries (c_global, srv moments)
+    pass through untouched — the same contract as ``sample_opt_state``."""
+    from repro.core.engine import sample_clients
+
+    out = dict(state)
+    for k in _STACKED_KEYS:
+        if k in state:
+            out[k] = sample_clients(state[k], idx)
+    return out
+
+
+def scatter_state(state: dict, sub: dict, idx) -> dict:
+    """Write a sampled round's strategy state back: stacked rows scatter
+    to the sampled positions, unstacked entries replace wholesale."""
+    from repro.core.engine import scatter_clients
+
+    out = dict(state)
+    for k, v in sub.items():
+        out[k] = scatter_clients(state[k], v, idx) if k in _STACKED_KEYS else v
+    return out
+
+
+# ------------------------------------------------------- client-side terms --
+
+def client_term(scfg: StrategyConfig, grads: dict, params: dict,
+                strat: dict | None) -> dict:
+    """Additive gradient correction for one phase's group subset.
+
+    ``grads``/``params`` are the phase's per-group stacked trees;
+    ``strat`` carries what the strategy configured (``anchor`` — each
+    participant's round-start weights — for FedProx, ``c_global`` /
+    ``c_local`` for SCAFFOLD). Returns corrected grads:
+
+        g  +  mu * (w - anchor)  +  (c_global - c_local)
+
+    Unstacked c_global leaves broadcast against the stacked (C, ...)
+    grads. The config is static, so the default strategy adds NO ops.
+    """
+    if strat is None or not scfg.client_active:
+        return grads
+    out = dict(grads)
+    for grp in grads:
+        g = out[grp]
+        if scfg.prox:
+            mu = jnp.float32(scfg.fedprox_mu)
+            g = jax.tree.map(
+                lambda gg, p, a: gg + mu * (p.astype(jnp.float32) - a),
+                g, params[grp], strat["anchor"][grp])
+        if scfg.control:
+            g = jax.tree.map(lambda gg, cg, cl: gg + (cg - cl),
+                             g, strat["c_global"][grp], strat["c_local"][grp])
+        out[grp] = g
+    return out
+
+
+# ------------------------------------------------- SCAFFOLD round update ----
+
+def scaffold_round(scfg: StrategyConfig, c_global: dict, c_local: dict,
+                   anchor: dict, trained: dict, steps: dict, lr: float,
+                   frac: float):
+    """Post-round control-variate update (SCAFFOLD Option II).
+
+    Per participant i (the K gathered rows):
+
+        c_i^+  =  c_i - c + (anchor_i - trained_i) / (steps * lr)
+        c^+    =  c + frac * mean_i(c_i^+ - c_i)        frac = K / C
+
+    ``steps`` maps each model group to the optimizer steps it took this
+    round (groups differ: encoders step in three phases, unimodal heads
+    in one); ``lr`` is the client lr (a schedule makes the scaling
+    approximate — standard practice). Returns (c_global', c_local'_rows)
+    with the participants' K rows updated; the caller scatters them back
+    like opt moments.
+    """
+    inv_lr = 1.0 / float(lr)
+    new_cl, new_cg = {}, {}
+    for grp in trained:
+        # steps may arrive traced (the jitted in-host hook): jnp math only
+        inv = inv_lr / jnp.maximum(jnp.float32(steps[grp]), 1.0)
+        cl = jax.tree.map(
+            lambda c, cg, a, t: c - cg + inv * (a - t.astype(jnp.float32)),
+            c_local[grp], c_global[grp], anchor[grp], trained[grp])
+        new_cl[grp] = cl
+        new_cg[grp] = jax.tree.map(
+            lambda cg, n, o: cg + jnp.float32(frac) * jnp.mean(n - o, axis=0),
+            c_global[grp], cl, c_local[grp])
+    return new_cg, new_cl
+
+
+# --------------------------------------------------- server-side optimizer --
+
+def server_update(scfg: StrategyConfig, srv: dict, new_global: dict,
+                  prev_global: dict):
+    """Server optimizer on the blended delta (one step per round).
+
+    delta = blend - prev_global is the server's "gradient" (FedOpt,
+    Reddi et al. 2021). ``adam`` keeps bias-corrected first/second
+    moments; ``momentum`` a running sum (FedAvgM). Returns (adjusted
+    global tree dict, new srv state). A keep-global round (blendavg with
+    no improver) contributes a zero delta — the moments decay toward
+    zero instead of freezing, exactly like a zero minibatch gradient.
+    """
+    if scfg.server_opt == "none":
+        return new_global, srv
+    delta = jax.tree.map(
+        lambda n, p: n.astype(jnp.float32) - p.astype(jnp.float32),
+        new_global, prev_global)
+    t = srv["t"] + 1
+    lr = jnp.float32(scfg.server_lr)
+    b1 = jnp.float32(scfg.server_beta1)
+    if scfg.server_opt == "momentum":
+        m = jax.tree.map(lambda mm, d: b1 * mm + d, srv["m"], delta)
+        out = jax.tree.map(lambda p, mm: (p.astype(jnp.float32) + lr * mm
+                                          ).astype(p.dtype), prev_global, m)
+        return out, {"m": m, "t": t}
+    b2 = jnp.float32(scfg.server_beta2)
+    eps = jnp.float32(scfg.server_eps)
+    m = jax.tree.map(lambda mm, d: b1 * mm + (1 - b1) * d, srv["m"], delta)
+    v = jax.tree.map(lambda vv, d: b2 * vv + (1 - b2) * jnp.square(d),
+                     srv["v"], delta)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    out = jax.tree.map(
+        lambda p, mm, vv: (p.astype(jnp.float32)
+                           + lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+                           ).astype(p.dtype), prev_global, m, v)
+    return out, {"m": m, "v": v, "t": t}

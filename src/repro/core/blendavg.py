@@ -37,8 +37,21 @@ def blendavg_weights(scores: Sequence[float], global_score: float,
     before normalization — the async BlendAvg used for partial-
     participation rounds. Candidates that did not finish should arrive
     with score -inf (or NaN), masking them like any non-improver.
+
+    A non-finite ``global_score`` is an ERROR, not a keep-global: a NaN
+    score poisons every delta (masking all candidates forever), and a
+    -inf score makes every delta +inf (NaN omegas after normalization).
+    Both mean the server's scoring pass is broken — raise instead of
+    silently freezing the federation on the last good global model.
     """
-    deltas = np.asarray(scores, np.float64) - float(global_score)
+    global_score = float(global_score)
+    if not np.isfinite(global_score):
+        raise ValueError(
+            f"blendavg_weights: global_score is {global_score} — the "
+            "server's validation scoring is broken (a NaN score would "
+            "silently mask every candidate, a -inf score would emit NaN "
+            "omegas); refusing to aggregate")
+    deltas = np.asarray(scores, np.float64) - global_score
     deltas = np.where(np.isnan(deltas), -np.inf, deltas)
     mask = deltas > 0
     if not mask.any():

@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import optim
+from repro.core import aggregate
 from repro.core import codec as wire
 from repro.core.encoders import (
     EncoderConfig,
@@ -113,6 +114,13 @@ class EngineConfig:
     # all, and switching codecs means a new round program — never a
     # retrace of an existing one.
     codec: wire.CodecConfig = wire.CodecConfig()
+    # Aggregation strategy (repro.core.aggregate): which client-side
+    # objective corrections (FedProx prox pull, SCAFFOLD control
+    # variates) the phase functions apply, and which server-side
+    # optimizer massages the blended delta. Like the codec, it is static
+    # round structure — the default blendavg strategy traces zero extra
+    # ops and adds zero state keys.
+    strategy: aggregate.StrategyConfig = aggregate.StrategyConfig()
 
 
 def make_optimizer(cfg: EngineConfig) -> optim.Optimizer:
@@ -262,14 +270,28 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
         h_b = encoder_apply(f_b, x_b, ecfg)
         return masked_mean(task_loss_rows(fusion_apply(g_m, h_a, h_b), y, kind), mask)
 
+    # ---- strategy corrections (repro.core.aggregate) ----
+
+    def _strat_grads(grads, params, strat):
+        """Apply the configured client-side strategy terms (FedProx
+        proximal pull, SCAFFOLD control-variate correction) to a phase's
+        grads. ``cfg.strategy`` is static: the default adds no ops, and
+        ``strat`` (anchor / c_global / c_local sub-trees for the phase's
+        groups) is sliced down to exactly the groups being stepped."""
+        if strat is None or not cfg.strategy.client_active:
+            return grads
+        sub = {k: {g: v[g] for g in grads} for k, v in strat.items()}
+        return aggregate.client_term(cfg.strategy, grads, params, sub)
+
     # ---- phase 1: local unimodal training (lines 3-8) ----
 
-    def unimodal_step(models, opt_state, batch):
+    def unimodal_step(models, opt_state, batch, strat=None):
         """One optimizer step for ALL clients x BOTH modalities.
 
         batch: xa (C,B,Sa,Fa) ya (C,B,O) ma (C,B)  + xb/yb/mb. Returns
         (models', opt_state', info) where info carries per-client masked
-        losses and row counts for both modalities.
+        losses and row counts for both modalities. ``strat`` is the
+        optional per-client strategy block (see ``_strat_grads``).
         """
         params = {k: models[k] for k in UNIMODAL_GROUPS}
 
@@ -281,6 +303,7 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
             return jnp.sum(la) + jnp.sum(lb), (la, na, lb, nb)
 
         (_, (la, na, lb, nb)), grads = jax.value_and_grad(total, has_aux=True)(params)
+        grads = _strat_grads(grads, params, strat)
         flags = {"f_A": na > 0, "g_A": na > 0, "f_B": nb > 0, "g_B": nb > 0}
         sub = _state_subset(opt_state, UNIMODAL_GROUPS)
         new_params, sub = _masked_opt_update(opt, grads, sub, params, flags)
@@ -289,7 +312,7 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
 
     # ---- phase 2: split (VFL) training on fragmented rows (lines 9-23) ----
 
-    def vfl_step(models, server_gmv, opt_state, srv_state, batch):
+    def vfl_step(models, server_gmv, opt_state, srv_state, batch, strat=None):
         """One joint split-training step over pre-aligned fragmented rows.
 
         batch: xa (C,Nfa,Sa,Fa) xb (C,Nfb,Sb,Fb); gather_a/gather_b (n,)
@@ -316,6 +339,10 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
 
         loss, (grads, g_srv) = jax.value_and_grad(joint, argnums=(0, 1))(
             params, server_gmv)
+        # strategy terms correct the CLIENT encoders only — the server's
+        # g_M^v head never leaves the server, so it gets no prox pull
+        # and no control variate
+        grads = _strat_grads(grads, params, strat)
         flags = {"f_A": batch.get("part_a"), "f_B": batch.get("part_b")}
         sub = _state_subset(opt_state, VFL_GROUPS)
         new_params, sub = _masked_opt_update(opt, grads, sub, params, flags)
@@ -337,7 +364,7 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
 
     # ---- phase 3: local multimodal training on paired rows (lines 24-29) ----
 
-    def paired_step(models, opt_state, batch):
+    def paired_step(models, opt_state, batch, strat=None):
         """One optimizer step on paired rows for all paired clients.
 
         batch: xa (C,B,Sa,Fa) xb (C,B,Sb,Fb) y (C,B,O) m (C,B).
@@ -351,6 +378,7 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
             return jnp.sum(l), (l, n)
 
         (_, (l, n)), grads = jax.value_and_grad(total, has_aux=True)(params)
+        grads = _strat_grads(grads, params, strat)
         flags = {k: n > 0 for k in PAIRED_GROUPS}
         sub = _state_subset(opt_state, PAIRED_GROUPS)
         new_params, sub = _masked_opt_update(opt, grads, sub, params, flags)
@@ -448,6 +476,21 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
         return wire.downlink_roundtrip(new_global, prev_global, resid,
                                        cfg.codec)
 
+    # ---- aggregation-strategy round hooks (repro.core.aggregate) ----
+
+    def scaffold_round(c_global, c_local, anchor, trained, steps, frac):
+        """SCAFFOLD Option-II control-variate update for the round's
+        participants, scaled by the client lr this engine steps with.
+        See ``aggregate.scaffold_round``."""
+        return aggregate.scaffold_round(cfg.strategy, c_global, c_local,
+                                        anchor, trained, steps, cfg.lr, frac)
+
+    def server_update(srv, new_global, prev_global):
+        """Server-side FedAdam/momentum on the blended delta (see
+        ``aggregate.server_update``)."""
+        return aggregate.server_update(cfg.strategy, srv, new_global,
+                                       prev_global)
+
     return SimpleNamespace(
         opt=opt, srv_opt=srv_opt, unimodal_loss=unimodal_loss,
         paired_loss=paired_loss,
@@ -455,7 +498,8 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
         omega_from_scores=omega_from_scores, blend_stacked=blend_stacked,
         blendavg_update=blendavg_update, fedavg_update=fedavg_update,
         broadcast=broadcast, codec_uplink=codec_uplink,
-        codec_downlink=codec_downlink)
+        codec_downlink=codec_downlink, scaffold_round=scaffold_round,
+        server_update=server_update)
 
 
 # ------------------------------------------------------- in-host driver ----
@@ -483,6 +527,12 @@ class RoundEngine:
         if cfg.codec.enabled:
             self.codec_uplink = jax.jit(self.fns.codec_uplink)
             self.codec_downlink = jax.jit(self.fns.codec_downlink)
+        # strategy round hooks, same contract: only jitted when the
+        # strategy needs them, so the default engine traces nothing new
+        if cfg.strategy.control:
+            self.scaffold_round = jax.jit(self.fns.scaffold_round)
+        if cfg.strategy.server_opt != "none":
+            self.server_update = jax.jit(self.fns.server_update)
 
     def init_opt_state(self, stacked_models):
         return self.opt.init({k: stacked_models[k] for k in CLIENT_GROUPS})
@@ -495,11 +545,13 @@ class RoundEngine:
     def _build_unimodal_phase(self):
         fns, B = self.fns, self.batch_size
 
-        def phase(models, opt_state, data, key):
+        def phase(models, opt_state, data, key, strat=None):
             """data: xa (C,N,Sa,Fa) ya (C,N,O) ma (C,N) + xb/yb/mb, with
             N a multiple of the batch size. Shuffles per client on device,
             scans the minibatches, returns the mean of valid per-(client,
-            batch, modality) losses — the legacy loop's logging metric."""
+            batch, modality) losses — the legacy loop's logging metric.
+            ``strat`` is the optional per-client strategy block (anchor /
+            control variates), constant across the scanned minibatches."""
             C, n_rows = data["ma"].shape
             nb = n_rows // B
             ka, kb = jax.random.split(key)
@@ -519,7 +571,8 @@ class RoundEngine:
                          "ma": take(data["ma"], sa),
                          "xb": take(data["xb"], sb), "yb": take(data["yb"], sb),
                          "mb": take(data["mb"], sb)}
-                models, opt_state, info = fns.unimodal_step(models, opt_state, batch)
+                models, opt_state, info = fns.unimodal_step(models, opt_state,
+                                                            batch, strat)
                 return (models, opt_state), info
 
             (models, opt_state), infos = jax.lax.scan(
@@ -537,7 +590,7 @@ class RoundEngine:
     def _build_paired_phase(self):
         fns, B = self.fns, self.batch_size
 
-        def phase(models, opt_state, data, key):
+        def phase(models, opt_state, data, key, strat=None):
             C, n_rows = data["m"].shape
             nb = n_rows // B
             idx = jax.vmap(lambda kk: jax.random.permutation(kk, n_rows))(
@@ -549,7 +602,8 @@ class RoundEngine:
                 sel = jax.lax.dynamic_slice_in_dim(idx, t * B, B, axis=1)
                 batch = {"xa": take(data["xa"], sel), "xb": take(data["xb"], sel),
                          "y": take(data["y"], sel), "m": take(data["m"], sel)}
-                models, opt_state, info = fns.paired_step(models, opt_state, batch)
+                models, opt_state, info = fns.paired_step(models, opt_state,
+                                                          batch, strat)
                 return (models, opt_state), info
 
             (models, opt_state), infos = jax.lax.scan(

@@ -59,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.tree import tree_unstack
+from repro.core import aggregate as strategies
 from repro.core import codec as wire
 from repro.core import schedule, vfl
 from repro.core.blendavg import blendavg_weights
@@ -95,7 +96,21 @@ class FedConfig:
     momentum: float = 0.0  # sgd momentum
     weight_decay: float = 0.0  # adamw decoupled weight decay
     schedule: str = "constant"  # constant | cosine (over all optimizer steps)
-    aggregator: str = "blendavg"  # blendavg | fedavg
+    # Aggregation strategy (``repro.core.aggregate``): blendavg (Eq. 9-11
+    # scored blend) | fedavg (data-volume weights) | fedprox (volume
+    # weights + the mu-scaled proximal pull toward each client's
+    # round-start anchor) | scaffold (uniform blend + control-variate
+    # gradient corrections threaded through federation state).
+    # ``aggregator`` is the pre-strategy spelling of the same knob, kept
+    # as an alias: setting it fills ``strategy``, and the two are always
+    # equal after init.
+    strategy: str = ""  # "" = follow aggregator (default blendavg)
+    aggregator: str = "blendavg"
+    fedprox_mu: float = 0.0
+    # Server-side optimizer on the blended delta (FedAdam / momentum),
+    # applied before broadcast; composes with any strategy.
+    server_opt: str = "none"  # none | adam | momentum
+    server_lr: float = 1.0
     # Which local rows feed phase-1 unimodal training. "all" (default)
     # reads Alg. 1's "partial data" as "the unimodal portions of D_m" —
     # every locally held x_m row (partial + fragmented + paired), matching
@@ -126,6 +141,16 @@ class FedConfig:
     # ``repro.core.codec``). "none" = uncompressed fp32.
     codec: str = "none"  # none | int8 | topk | int8_topk
     topk_frac: float = 0.25  # entries kept per leaf by sparsifying codecs
+
+    def __post_init__(self):
+        if not self.strategy:
+            object.__setattr__(self, "strategy", self.aggregator)
+        object.__setattr__(self, "aggregator", self.strategy)
+
+    @property
+    def strategy_cfg(self) -> strategies.StrategyConfig:
+        return strategies.make_strategy(self.strategy, self.fedprox_mu,
+                                        self.server_opt, self.server_lr)
 
 
 # ------------------------------------------------------------- evaluation --
@@ -292,6 +317,15 @@ class Federation:
     # stacked per-client uplink rows + one server-side downlink tree
     resid_up: dict = None
     resid_down: dict = None
+    # aggregation-strategy state (None for stateless strategies):
+    # SCAFFOLD's c_global/c_local control variates (c_local stacked,
+    # gathered/scattered with the sampled ids like opt moments) and/or
+    # the server-optimizer moments under "srv"
+    strat_state: dict = None
+    # optimizer steps each model group takes per round (SCAFFOLD's
+    # Option-II 1/(steps*lr) scaling) — static, from the padded batch
+    # counts x local_epochs
+    scaffold_steps: dict = None
 
     @property
     def models(self) -> list[dict]:
@@ -331,6 +365,7 @@ class Federation:
                           + (data["paired"]["m"].shape[1] // cfg.batch_size
                              if data["paired"] is not None else 0)
                           + (1 if data["vfl"] is not None else 0))
+        scfg = cfg.strategy_cfg
         engine = RoundEngine(
             EngineConfig(ecfg=ecfg, kind=spec.kind, optimizer=cfg.optimizer,
                          lr=cfg.lr, momentum=cfg.momentum,
@@ -340,11 +375,26 @@ class Federation:
                          # full-batch VFL exchange), not once per minibatch
                          server_total_steps=cfg.rounds * cfg.local_epochs,
                          staleness_exp=cfg.staleness_exp,
-                         codec=wire.make_codec(cfg.codec, cfg.topk_frac)),
+                         codec=wire.make_codec(cfg.codec, cfg.topk_frac),
+                         strategy=scfg),
             cfg.batch_size)
         # all clients start from the same global init (standard FL practice)
         stacked = engine.fns.broadcast(base, cfg.n_clients)
         codec_on = cfg.codec != "none"
+        # SCAFFOLD step counts per group, per round: encoders step in all
+        # three phases, unimodal heads only in phase 1, the fusion head
+        # only in phase 3 (one optimizer step per scanned minibatch; the
+        # VFL exchange is one full-batch step)
+        nb_uni = data["uni"]["ma"].shape[1] // cfg.batch_size
+        nb_paired = (data["paired"]["m"].shape[1] // cfg.batch_size
+                     if data["paired"] is not None else 0)
+        nb_vfl = 1 if data["vfl"] is not None else 0
+        e = float(cfg.local_epochs)
+        scaffold_steps = {
+            "f_A": e * (nb_uni + nb_vfl + nb_paired),
+            "f_B": e * (nb_uni + nb_vfl + nb_paired),
+            "g_A": e * nb_uni, "g_B": e * nb_uni, "g_M": e * nb_paired,
+        }
         return Federation(
             cfg=cfg, spec=spec, ecfg=ecfg, clients=clients, engine=engine,
             stacked=stacked, opt_state=engine.init_opt_state(stacked),
@@ -360,6 +410,11 @@ class Federation:
             resid_up=wire.zeros_like_tree(stacked) if codec_on else None,
             resid_down=(wire.zeros_like_tree(
                 {k: base[k] for k in CLIENT_GROUPS}) if codec_on else None),
+            strat_state=(strategies.init_state(
+                scfg, {k: stacked[k] for k in CLIENT_GROUPS},
+                {k: base[k] for k in CLIENT_GROUPS})
+                if scfg.stateful else None),
+            scaffold_steps=scaffold_steps,
         )
 
     def _next_key(self):
@@ -368,12 +423,31 @@ class Federation:
 
     # ---- phases 1-3: one engine call each ----
 
-    def _unimodal_phase(self) -> float:
+    def _strat_block(self, anchor, idxd=None):
+        """Per-participant strategy block for the phase functions (None
+        for strategies with no client-side term): each participant's
+        round-start weights anchor the FedProx pull; SCAFFOLD's c_local
+        rows gather with the sampled ids exactly like opt moments."""
+        scfg = self.engine.cfg.strategy
+        if not scfg.client_active:
+            return None
+        strat = {}
+        if scfg.prox:
+            strat["anchor"] = anchor
+        if scfg.control:
+            strat["c_global"] = self.strat_state["c_global"]
+            strat["c_local"] = (self.strat_state["c_local"] if idxd is None
+                                else sample_clients(
+                                    self.strat_state["c_local"], idxd))
+        return strat
+
+    def _unimodal_phase(self, strat=None) -> float:
         self.stacked, self.opt_state, loss = self.engine.unimodal_phase(
-            self.stacked, self.opt_state, self.data["uni"], self._next_key())
+            self.stacked, self.opt_state, self.data["uni"], self._next_key(),
+            strat)
         return float(loss)
 
-    def _vfl_phase(self) -> float:
+    def _vfl_phase(self, strat=None) -> float:
         """Full-batch split exchange, exactly as Alg. 1: every aligned
         fragmented row goes through ONE joint forward/backward (static row
         count -> compiles once)."""
@@ -382,14 +456,15 @@ class Federation:
         (self.stacked, self.server_gmv, self.opt_state, self.srv_opt_state,
          loss) = self.engine.vfl_phase(self.stacked, self.server_gmv,
                                        self.opt_state, self.srv_opt_state,
-                                       self.data["vfl"])
+                                       self.data["vfl"], strat)
         return float(loss)
 
-    def _paired_phase(self) -> float:
+    def _paired_phase(self, strat=None) -> float:
         if self.data["paired"] is None:
             return float("nan")
         self.stacked, self.opt_state, loss = self.engine.paired_phase(
-            self.stacked, self.opt_state, self.data["paired"], self._next_key())
+            self.stacked, self.opt_state, self.data["paired"],
+            self._next_key(), strat)
         return float(loss)
 
     # ---- phase 4: aggregation + broadcast ----
@@ -407,12 +482,16 @@ class Federation:
 
     def _blend_group(self, global_tree, stacked_cands, scores, global_score,
                      fedavg_weights, staleness=None):
-        """Shared BlendAvg/FedAvg dispatch; blend runs through the engine's
-        Pallas path. Returns (new_global, omega). ``staleness`` (per-
-        candidate, rounds the candidate's base global is behind) damps the
-        BlendAvg omegas — zero/None for synchronous rounds."""
+        """Shared scored/weighted blend dispatch; the blend itself runs
+        through the engine's Pallas path. BlendAvg consumes the Eq. 9-10
+        scores; every other strategy consumes the precomputed
+        ``fedavg_weights`` (data volumes for fedavg/fedprox, uniform
+        presence for scaffold). Returns (new_global, omega). ``staleness``
+        (per-candidate, rounds the candidate's base global is behind)
+        damps the BlendAvg omegas — zero/None for synchronous rounds, and
+        a scoring concept the weighted strategies ignore."""
         fns = self.engine.fns
-        if self.cfg.aggregator == "blendavg":
+        if self.engine.cfg.strategy.score_based:
             omega = blendavg_weights(scores, global_score, staleness=staleness,
                                      staleness_exp=self.cfg.staleness_exp)
             if omega.sum() == 0:  # no improvement anywhere -> keep global
@@ -440,10 +519,13 @@ class Federation:
 
         if cand_stacked is None:
             cand_stacked = self.stacked
+        scfg = self.engine.cfg.strategy
         codec_on = self.resid_up is not None
+        # the pre-round global tree: the codec's downlink reference and
+        # the server optimizer's delta base
+        prev_glob = {k: self.global_models[k] for k in CLIENT_GROUPS}
         if codec_on:
             assert base is not None, "codec rounds must pass the uplink base"
-            prev_glob = {k: self.global_models[k] for k in CLIENT_GROUPS}
             idxd = None if idx is None else jnp.asarray(idx, jnp.int32)
             resid = (self.resid_up if idxd is None
                      else sample_clients(self.resid_up, idxd))
@@ -459,7 +541,7 @@ class Federation:
             # participants (synced at the end of the previous round) are 0
             stale = np.maximum(self.round_no - 1 - self.last_round[idx], 0)
 
-        blend = cfg.aggregator == "blendavg"  # fedavg never reads scores
+        blend = scfg.score_based  # the weighted strategies never read scores
         for mod, x_val in (("A", x_a), ("B", x_b)):
             present = [cd.has_a if mod == "A" else cd.has_b for cd in sub_clients]
             if not any(present):
@@ -473,8 +555,12 @@ class Federation:
                     self.engine.uni_scores(cand["f"], cand["g"], x_val), present)
                 gscore = eval_unimodal(glob["f"], glob["g"], x_val, val.y, ecfg,
                                        kind, metric)
-            ns = None if blend else [cd.n_samples() if p else 0
-                                     for cd, p in zip(sub_clients, present)]
+            # scaffold: uniform over participants (eta_g = 1 server step);
+            # fedavg/fedprox: data-volume weights
+            ns = None
+            if not blend:
+                ns = [(1 if scfg.control else cd.n_samples()) if p else 0
+                      for cd, p in zip(sub_clients, present)]
             blended, omega = self._blend_group(glob, cand, scores, gscore, ns,
                                                staleness=stale)
             info[f"omega_{mod}"] = omega
@@ -492,21 +578,37 @@ class Federation:
                 self.engine.multi_scores(f_a, f_b, cand, x_a, x_b), present)
             gscore = eval_multimodal(f_a, f_b, self.global_models["g_M"],
                                      x_a, x_b, val.y, ecfg, kind, metric)
-        # FedAvg weights: paired counts per client; the server head carries
-        # the actual VFL overlap size — zero when no rows overlap (no silent
-        # floor; all-zero weights keep the previous global model).
+        # Weighted-strategy M-head weights: paired counts per client, the
+        # server head carrying the actual VFL overlap size — zero when no
+        # rows overlap (no silent floor; all-zero weights keep the
+        # previous global model). Scaffold blends present heads uniformly
+        # (the server slot present iff any rows overlap).
         ns = None
         if not blend:
-            ns = [len(cd.paired_a) if cd.has_paired else 0 for cd in sub_clients]
-            ns.append(self.data["n_overlap"])
+            if scfg.control:
+                ns = [1 if cd.has_paired else 0 for cd in sub_clients]
+                ns.append(1 if self.data["n_overlap"] else 0)
+            else:
+                ns = [len(cd.paired_a) if cd.has_paired else 0
+                      for cd in sub_clients]
+                ns.append(self.data["n_overlap"])
         stale_m = None if stale is None else np.append(stale, 0.0)
         blended, omega = self._blend_group(self.global_models["g_M"], cand,
                                            scores, gscore, ns, staleness=stale_m)
         info["omega_M"] = omega
         self.global_models["g_M"] = blended
+
+        # server-side optimizer on the blended delta, before anything is
+        # broadcast — clients (and the downlink codec) see the adjusted
+        # global, and the server's g_M^v re-seeds from it
+        if scfg.server_opt != "none":
+            glob = {k: self.global_models[k] for k in CLIENT_GROUPS}
+            glob, self.strat_state["srv"] = self.engine.server_update(
+                self.strat_state["srv"], glob, prev_glob)
+            self.global_models.update(glob)
         # the server's split-training head re-seeds from the TRUE blend
         # (it never crosses a wire), codec or not
-        gmv_true = blended
+        gmv_true = self.global_models["g_M"]
 
         # wire codec, downlink leg: what the clients adopt is the blend
         # as decoded from the broadcast delta vs. the global they held
@@ -542,6 +644,25 @@ class Federation:
         self.omega_ema[sel] = b * self.omega_ema[sel] + (1 - b) * cli_omega
         self.part_count[sel] += 1
         return info
+
+    def _scaffold_update(self, anchor, trained, idxd=None):
+        """SCAFFOLD Option-II control-variate update on the TRUE trained
+        weights (before any lossy uplink codec touches the candidates).
+        Participants' c_local rows move by (anchor - trained)/(steps*lr);
+        c_global absorbs the K/C-weighted mean shift."""
+        scfg = self.engine.cfg.strategy
+        if not scfg.control:
+            return
+        st = self.strat_state
+        cl = (st["c_local"] if idxd is None
+              else sample_clients(st["c_local"], idxd))
+        k = self.cfg.n_clients if idxd is None else int(idxd.shape[0])
+        new_cg, new_cl = self.engine.scaffold_round(
+            st["c_global"], cl, anchor, trained, self.scaffold_steps,
+            k / self.cfg.n_clients)
+        st["c_global"] = new_cg
+        st["c_local"] = (new_cl if idxd is None
+                         else dict(scatter_clients(st["c_local"], new_cl, idxd)))
 
     # ---- K-of-C sampled round ----
 
@@ -596,7 +717,10 @@ class Federation:
         idx = self.policy_obj.select(self.host_rng, self._sched_telemetry())
         idxd = jnp.asarray(idx, jnp.int32)
         sub = sample_clients(self.stacked, idxd)
-        base = sub  # codec uplink base: the weights each participant starts from
+        # codec uplink base AND strategy anchor: the weights each
+        # participant starts the round from
+        base = sub
+        strat = self._strat_block(base, idxd)
         sub_opt = sample_opt_state(self.opt_state, idxd)
         uni = sample_clients(self.data["uni"], idxd)
         paired = (sample_clients(self.data["paired"], idxd)
@@ -606,24 +730,26 @@ class Federation:
         logs = {"sampled": idx}
         for _ in range(self.cfg.local_epochs):
             sub, sub_opt, loss = self.engine.unimodal_phase(
-                sub, sub_opt, uni, self._next_key())
+                sub, sub_opt, uni, self._next_key(), strat)
             logs["loss_partial"] = float(loss)
             if vfl_batch is not None:
                 (sub, self.server_gmv, sub_opt, self.srv_opt_state,
                  loss) = self.engine.vfl_phase(sub, self.server_gmv, sub_opt,
-                                               self.srv_opt_state, vfl_batch)
+                                               self.srv_opt_state, vfl_batch,
+                                               strat)
                 logs["loss_vfl"] = float(loss)
             else:
                 logs["loss_vfl"] = float("nan")
             if paired is not None:
                 sub, sub_opt, loss = self.engine.paired_phase(
-                    sub, sub_opt, paired, self._next_key())
+                    sub, sub_opt, paired, self._next_key(), strat)
                 logs["loss_paired"] = float(loss)
             else:
                 logs["loss_paired"] = float("nan")
         # moments ride home with their clients; the trained weights only
         # matter as aggregation candidates (broadcast decides what sticks)
         self.opt_state = scatter_opt_state(self.opt_state, sub_opt, idxd)
+        self._scaffold_update(base, sub, idxd)
         logs.update(self._aggregate(cand_stacked=sub, idx=idx, base=base))
         return logs
 
@@ -637,11 +763,14 @@ class Federation:
             self.round_no += 1
             return logs
         logs = {}
-        base = self.stacked  # codec uplink base (pre-round weights)
+        # codec uplink base AND strategy anchor (pre-round weights)
+        base = self.stacked
+        strat = self._strat_block(base)
         for _ in range(self.cfg.local_epochs):
-            logs["loss_partial"] = self._unimodal_phase()
-            logs["loss_vfl"] = self._vfl_phase()
-            logs["loss_paired"] = self._paired_phase()
+            logs["loss_partial"] = self._unimodal_phase(strat)
+            logs["loss_vfl"] = self._vfl_phase(strat)
+            logs["loss_paired"] = self._paired_phase(strat)
+        self._scaffold_update(base, self.stacked)
         logs.update(self._aggregate(base=base))
         self.round_no += 1
         return logs

@@ -64,6 +64,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import aggregate as strategies
 from repro.core import codec as wire
 from repro.core import schedule
 from repro.core.encoders import EncoderConfig
@@ -130,6 +131,20 @@ class ShardedFedSpec:
     # state). "none" = uncompressed fp32; see ``repro.core.codec``.
     codec: str = "none"  # none | int8 | topk | int8_topk
     topk_frac: float = 0.25  # entries kept per leaf by sparsifying codecs
+    # Aggregation strategy (``repro.core.aggregate``): blendavg keeps the
+    # Eq. 9-11 scored blend; fedavg/fedprox weight candidates by data
+    # volume (fedprox additionally pulls every client step toward its
+    # round-start anchor with ``fedprox_mu``); scaffold corrects client
+    # grads with control variates threaded through round state like opt
+    # moments and blends participants uniformly. ``server_opt`` applies a
+    # server-side FedAdam/momentum step to the blended delta before
+    # broadcast and composes with any strategy. Like the codec, the
+    # strategy is static round structure: the default adds no state keys
+    # and traces no extra ops.
+    strategy: str = "blendavg"  # blendavg | fedavg | scaffold | fedprox
+    fedprox_mu: float = 0.0
+    server_opt: str = "none"  # none | adam | momentum
+    server_lr: float = 1.0
 
     @property
     def ecfg(self) -> EncoderConfig:
@@ -149,7 +164,10 @@ class ShardedFedSpec:
                             schedule=self.schedule, total_steps=self.total_steps,
                             server_total_steps=self.server_total_steps,
                             staleness_exp=self.staleness_exp, blend=self.blend,
-                            codec=wire.make_codec(self.codec, self.topk_frac))
+                            codec=wire.make_codec(self.codec, self.topk_frac),
+                            strategy=strategies.make_strategy(
+                                self.strategy, self.fedprox_mu,
+                                self.server_opt, self.server_lr))
 
 
 def init_stacked_models(key, spec: ShardedFedSpec):
@@ -204,6 +222,16 @@ def init_round_state(key, spec: ShardedFedSpec) -> dict:
             "resid_up": wire.zeros_like_tree(stacked),
             "resid_down": wire.zeros_like_tree(global_models),
         }
+    scfg = spec.engine_cfg.strategy
+    if scfg.stateful:
+        # Strategy state follows the same contract: SCAFFOLD's stacked
+        # c_local rows gather/scatter with the sampled ids, c_global and
+        # the server-optimizer moments are global trees. Stateless
+        # strategies (blendavg/fedavg/fedprox, no server opt) add NO
+        # keys, so the default checkpoint layout is byte-identical to
+        # pre-strategy checkpoints.
+        state["strat"] = strategies.init_state(
+            scfg, {k: stacked[k] for k in CLIENT_GROUPS}, global_models)
     return state
 
 
@@ -231,6 +259,11 @@ def make_blendfl_round(spec: ShardedFedSpec):
     """
     fns = make_phase_fns(spec.engine_cfg)
     K = spec.k_round
+    scfg = spec.engine_cfg.strategy
+    # SCAFFOLD Option-II scaling: optimizer steps each group took this
+    # round (encoders step in all three phases; heads in one).
+    scaffold_steps = {"f_A": 3.0, "f_B": 3.0, "g_A": 1.0, "g_B": 1.0,
+                      "g_M": 1.0}
 
     def aggregate(models, server_gmv, global_models, batch, staleness):
         """Phase 4 on device: -val-loss scores, then the shared (async)
@@ -275,6 +308,54 @@ def make_blendfl_round(spec: ShardedFedSpec):
             global_models["g_M"], cand, scores, gscore, staleness=stale_m)
         return new_global, infos
 
+    def aggregate_weighted(models, server_gmv, global_models, batch):
+        """Phase 4 for the score-free strategies: fedavg/fedprox weight
+        each candidate by the rows it trained on this round (read off the
+        batch masks; the uniform synthetic layout reduces to equal
+        weights), scaffold blends participants uniformly (SCAFFOLD's
+        x + (K/C-scaled) mean(y_i - x) server step at eta_g = 1). The
+        multimodal blend stacks the server's g_M^v as candidate K with
+        the total live aligned rows as its volume — it trained on every
+        client's fragmented rows. Staleness damping is a BlendAvg scoring
+        concept and does not apply here."""
+        if "partial_ma" in batch:
+            na = jnp.sum(batch["partial_ma"], axis=1)
+            nb = jnp.sum(batch["partial_mb"], axis=1)
+        else:
+            na = jnp.full((K,), float(spec.n_partial))
+            nb = jnp.full((K,), float(spec.n_partial))
+        n_pair = (jnp.sum(batch["paired_m"], axis=1) if "paired_m" in batch
+                  else jnp.full((K,), float(spec.n_paired)))
+        n_frag = (jnp.sum(batch["frag_w"].reshape(K, spec.n_frag), axis=1)
+                  if "frag_w" in batch
+                  else jnp.full((K,), float(spec.n_frag)))
+        if scfg.control:
+            w_cli = jnp.ones((K,), jnp.float32)
+            w_m = jnp.ones((K + 1,), jnp.float32)
+        else:
+            w_cli = na + nb + n_pair + n_frag
+            w_m = jnp.concatenate([n_pair, jnp.sum(n_frag)[None]])
+
+        new_global = dict(global_models)
+        infos = {}
+        for mod in ("A", "B"):
+            cand = {"f": models[f"f_{mod}"], "g": models[f"g_{mod}"]}
+            glob = {"f": global_models[f"f_{mod}"],
+                    "g": global_models[f"g_{mod}"]}
+            blended = fns.fedavg_update(glob, cand, w_cli)
+            new_global[f"f_{mod}"] = blended["f"]
+            new_global[f"g_{mod}"] = blended["g"]
+        cand = stack_with(models["g_M"], server_gmv)
+        new_global["g_M"] = fns.fedavg_update(global_models["g_M"], cand, w_m)
+        # normalized weights double as the sched telemetry omegas, so the
+        # participation policies see the same [0, 1] mass they see under
+        # blendavg
+        om_cli = w_cli / jnp.maximum(jnp.sum(w_cli), 1e-12)
+        infos["omega_A"] = om_cli
+        infos["omega_B"] = om_cli
+        infos["omega_M"] = w_m / jnp.maximum(jnp.sum(w_m), 1e-12)
+        return new_global, infos
+
     def round_fn(state, batch):
         if spec.n_sampled:
             idx = batch["sampled"]
@@ -296,6 +377,21 @@ def make_blendfl_round(spec: ShardedFedSpec):
             base = models
             resid_up = (sample_clients(state["codec"]["resid_up"], idx)
                         if spec.n_sampled else state["codec"]["resid_up"])
+        # strategy block for the phase functions: each participant's
+        # round-start weights anchor the FedProx pull; SCAFFOLD's c_local
+        # rows gather with the sampled ids exactly like opt moments
+        anchor = models
+        strat = None
+        if scfg.control:
+            c_local = (sample_clients(state["strat"]["c_local"], idx)
+                       if spec.n_sampled else state["strat"]["c_local"])
+        if scfg.client_active:
+            strat = {}
+            if scfg.prox:
+                strat["anchor"] = anchor
+            if scfg.control:
+                strat["c_global"] = state["strat"]["c_global"]
+                strat["c_local"] = c_local
 
         # phase 1: local unimodal training. Ragged federations (the
         # FederatedBatcher) ship real 0/1 row masks; the uniform synthetic
@@ -306,7 +402,7 @@ def make_blendfl_round(spec: ShardedFedSpec):
               "xb": batch["partial_b"], "yb": batch["partial_yb"],
               "mb": batch.get("partial_mb",
                               jnp.ones(batch["partial_yb"].shape[:2], jnp.float32))}
-        models, opt_state, i1 = fns.unimodal_step(models, opt_state, p1)
+        models, opt_state, i1 = fns.unimodal_step(models, opt_state, p1, strat)
         # average over clients that actually held rows (all of them in the
         # uniform layout, where this reduces to the plain mean)
         wa = (i1["n_a"] > 0).astype(jnp.float32)
@@ -326,17 +422,26 @@ def make_blendfl_round(spec: ShardedFedSpec):
               "part_a": batch.get("frag_part_a"),
               "part_b": batch.get("frag_part_b")}
         models, server_gmv, opt_state, srv_state, loss_vfl = fns.vfl_step(
-            models, server_gmv, opt_state, srv_state, p2)
+            models, server_gmv, opt_state, srv_state, p2, strat)
 
         # phase 3: local multimodal training on paired rows
         p3 = {"xa": batch["paired_a"], "xb": batch["paired_b"],
               "y": batch["paired_y"],
               "m": batch.get("paired_m",
                              jnp.ones(batch["paired_y"].shape[:2], jnp.float32))}
-        models, opt_state, i3 = fns.paired_step(models, opt_state, p3)
+        models, opt_state, i3 = fns.paired_step(models, opt_state, p3, strat)
         wp = (i3["n"] > 0).astype(jnp.float32)
         loss_paired = (jnp.sum(i3["loss"] * wp)
                        / jnp.maximum(jnp.sum(wp), 1.0))
+
+        # SCAFFOLD control-variate round update on the TRUE trained
+        # weights (Option II runs server-side on what the clients really
+        # computed — before the lossy uplink codec touches the
+        # candidates), scaled by the participation fraction K/C
+        if scfg.control:
+            new_cg, new_cl = fns.scaffold_round(
+                state["strat"]["c_global"], c_local, anchor, models,
+                scaffold_steps, K / spec.n_clients)
 
         # wire codec, uplink leg: the trained weights become candidates
         # only after the lossy client->server round-trip — aggregation
@@ -344,13 +449,27 @@ def make_blendfl_round(spec: ShardedFedSpec):
         if codec_on:
             models, resid_up = fns.codec_uplink(models, base, resid_up)
 
-        # phase 4: BlendAvg aggregation + broadcast. Full participation:
-        # the broadcast is free under SPMD (the reduction leaves the blend
+        # phase 4: aggregation + broadcast. BlendAvg scores candidates on
+        # the replicated val shard (Eq. 9-11); the score-free strategies
+        # blend by data volume / uniformly. Full participation: the
+        # broadcast is free under SPMD (the reduction leaves the blend
         # resident on every slice). Sampled: participants-only scatter —
         # stragglers keep their stale rows; the trained weights only
         # mattered as candidates, while opt moments ride home per client.
-        new_global, infos = aggregate(models, server_gmv, global_models=state[
-            "global_models"], batch=batch, staleness=staleness)
+        if scfg.score_based:
+            new_global, infos = aggregate(
+                models, server_gmv, global_models=state["global_models"],
+                batch=batch, staleness=staleness)
+        else:
+            new_global, infos = aggregate_weighted(
+                models, server_gmv, global_models=state["global_models"],
+                batch=batch)
+        # server-side optimizer on the blended delta, before anything is
+        # broadcast (clients — and the downlink codec — see the adjusted
+        # global, and the server's g_M^v re-seeds from it)
+        if scfg.server_opt != "none":
+            new_global, srv_moments = fns.server_update(
+                state["strat"]["srv"], new_global, state["global_models"])
         # wire codec, downlink leg: clients adopt the blend as decoded
         # from the broadcast delta. The server's own g_M^v head never
         # crosses a wire — it re-seeds from the TRUE blend below.
@@ -397,6 +516,16 @@ def make_blendfl_round(spec: ShardedFedSpec):
                              if spec.n_sampled else resid_up),
                 "resid_down": resid_down,
             }
+        if scfg.stateful:
+            new_strat = dict(state["strat"])
+            if scfg.control:
+                new_strat["c_global"] = new_cg
+                new_strat["c_local"] = (
+                    scatter_clients(state["strat"]["c_local"], new_cl, idx)
+                    if spec.n_sampled else new_cl)
+            if scfg.server_opt != "none":
+                new_strat["srv"] = srv_moments
+            new_state["strat"] = new_strat
         state = new_state
         metrics = dict(loss_uni=loss_uni, loss_vfl=loss_vfl,
                        loss_paired=loss_paired, **infos)

@@ -127,3 +127,84 @@ def train_val_test(spec: TaskSpec, n_train: int, n_val: int, n_test: int, seed: 
     va = total.subset(np.arange(n_train, n_train + n_val))
     te = total.subset(np.arange(n_train + n_val, n_train + n_val + n_test))
     return tr, va, te
+
+
+# ------------------------------------------- non-IID cohort generation ----
+
+def _row_labels(y: np.ndarray):
+    """Collapse a label matrix to one integer class per row (binary ->
+    {0,1}; multiclass/multilabel -> argmax, i.e. the dominant label)."""
+    if y.shape[1] == 1:
+        return (y[:, 0] > 0.5).astype(np.int64), 2
+    return np.argmax(y, axis=1).astype(np.int64), y.shape[1]
+
+
+def dirichlet_cohort(data: SyntheticMultimodal, n_clients: int, alpha: float,
+                     seed: int = 0, power: float = 1.2, min_rows: int = 8,
+                     paired_frac: float = 0.5):
+    """Dirichlet label-skew cohort with power-law client sizes — the
+    standard non-IID FL benchmark construction (Hsu et al. 2019; swept at
+    alpha in {0.1, 0.5, 1.0} across the multimodal-FL literature).
+
+    Each client c draws a class distribution p_c ~ Dirichlet(alpha * 1):
+    alpha -> 0 gives near-single-class clients (extreme skew, maximal
+    client drift), alpha -> inf recovers IID. Client sizes follow a
+    shuffled power law n_c ∝ rank^-``power`` (floored at ``min_rows``),
+    so the cohort mixes data-rich heads with long-tail clients. Rows are
+    drawn WITHOUT replacement from per-class pools of ``data`` (a
+    client's draw is trimmed when its wanted class is exhausted, then
+    topped up from whatever classes still hold rows — every row is used
+    at most once cohort-wide).
+
+    Returns ``(clients, sizes)``: ``clients`` is the FederatedBatcher
+    client-dict list (each row split ``paired_frac`` paired / rest
+    partial, both modalities of the partial rows exposed unimodally —
+    the same layout the straggler cohort uses), ``sizes`` the realized
+    per-client row counts.
+    """
+    if alpha <= 0:
+        raise ValueError(f"dirichlet alpha must be > 0, got {alpha}")
+    if n_clients < 1:
+        raise ValueError(f"n_clients must be >= 1, got {n_clients}")
+    rng = np.random.default_rng(seed)
+    labels, n_classes = _row_labels(data.y)
+    n_rows = len(labels)
+
+    # shuffled power-law sizes normalized onto the dataset
+    raw = 1.0 / np.arange(1, n_clients + 1, dtype=np.float64) ** power
+    raw = rng.permutation(raw)
+    sizes = np.maximum(min_rows,
+                       np.floor(raw / raw.sum() * n_rows).astype(np.int64))
+
+    pools = [list(rng.permutation(np.nonzero(labels == k)[0]))
+             for k in range(n_classes)]
+    clients, realized = [], []
+    for c in range(n_clients):
+        p = rng.dirichlet(np.full(n_classes, float(alpha)))
+        want = rng.multinomial(int(sizes[c]), p)
+        take = []
+        for k in range(n_classes):
+            got = min(int(want[k]), len(pools[k]))
+            take += [pools[k].pop() for _ in range(got)]
+        # top up a trimmed draw from the fullest remaining pools so the
+        # power-law size profile survives pool exhaustion
+        deficit = int(sizes[c]) - len(take)
+        while deficit > 0:
+            k = max(range(n_classes), key=lambda j: len(pools[j]))
+            if not pools[k]:
+                break
+            take.append(pools[k].pop())
+            deficit -= 1
+        idx = np.asarray(sorted(take), np.int64)
+        n_pair = max(1, int(round(paired_frac * len(idx))))
+        pair, part = idx[:n_pair], idx[n_pair:]
+        if len(part) == 0:  # tiny client: reuse its paired rows unimodally
+            part = pair
+        clients.append({
+            "paired_a": data.x_a[pair], "paired_b": data.x_b[pair],
+            "paired_y": data.y[pair],
+            "partial_a": data.x_a[part], "partial_ya": data.y[part],
+            "partial_b": data.x_b[part], "partial_yb": data.y[part],
+        })
+        realized.append(len(idx))
+    return clients, np.asarray(realized, np.int64)

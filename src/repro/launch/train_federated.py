@@ -50,6 +50,7 @@ from repro.core.federation_sharded import (
     init_round_state,
     make_blendfl_round,
 )
+from repro.core.aggregate import SERVER_OPTS, STRATEGIES
 from repro.core.codec import CODECS, make_codec, round_bytes
 from repro.core.partitioner import ClientData, partition
 from repro.core.schedule import POLICIES, telemetry_from_state
@@ -123,7 +124,11 @@ def build_federation(args) -> tuple:
             optimizer=args.optimizer, n_sampled=args.n_sampled,
             policy=getattr(args, "policy", "uniform"),
             codec=getattr(args, "codec", "none"),
-            topk_frac=getattr(args, "topk_frac", 0.25))
+            topk_frac=getattr(args, "topk_frac", 0.25),
+            strategy=getattr(args, "strategy", "blendavg"),
+            fedprox_mu=getattr(args, "fedprox_mu", 0.0),
+            server_opt=getattr(args, "server_opt", "none"),
+            server_lr=getattr(args, "server_lr", 1.0))
     else:
         task = make_task(args.task)
         tr, va, _ = train_val_test(task, args.n_train, args.n_val, 64,
@@ -138,7 +143,11 @@ def build_federation(args) -> tuple:
             n_val=args.n_val, lr=args.lr, optimizer=args.optimizer,
             n_sampled=args.n_sampled, policy=getattr(args, "policy", "uniform"),
             codec=getattr(args, "codec", "none"),
-            topk_frac=getattr(args, "topk_frac", 0.25))
+            topk_frac=getattr(args, "topk_frac", 0.25),
+            strategy=getattr(args, "strategy", "blendavg"),
+            fedprox_mu=getattr(args, "fedprox_mu", 0.0),
+            server_opt=getattr(args, "server_opt", "none"),
+            server_lr=getattr(args, "server_lr", 1.0))
     mesh = make_host_mesh()
     shard = sh.batch_shardings(mesh, batch_specs(spec, ragged=True))
     if store is not None:
@@ -304,6 +313,18 @@ def main() -> None:
                     help="wire codec for the simulated round traffic "
                          "(repro.core.codec): candidate uplink + broadcast "
                          "downlink deltas with error-feedback residuals")
+    ap.add_argument("--strategy", default="blendavg", choices=STRATEGIES,
+                    help="aggregation strategy (repro.core.aggregate): "
+                         "blendavg scored blend | fedavg volume weights | "
+                         "scaffold control variates | fedprox proximal term")
+    ap.add_argument("--fedprox-mu", type=float, default=0.0,
+                    help="FedProx proximal coefficient (requires "
+                         "--strategy fedprox; mu 0 = plain fedavg)")
+    ap.add_argument("--server-opt", default="none", choices=SERVER_OPTS,
+                    help="server-side optimizer on the blended delta "
+                         "(composes with any --strategy)")
+    ap.add_argument("--server-lr", type=float, default=1.0,
+                    help="server-side optimizer learning rate")
     ap.add_argument("--topk-frac", type=float, default=0.25,
                     help="fraction of entries per leaf kept by the "
                          "sparsifying codecs (topk / int8_topk)")

@@ -1,0 +1,293 @@
+"""Aggregation strategy interface (``repro.core.aggregate``).
+
+Covers the strategy family's contracts: config validation and the
+static structure flags; the "stateless adds NO state keys" layout rule
+(default rounds keep the pre-strategy checkpoint layout); the FedProx
+client term and mu=0 ≡ fedavg bit-exactness across full / sampled /
+async rounds; SCAFFOLD's Option-II control-variate update against a
+pure-numpy reference loop; and server-Adam moments surviving the full
+round-state checkpoint path bit-exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregate
+from repro.core.aggregate import StrategyConfig, make_strategy
+from repro.core.encoders import EncoderConfig
+from repro.core.federation import FedConfig, Federation
+from repro.core.partitioner import partition
+from repro.data.synthetic import make_task, train_val_test
+
+
+# --------------------------------------------------- config + state layout --
+
+def test_strategy_config_validation():
+    with pytest.raises(ValueError, match="not in"):
+        StrategyConfig(name="fedrandom")
+    with pytest.raises(ValueError, match="server_opt"):
+        StrategyConfig(server_opt="sgd")
+    with pytest.raises(ValueError, match=">= 0"):
+        StrategyConfig(name="fedprox", fedprox_mu=-0.1)
+    with pytest.raises(ValueError, match="requires strategy 'fedprox'"):
+        StrategyConfig(name="fedavg", fedprox_mu=0.1)
+
+
+def test_strategy_structure_flags():
+    default = StrategyConfig()
+    assert default.score_based and not default.stateful
+    assert not default.client_active
+    scaffold = make_strategy("scaffold")
+    assert scaffold.control and scaffold.stateful and scaffold.client_active
+    assert not scaffold.score_based
+    prox = make_strategy("fedprox", fedprox_mu=0.01)
+    assert prox.prox and prox.client_active and not prox.stateful
+    # fedprox at mu=0 degenerates to plain fedavg: no client term at all
+    assert not make_strategy("fedprox", fedprox_mu=0.0).client_active
+    adam = make_strategy("fedavg", server_opt="adam")
+    assert adam.stateful and not adam.client_active
+
+
+def test_stateless_strategies_add_no_state_keys():
+    """The layout rule that keeps default checkpoints bit-compatible:
+    only scaffold / server-opt strategies own state."""
+    stacked = {"f_A": {"w": jnp.ones((3, 4))}}
+    glob = {"f_A": {"w": jnp.ones(4)}}
+    for scfg in (StrategyConfig(), make_strategy("fedavg"),
+                 make_strategy("fedprox", fedprox_mu=0.1)):
+        assert aggregate.init_state(scfg, stacked, glob) == {}
+    st = aggregate.init_state(make_strategy("scaffold"), stacked, glob)
+    assert set(st) == {"c_global", "c_local"}
+    assert st["c_local"]["f_A"]["w"].shape == (3, 4)
+    st = aggregate.init_state(make_strategy("fedavg", server_opt="adam"),
+                              stacked, glob)
+    assert set(st) == {"srv"} and set(st["srv"]) == {"m", "v", "t"}
+    st = aggregate.init_state(make_strategy("fedavg", server_opt="momentum"),
+                              stacked, glob)
+    assert set(st["srv"]) == {"m", "t"}
+
+
+def test_sharded_round_state_strat_block():
+    """Sharded driver: default rounds carry no "strat" key; scaffold and
+    server-opt rounds carry exactly their state, stacked over C."""
+    from repro.core.federation_sharded import ShardedFedSpec, init_round_state
+
+    kw = dict(n_clients=3, d_hidden=16, n_layers=1, seq_a=4, feat_a=3,
+              seq_b=4, feat_b=3, out_dim=2, n_partial=8, n_frag=8,
+              n_paired=8, n_val=16)
+    assert "strat" not in init_round_state(
+        jax.random.PRNGKey(0), ShardedFedSpec(**kw))
+    state = init_round_state(
+        jax.random.PRNGKey(0), ShardedFedSpec(strategy="scaffold", **kw))
+    assert set(state["strat"]) == {"c_global", "c_local"}
+    for leaf in jax.tree.leaves(state["strat"]["c_local"]):
+        assert leaf.shape[0] == 3
+    state = init_round_state(
+        jax.random.PRNGKey(0),
+        ShardedFedSpec(strategy="fedavg", server_opt="adam", **kw))
+    assert set(state["strat"]) == {"srv"}
+
+
+# ------------------------------------------------------------ client terms --
+
+def test_client_term_prox_and_control():
+    rng = np.random.default_rng(0)
+    g = {"g_A": {"w": jnp.asarray(rng.normal(0, 1, (3, 4)).astype(np.float32))}}
+    p = {"g_A": {"w": jnp.asarray(rng.normal(0, 1, (3, 4)).astype(np.float32))}}
+    anchor = {"g_A": {"w": jnp.asarray(
+        rng.normal(0, 1, (3, 4)).astype(np.float32))}}
+    out = aggregate.client_term(make_strategy("fedprox", fedprox_mu=0.05),
+                                g, p, {"anchor": anchor})
+    np.testing.assert_allclose(
+        np.asarray(out["g_A"]["w"]),
+        np.asarray(g["g_A"]["w"])
+        + 0.05 * (np.asarray(p["g_A"]["w"]) - np.asarray(anchor["g_A"]["w"])),
+        rtol=1e-6)
+    # control: unstacked c_global broadcasts against the stacked rows
+    cg = {"g_A": {"w": jnp.asarray(rng.normal(0, 1, 4).astype(np.float32))}}
+    cl = {"g_A": {"w": jnp.asarray(
+        rng.normal(0, 1, (3, 4)).astype(np.float32))}}
+    out = aggregate.client_term(make_strategy("scaffold"), g, p,
+                                {"c_global": cg, "c_local": cl})
+    np.testing.assert_allclose(
+        np.asarray(out["g_A"]["w"]),
+        np.asarray(g["g_A"]["w"]) + np.asarray(cg["g_A"]["w"])[None]
+        - np.asarray(cl["g_A"]["w"]), rtol=1e-6)
+    # None / inactive strat: grads pass through untouched (the default trace)
+    assert aggregate.client_term(StrategyConfig(), g, p, None) is g
+
+
+# ----------------------------------------------- SCAFFOLD numpy reference --
+
+def test_scaffold_round_matches_numpy_reference():
+    """Option II over two groups with different step counts, K=2 of C=4
+    participants gathered: c_i+ = c_i - c + (anchor - trained)/(steps*lr),
+    c+ = c + frac * mean_i(c_i+ - c_i)."""
+    rng = np.random.default_rng(7)
+    k, lr, frac = 2, 0.05, 2 / 4
+    steps = {"f": 3.0, "g": 1.0}
+    shapes = {"f": (5,), "g": (2, 3)}
+    cg = {grp: {"w": rng.normal(0, 1, s).astype(np.float32)}
+          for grp, s in shapes.items()}
+    cl = {grp: {"w": rng.normal(0, 1, (k,) + s).astype(np.float32)}
+          for grp, s in shapes.items()}
+    anchor = {grp: {"w": rng.normal(0, 1, (k,) + s).astype(np.float32)}
+              for grp, s in shapes.items()}
+    trained = {grp: {"w": rng.normal(0, 1, (k,) + s).astype(np.float32)}
+               for grp, s in shapes.items()}
+
+    new_cg, new_cl = aggregate.scaffold_round(
+        make_strategy("scaffold"),
+        jax.tree.map(jnp.asarray, cg), jax.tree.map(jnp.asarray, cl),
+        jax.tree.map(jnp.asarray, anchor), jax.tree.map(jnp.asarray, trained),
+        steps, lr, frac)
+
+    for grp in shapes:
+        ref_cl = np.stack([
+            cl[grp]["w"][i] - cg[grp]["w"]
+            + (anchor[grp]["w"][i] - trained[grp]["w"][i])
+            / (steps[grp] * lr)
+            for i in range(k)])
+        ref_cg = cg[grp]["w"] + frac * np.mean(ref_cl - cl[grp]["w"], axis=0)
+        np.testing.assert_allclose(np.asarray(new_cl[grp]["w"]), ref_cl,
+                                   rtol=2e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(new_cg[grp]["w"]), ref_cg,
+                                   rtol=2e-5, atol=1e-5)
+
+
+# --------------------------------------------- federation-level semantics --
+
+@pytest.fixture(scope="module")
+def small_fed():
+    spec = make_task("smnist")
+    tr, va, _ = train_val_test(spec, 240, 120, 40, seed=3)
+    clients = partition(tr, 4, frac_paired=0.6, frac_fragmented=0.3,
+                        frac_partial=0.1, seed=4)
+    ecfg = EncoderConfig(d_hidden=16, n_layers=1, enc_type="mlp")
+    return spec, clients, va, ecfg
+
+
+def _run(small_fed, rounds=2, **kw):
+    spec, clients, va, ecfg = small_fed
+    cfg = FedConfig(n_clients=4, rounds=rounds, lr=1e-2, batch_size=32,
+                    seed=0, **kw)
+    fed = Federation.init(jax.random.PRNGKey(0), cfg, spec, ecfg, clients, va)
+    fed.fit()
+    return fed
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_aggregator_alias_fills_strategy():
+    """`aggregator=` (the pre-strategy spelling) and `strategy=` configure
+    the identical federation — the two fields are always equal."""
+    assert FedConfig(aggregator="fedavg") == FedConfig(strategy="fedavg")
+    cfg = FedConfig()
+    assert cfg.strategy == cfg.aggregator == "blendavg"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["full", "sampled", "async"])
+def test_fedprox_mu0_is_fedavg_bitexact(small_fed, mode):
+    """mu=0 kills the proximal term entirely (no strat block, identical
+    trace), so fedprox degenerates to fedavg bit-for-bit — in full
+    participation, K-of-C sampled, and async sampled rounds."""
+    kw = {"full": {}, "sampled": {"n_sampled": 2},
+          "async": {"n_sampled": 2, "async_mode": True}}[mode]
+    a = _run(small_fed, strategy="fedavg", **kw)
+    b = _run(small_fed, strategy="fedprox", fedprox_mu=0.0, **kw)
+    _assert_tree_equal(a.global_models, b.global_models)
+    _assert_tree_equal(a.stacked, b.stacked)
+
+
+def test_scaffold_federation_updates_control_variates(small_fed):
+    """In-host SCAFFOLD: control variates start at zero, move after a
+    sampled round (participants' rows only), and c_global absorbs the
+    K/C-weighted shift."""
+    fed = _run(small_fed, rounds=2, strategy="scaffold", n_sampled=2)
+    st = fed.strat_state
+    assert set(st) >= {"c_global", "c_local"}
+    assert any(float(np.abs(np.asarray(l)).max()) > 0
+               for l in jax.tree.leaves(st["c_global"]))
+    # only ever-sampled clients' c_local rows can be nonzero
+    sampled = set(np.nonzero(fed.part_count)[0].tolist())
+    for leaf in jax.tree.leaves(st["c_local"]):
+        arr = np.asarray(leaf)
+        for c in range(4):
+            if c not in sampled:
+                assert np.abs(arr[c]).max() == 0.0
+
+
+@pytest.mark.slow
+def test_fedprox_pull_shrinks_update_norm(small_fed):
+    """Directional: a large mu pulls clients toward their round anchor,
+    so the global model moves less than under plain fedavg."""
+    a = _run(small_fed, rounds=1, strategy="fedavg")
+    b = _run(small_fed, rounds=1, strategy="fedprox", fedprox_mu=10.0)
+    spec, clients, va, ecfg = small_fed
+    base = Federation.init(jax.random.PRNGKey(0),
+                           FedConfig(n_clients=4, rounds=1, lr=1e-2,
+                                     batch_size=32, seed=0),
+                           spec, ecfg, clients, va).global_models
+
+    def dist(fed):
+        return sum(float(np.linalg.norm(np.asarray(x) - np.asarray(y)))
+                   for x, y in zip(jax.tree.leaves(fed.global_models),
+                                   jax.tree.leaves(base)))
+
+    assert dist(b) < dist(a)
+
+
+# ------------------------------------------- server-opt checkpoint parity --
+
+def _tiny_sharded_batch(spec, rng):
+    from repro.core.federation_sharded import batch_specs
+
+    batch = {}
+    for k, sd in batch_specs(spec).items():
+        if k == "perm_b":
+            batch[k] = jnp.asarray(rng.permutation(
+                spec.n_clients * spec.n_frag).astype(np.int32))
+        elif k.endswith("_y") or k.startswith("partial_y") or k == "val_y":
+            batch[k] = jnp.asarray(
+                (rng.random(sd.shape) < 0.3).astype(np.float32))
+        else:
+            batch[k] = jnp.asarray(rng.normal(0, 1, sd.shape).astype(np.float32))
+    return batch
+
+
+def test_server_adam_moments_checkpoint_parity(tmp_path):
+    """FedAdam server moments ride the full-round-state checkpoint: a
+    save/restore at round 2 then two more rounds is bit-identical to four
+    uninterrupted rounds — moments, t, and the global models."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.core.federation_sharded import (
+        ShardedFedSpec, init_round_state, make_blendfl_round)
+
+    spec = ShardedFedSpec(n_clients=3, d_hidden=16, n_layers=1, seq_a=4,
+                          feat_a=3, seq_b=4, feat_b=3, out_dim=2, n_partial=8,
+                          n_frag=8, n_paired=8, n_val=16, strategy="fedavg",
+                          server_opt="adam", server_lr=0.5)
+    batches = [_tiny_sharded_batch(spec, np.random.default_rng(r))
+               for r in range(4)]
+    rf = jax.jit(make_blendfl_round(spec))
+
+    state = init_round_state(jax.random.PRNGKey(0), spec)
+    for b in batches[:2]:
+        state, _ = rf(state, b)
+    assert int(state["strat"]["srv"]["t"]) == 2
+    save_checkpoint(str(tmp_path), 2, state)
+    restored = restore_checkpoint(str(tmp_path),
+                                  init_round_state(jax.random.PRNGKey(0), spec),
+                                  step=2)
+    _assert_tree_equal(state["strat"], restored["strat"])
+    for b in batches[2:]:
+        state, _ = rf(state, b)
+        restored, _ = rf(restored, b)
+    _assert_tree_equal(state, restored)

@@ -5,8 +5,10 @@ Runs the checker as a subprocess against scratch results directories
 conforming records pass, and one failure per schema rule — unparseable
 JSON, missing envelope keys, record/records ambiguity, non-finite
 numbers (incl. the non-RFC ``NaN`` literal ``json.dump`` emits),
-compile-cache counts < 1, and wire-codec compression fields (ratio < 1,
-zero byte counts; null ``bytes_to_target`` stays valid).
+compile-cache counts < 1, wire-codec compression fields (ratio < 1,
+zero byte counts; null ``bytes_to_target`` stays valid), and
+convergence fields (``rounds_to_target`` null-or-int>=1, AUROCs inside
+the unit interval).
 """
 import json
 import os
@@ -90,6 +92,33 @@ def test_null_bytes_to_target_is_valid(tmp_path):
            {"bench": "comm_codec", "backend": "cpu",
             "records": [{"codec": "topk", "compression_ratio": 2.7,
                          "bytes_per_round": 96816, "bytes_to_target": None,
+                         "compile_cache": 1}]})
+    r = _run(tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_convergence_fields_validated(tmp_path):
+    _write(tmp_path, "BENCH_rounds.json",
+           {"bench": "aggregation", "backend": "cpu",
+            "records": [{"strategy": "scaffold", "rounds_to_target": 0},
+                        {"strategy": "fedavg", "rounds_to_target": 3.5}]})
+    _write(tmp_path, "BENCH_auroc.json",
+           {"bench": "aggregation", "backend": "cpu",
+            "record": {"final_auroc": 1.2}})
+    r = _run(tmp_path)
+    assert r.returncode == 1
+    assert r.stdout.count("rounds-to-target must be an int >= 1") == 2
+    assert "AUROC must be a number in [0, 1]" in r.stdout
+
+
+def test_null_rounds_to_target_is_valid(tmp_path):
+    """`rounds_to_target: null` means the strategy never hit the target
+    within the bench's round budget — a measurement, not a violation."""
+    _write(tmp_path, "BENCH_agg.json",
+           {"bench": "aggregation", "backend": "cpu",
+            "records": [{"strategy": "fedavg", "cohort": "dirichlet",
+                         "rounds_to_target": None, "target_auroc": 0.8,
+                         "final_auroc": 0.76, "best_auroc": 0.79,
                          "compile_cache": 1}]})
     r = _run(tmp_path)
     assert r.returncode == 0, r.stdout + r.stderr

@@ -56,6 +56,19 @@ def test_fedavg_all_zero_samples_raises():
         fedavg(cands, n_samples=[0, 0])
 
 
+def test_nonfinite_global_score_raises():
+    """Regression: a NaN/-inf global score used to silently keep the
+    global model forever (every delta masked / NaN omegas). Broken server
+    scoring is now an explicit error, not a frozen federation."""
+    for bad in (float("nan"), float("-inf"), float("inf")):
+        with pytest.raises(ValueError, match="global_score"):
+            blendavg_weights([0.7, 0.9], global_score=bad)
+    # candidate-side non-finite scores stay legal: they mask that
+    # candidate only (a client that never finished reports -inf)
+    w = blendavg_weights([float("nan"), 0.9], global_score=0.5)
+    assert w[0] == 0.0 and w[1] == 1.0
+
+
 def test_blendavg_weights_staleness_damping():
     """Async Eq. 9-10: staleness damps, renormalizes, and never resurrects
     a non-improver."""

@@ -21,7 +21,13 @@ schema documented in ``docs/benchmarks.md``:
   number >= 1 (a "compressed" payload larger than dense means the byte
   accounting broke) and ``bytes_per_round`` / ``bytes_to_target`` /
   ``bytes_per_message`` are numbers > 0 (zero wire bytes means the
-  accounting saw an empty model tree).
+  accounting saw an empty model tree);
+- convergence fields (the rounds-to-target signal of
+  ``BENCH_participation.json`` / ``BENCH_aggregation.json``):
+  ``rounds_to_target`` is null ("never reached" is a valid outcome) or
+  an integer >= 1, and ``target_auroc`` / ``final_auroc`` /
+  ``best_auroc`` are numbers in [0, 1] (an AUROC outside the unit
+  interval means the metric plumbing broke).
 
 ``benchmarks/results/`` is gitignored, so a fresh checkout has nothing
 to validate — that's a pass (the checker guards whatever records the
@@ -48,6 +54,9 @@ _CACHE_KEYS = ("compile_cache", "caches")
 # allowed for *_to_target fields — "never reached" is a valid outcome)
 _RATIO_KEYS = ("compression_ratio",)
 _BYTES_KEYS = ("bytes_per_round", "bytes_to_target", "bytes_per_message")
+# convergence accounting: rounds null-or-int>=1, AUROCs in the unit interval
+_ROUNDS_KEYS = ("rounds_to_target",)
+_AUROC_KEYS = ("target_auroc", "final_auroc", "best_auroc")
 
 
 def _walk_numbers(node, path, errors):
@@ -89,6 +98,15 @@ def _check_caches(node, path, errors):
                 if v is not None and not (_is_number(v) and v > 0):
                     errors.append(f"{p}: byte count must be a number > 0 "
                                   f"(or null), got {v!r}")
+            elif k in _ROUNDS_KEYS:
+                if v is not None and (isinstance(v, bool)
+                                      or not isinstance(v, int) or v < 1):
+                    errors.append(f"{p}: rounds-to-target must be an int "
+                                  f">= 1 (or null), got {v!r}")
+            elif k in _AUROC_KEYS:
+                if not (_is_number(v) and 0.0 <= v <= 1.0):
+                    errors.append(f"{p}: AUROC must be a number in [0, 1], "
+                                  f"got {v!r}")
             else:
                 _check_caches(v, p, errors)
     elif isinstance(node, list):
