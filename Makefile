@@ -8,7 +8,7 @@ TEST_FAST_BUDGET_S ?= 240
 
 .PHONY: test test-fast docs-check bench-check ci ci-test ci-smoke \
 	bench-sampled bench-loader bench-store bench-participation \
-	bench-comm bench-agg train-federated
+	bench-comm bench-agg bench-scenario train-federated ckpt-inspect
 
 test: docs-check
 	$(PYTEST)
@@ -51,7 +51,10 @@ ci-test: docs-check bench-check
 # (stacked per-client control variates), so CI exercises the
 # scheduler's, the wire codec's, and the aggregation strategies'
 # checkpoint/resume contracts end to end (residual trees and control
-# variates must restore bit-exactly).
+# variates must restore bit-exactly). The three --scenario lanes replay
+# the same contract across CHURN: a mid-run join crosses a capacity
+# bucket (8 -> 16) before the kill point, so the resume restores a
+# grown state — plain, codec, and scaffold variants.
 ci-smoke: train-federated
 	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
 		--rounds 4 --clients 6 --n-sampled 3 --policy omega_ema \
@@ -61,6 +64,18 @@ ci-smoke: train-federated
 		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
 	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
 		--rounds 4 --clients 6 --n-sampled 3 --strategy scaffold \
+		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
+	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
+		--scenario examples/scenarios/ci_join.yaml \
+		--rounds 4 --clients 6 --n-sampled 3 \
+		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
+	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
+		--scenario examples/scenarios/ci_join.yaml --codec int8_topk \
+		--rounds 4 --clients 6 --n-sampled 3 \
+		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
+	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
+		--scenario examples/scenarios/ci_join.yaml --strategy scaffold \
+		--rounds 4 --clients 6 --n-sampled 3 \
 		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
 
 bench-sampled:
@@ -90,6 +105,21 @@ bench-comm:
 # BENCH_aggregation.json.
 bench-agg:
 	PYTHONPATH=src python -m benchmarks.aggregation_bench
+
+# BlendAvg + participation policies under churn (mid-run joins crossing
+# a capacity bucket, departures, label-flipping clients): rounds-to-
+# target AUROC per policy, one compiled round per capacity bucket.
+# Emits BENCH_scenario.json.
+bench-scenario:
+	PYTHONPATH=src python -m benchmarks.scenario_bench
+
+# Print a checkpoint's round, client capacity, store fingerprint, and
+# per-block leaf layout (shapes/dtypes, grouped by the round-state
+# registry) — the debugging surface for state-block migrations.
+ckpt-inspect:
+	PYTHONPATH=src python tools/ckpt_inspect.py $(CKPT_DIR)
+
+CKPT_DIR ?= /tmp/fedckpt
 
 # Smoke lane: tiny ragged federation, 2 rounds, checkpoint at round 1,
 # kill-and-resume, assert bit-exact round-metric parity.

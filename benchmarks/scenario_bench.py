@@ -1,0 +1,230 @@
+"""§Elastic cohorts: participation policies under churn + poisoning.
+
+A federation that starts at C=6 / K=3 and then LIVES: 4 fresh clients
+join at round 3 (crossing the capacity bucket 8 -> 16, which is the one
+re-jit the elastic-state design budgets for), client 2 turns
+label-flipping adversarial at round 4, and clients 0-1 depart at
+round 5. The same ``repro.data.scenario.Scenario`` drives every arm, so
+the bench measures exactly what the scenario harness promises:
+
+  - membership is host-side data — the per-capacity jitted rounds
+    compile once each and their caches stay at 1 across ALL policies
+    and all churn events (growth re-jits per bucket, not per round);
+  - joins help: the blended global model keeps converging after the
+    cohort grows, because joiners' rows adopt the current globals;
+  - adaptive participation (data_volume / omega_ema) routes around the
+    churn at least as well as uniform sampling.
+
+For each policy the bench drives the shared per-bucket rounds through a
+scenario-aware ``FederatedBatcher`` and records rounds to a target
+validation multimodal AUROC (host-side eval, outside the timed region),
+per-round wall time, and the event/capacity accounting that
+``tools/bench_check.py`` validates (event counts >= 0, AUROCs in
+[0, 1], null-or-int rounds_to_target, caches exactly 1).
+
+Emits ``BENCH_scenario.json``. Acceptance: every per-bucket compile
+cache is exactly 1, both capacity buckets (8 and 16) were exercised,
+and at least one policy reaches the target AUROC despite the churn.
+
+    PYTHONPATH=src python -m benchmarks.scenario_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_bench_json
+
+POLICIES = ("uniform", "data_volume", "omega_ema")
+N_INITIAL, K = 6, 3
+TARGET_AUROC = 0.80
+
+
+def _scenario():
+    from repro.data.scenario import Event, Scenario
+
+    return Scenario((
+        Event(round=3, join=4),        # 6 -> 10 clients: bucket 8 -> 16
+        Event(round=4, corrupt=(2,)),  # label-flipping adversary
+        Event(round=5, leave=(0, 1)),  # two departures (rows retired)
+    )).validate(N_INITIAL)
+
+
+def _roster(task, tr, n_paired: int, n_partial: int):
+    """The full 10-client roster (initial cohort + future joiners),
+    partitioned up-front so membership stays a pure function of the
+    round index."""
+    clients, cursor = [], 0
+
+    def take(n):
+        nonlocal cursor
+        sl = slice(cursor, cursor + n)
+        cursor += n
+        return tr.x_a[sl], tr.x_b[sl], tr.y[sl]
+
+    for _ in range(N_INITIAL + _scenario().total_joins()):
+        pa, pb, py = take(n_paired)
+        ua, ub, uy = take(n_partial)
+        clients.append({
+            "paired_a": pa, "paired_b": pb, "paired_y": py,
+            "partial_a": ua, "partial_ya": uy,
+            "partial_b": ub, "partial_yb": uy,
+        })
+    return clients
+
+
+def _build(quick: bool):
+    from repro.core import state as rstate
+    from repro.core.federation_sharded import (
+        ShardedFedSpec, batch_specs, init_round_state, make_blendfl_round)
+    from repro.data.synthetic import make_task, train_val_test
+    from repro.launch import shardings as sh
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train_federated import place_state
+
+    task = make_task("smnist")
+    n_paired, n_partial = (48, 24) if quick else (96, 48)
+    n_total = N_INITIAL + _scenario().total_joins()
+    need = n_total * (n_paired + n_partial) + 64
+    tr, va, _ = train_val_test(task, need, 512, 64, seed=0)
+    clients = _roster(task, tr, n_paired, n_partial)
+
+    cap0 = rstate.capacity_for(N_INITIAL)
+    spec = ShardedFedSpec(
+        n_clients=cap0, d_hidden=32, n_layers=2, seq_a=task.seq_a,
+        feat_a=task.feat_a, seq_b=task.seq_b, feat_b=task.feat_b,
+        out_dim=task.out_dim, kind=task.kind, n_partial=n_partial,
+        n_frag=8, n_paired=n_paired, n_val=512, lr=2e-2,
+        optimizer="adamw", n_sampled=K)
+    mesh = make_host_mesh()
+    shard = sh.batch_shardings(mesh, batch_specs(spec, ragged=True))
+    val = {"val_a": va.x_a, "val_b": va.x_b, "val_y": va.y}
+
+    # one jitted round per capacity bucket, shared across every policy
+    # arm (the sampled ids and the active mask are data, not shapes)
+    caps = sorted({rstate.capacity_for(_scenario().n_clients_at(r, N_INITIAL))
+                   for r in range(64)})
+    round_fns = {c: jax.jit(make_blendfl_round(
+        dataclasses.replace(spec, n_clients=c))) for c in caps}
+
+    # warm every bucket on throwaway states so no arm's s_per_round
+    # carries a compile
+    from repro.data.pipeline import FederatedBatcher
+    wb = FederatedBatcher(clients[:cap0 - 2] + [{}] * 2, spec, val,
+                          seed=0, shardings=shard)
+    wstate = place_state(init_round_state(jax.random.PRNGKey(0), spec), mesh)
+    for _, batch in wb.rounds(0, 1, prefetch=0):
+        jax.block_until_ready(round_fns[caps[0]](wstate, batch)[0])
+        for c in caps[1:]:
+            grown = place_state(rstate.grow(wstate, c), mesh)
+            jax.block_until_ready(round_fns[c](grown, batch)[0])
+    return spec, clients, val, va, shard, mesh, round_fns
+
+
+def _run_policy(policy: str, spec, clients, val, va, shard, mesh, round_fns,
+                rounds: int):
+    """One policy arm: the scenario loop (grow / retire / corrupt) with
+    a host-side AUROC eval per round, eval time subtracted from the
+    reported per-round wall time."""
+    from repro.core import state as rstate
+    from repro.core.federation import eval_multimodal
+    from repro.core.federation_sharded import init_round_state
+    from repro.core.schedule import telemetry_from_state
+    from repro.data.pipeline import FederatedBatcher
+    from repro.launch.train_federated import place_state
+
+    scenario = _scenario()
+    spec = dataclasses.replace(spec, policy=policy)
+    batcher = FederatedBatcher(clients, spec, val, seed=0, shardings=shard,
+                               scenario=scenario, n_initial=N_INITIAL)
+    state = place_state(init_round_state(jax.random.PRNGKey(0), spec), mesh)
+
+    aurocs, eval_spent, to_target = [], 0.0, None
+    t_loop = time.perf_counter()
+    for r in range(rounds):
+        ev = scenario.events_at(r)
+        cap = rstate.capacity_for(scenario.n_clients_at(r, N_INITIAL))
+        if cap > spec.n_clients:
+            state = place_state(rstate.grow(state, cap), mesh)
+            spec = dataclasses.replace(spec, n_clients=cap)
+            batcher.set_spec(spec)
+        if ev is not None and ev.leave:
+            state = place_state(rstate.retire_clients(state, ev.leave), mesh)
+        sched = (telemetry_from_state(state)
+                 if batcher.policy.needs_state else None)
+        batch = batcher.put(batcher.build(r, sched))
+        state, _ = round_fns[spec.n_clients](state, batch)
+        jax.block_until_ready(state["global_models"])
+        t0 = time.perf_counter()
+        g = state["global_models"]
+        auc = eval_multimodal(g["f_A"], g["f_B"], g["g_M"], va.x_a, va.x_b,
+                              va.y, spec.ecfg, spec.kind)
+        eval_spent += time.perf_counter() - t0
+        aurocs.append(auc)
+        if to_target is None and auc >= TARGET_AUROC:
+            to_target = r + 1
+    loop_spent = time.perf_counter() - t_loop
+    return {
+        "policy": policy,
+        "rounds_to_target": to_target,
+        "target_auroc": TARGET_AUROC,
+        "final_auroc": round(aurocs[-1], 4),
+        "best_auroc": round(max(aurocs), 4),
+        "s_per_round": round((loop_spent - eval_spent) / rounds, 4),
+    }
+
+
+def main(quick: bool = False) -> None:
+    print(f"\n=== elastic cohorts: C={N_INITIAL} K={K}, join at r3 "
+          "(bucket 8->16), corrupt at r4, leave at r5 ===")
+    spec, clients, val, va, shard, mesh, round_fns = _build(quick)
+    rounds = 10 if quick else 18
+    scenario = _scenario()
+
+    print(f"{'policy':>12s} {'to_target':>9s} {'final':>7s} {'best':>7s} "
+          f"{'s/round':>8s}")
+    records = []
+    for p in POLICIES:
+        rec = _run_policy(p, spec, clients, val, va, shard, mesh, round_fns,
+                          rounds)
+        records.append(rec)
+        tt = "-" if rec["rounds_to_target"] is None else rec["rounds_to_target"]
+        print(f"{p:>12s} {tt!s:>9s} {rec['final_auroc']:7.3f} "
+              f"{rec['best_auroc']:7.3f} {rec['s_per_round']:8.3f}",
+              flush=True)
+    caches = [int(fn._cache_size()) for fn in round_fns.values()]
+    print(f"per-bucket compile caches across all policies: "
+          f"{dict(zip(round_fns, caches))}")
+
+    # record first, assert after: a failed acceptance still leaves the
+    # measurement on disk for the next comparison
+    write_bench_json("BENCH_scenario.json",
+                     {"bench": "scenario",
+                      "backend": jax.default_backend(),
+                      "n_initial": N_INITIAL, "k": K, "rounds": rounds,
+                      "n_join": scenario.total_joins(),
+                      "n_leave": len(scenario.left_ids(rounds)),
+                      "n_corrupt": len(scenario.corrupt_ids(rounds)),
+                      "capacities": sorted(round_fns),
+                      "caches": caches,
+                      "records": records})
+    assert all(c == 1 for c in caches), \
+        f"each capacity bucket must compile exactly once, got {caches}"
+    assert len(round_fns) == 2, \
+        f"the scenario must cross one capacity bucket (8 -> 16): {round_fns}"
+    reached = [r for r in records if r["rounds_to_target"] is not None]
+    assert reached, (f"no policy reached AUROC {TARGET_AUROC} under churn "
+                     f"in {rounds} rounds")
+    best = min(reached, key=lambda r: r["rounds_to_target"])
+    print(f"--> {best['policy']} reached AUROC {TARGET_AUROC} in "
+          f"{best['rounds_to_target']} rounds despite join/corrupt/leave")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

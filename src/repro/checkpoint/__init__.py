@@ -1,5 +1,5 @@
-from repro.checkpoint.store import (latest_step, read_metadata,
+from repro.checkpoint.store import (latest_step, read_manifest, read_metadata,
                                     restore_checkpoint, save_checkpoint)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "read_metadata"]
+           "read_manifest", "read_metadata"]

@@ -113,6 +113,20 @@ def read_metadata(ckpt_dir: str, step: int | None = None) -> dict:
         return json.load(f).get("metadata", {})
 
 
+def read_manifest(ckpt_dir: str, step: int | None = None) -> dict:
+    """The full manifest of a step (keys/shapes/dtypes/metadata) without
+    loading any arrays — the input to layout inspection
+    (``repro.core.state.manifest_layout``) and capacity-migration
+    dispatch (``manifest_capacity``) before a restore commits to a
+    target tree."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    with open(os.path.join(_step_dir(ckpt_dir, step), "manifest.json")) as f:
+        return json.load(f)
+
+
 def restore_checkpoint(ckpt_dir: str, target_tree, step: int | None = None, sharding=None):
     """Restore into the structure of ``target_tree`` (values replaced)."""
     if step is None:

@@ -56,8 +56,11 @@ import jax.numpy as jnp
 STRATEGIES = ("blendavg", "fedavg", "scaffold", "fedprox")
 SERVER_OPTS = ("none", "adam", "momentum")
 
-# strategy-state trees that carry a leading client axis (gathered /
-# scattered by sampled ids, like the optimizer moment trees)
+# Strategy-state trees that carry a leading client axis (gathered /
+# scattered by sampled ids, like the optimizer moment trees). The
+# canonical declaration is the "strat" block of the round-state registry
+# (``repro.core.state.REGISTRY``); this mirror exists for readers of
+# this module only.
 _STACKED_KEYS = ("c_local",)
 
 
@@ -163,25 +166,20 @@ def init_state(scfg: StrategyConfig, stacked_models: dict,
 def sample_state(state: dict, idx) -> dict:
     """Gather the sampled clients' rows of the stacked strategy trees
     ((C, ...) -> (K, ...)); unstacked entries (c_global, srv moments)
-    pass through untouched — the same contract as ``sample_opt_state``."""
-    from repro.core.engine import sample_clients
+    pass through untouched — the "strat" block of the round-state
+    registry (``repro.core.state``), which owns the semantics."""
+    from repro.core import state as round_state
 
-    out = dict(state)
-    for k in _STACKED_KEYS:
-        if k in state:
-            out[k] = sample_clients(state[k], idx)
-    return out
+    return round_state.sample_block("strat", state, idx)
 
 
 def scatter_state(state: dict, sub: dict, idx) -> dict:
     """Write a sampled round's strategy state back: stacked rows scatter
-    to the sampled positions, unstacked entries replace wholesale."""
-    from repro.core.engine import scatter_clients
+    to the sampled positions, unstacked entries replace wholesale (the
+    registry's "strat" block scatter)."""
+    from repro.core import state as round_state
 
-    out = dict(state)
-    for k, v in sub.items():
-        out[k] = scatter_clients(state[k], v, idx) if k in _STACKED_KEYS else v
-    return out
+    return round_state.scatter_block("strat", state, sub, idx)
 
 
 # ------------------------------------------------------- client-side terms --

@@ -68,15 +68,22 @@ from repro.core.encoders import (
     fusion_apply,
     task_scores,
 )
+from repro.core.state import (  # noqa: F401  (re-exported: the sampling
+    CLIENT_GROUPS,              # primitives and group/moment-key constants
+    OPT_MOMENT_KEYS,            # moved to the round-state block registry,
+    sample_clients,             # repro.core.state, but the engine remains
+    sample_opt_state,           # their historical import surface)
+    scatter_clients,
+    scatter_opt_state,
+)
 from repro.kernels.blendavg.ops import blend_params
 from repro.models.common import dense, sigmoid_bce, softmax_cross_entropy
 
-CLIENT_GROUPS = ("f_A", "g_A", "f_B", "g_B", "g_M")
 UNIMODAL_GROUPS = ("f_A", "g_A", "f_B", "g_B")
 VFL_GROUPS = ("f_A", "f_B")
 PAIRED_GROUPS = ("f_A", "f_B", "g_M")
 
-_STATE_TREES = ("mu", "nu", "mom")  # optimizer-state pytrees mirroring params
+_STATE_TREES = OPT_MOMENT_KEYS  # optimizer-state pytrees mirroring params
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,46 +211,6 @@ def stack_with(stacked_tree, extra_tree):
     tree: (C, ...) ++ (...)  ->  (C+1, ...)."""
     return jax.tree.map(lambda s, e: jnp.concatenate([s, e[None]]), stacked_tree,
                         extra_tree)
-
-
-# --------------------------------------------- K-of-C client sampling ------
-
-def sample_clients(stacked_tree, idx):
-    """Gather the sampled clients' rows of every stacked leaf:
-    (C, ...) -> (K, ...). ``idx`` (K,) int is data, not shape — a fixed K
-    compiles once across different sampled subsets."""
-    idx = jnp.asarray(idx, jnp.int32)
-    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), stacked_tree)
-
-
-def scatter_clients(stacked_tree, sub_tree, idx):
-    """Inverse of ``sample_clients``: write K updated rows back into the
-    full stacked tree at the sampled positions."""
-    idx = jnp.asarray(idx, jnp.int32)
-    return jax.tree.map(lambda full, s: full.at[idx].set(s.astype(full.dtype)),
-                        stacked_tree, sub_tree)
-
-
-def sample_opt_state(opt_state, idx):
-    """Gather an optimizer state's per-client moment pytrees down to the
-    sampled rows; the shared ``step`` counter (and any other non-stacked
-    entries) pass through untouched."""
-    out = dict(opt_state)
-    for f in _STATE_TREES:
-        if f in opt_state:
-            out[f] = sample_clients(opt_state[f], idx)
-    return out
-
-
-def scatter_opt_state(opt_state, sub_state, idx):
-    """Write a sampled round's optimizer state back: moment rows scatter
-    to the sampled positions, the shared ``step`` counter (advanced by the
-    sampled round) replaces the old one."""
-    out = dict(opt_state)
-    for k, v in sub_state.items():
-        out[k] = (scatter_clients(opt_state[k], v, idx)
-                  if k in _STATE_TREES else v)
-    return out
 
 
 # ------------------------------------------------------------- phase math --

@@ -36,7 +36,7 @@ host-side participation policy (``FedConfig.policy``, see
 ``repro.core.schedule`` — uniform by default, bit-exact with the
 pre-scheduler RNG draw) picks K of the C clients; their rows of the stacked
 models/opt-state/batches are gathered to (K, ...) trees (a static-shape
-``engine.sample_clients`` gather — the sampled *indices* are data, so the
+registry gather, ``repro.core.state`` — the sampled *indices* are data, so the
 phase programs still compile exactly once), trained, and scattered back.
 The VFL alignment keeps its static row count; rows whose owner was not
 sampled get row weight 0. With ``FedConfig.async_mode`` the round is the
@@ -62,6 +62,7 @@ from repro.common.tree import tree_unstack
 from repro.core import aggregate as strategies
 from repro.core import codec as wire
 from repro.core import schedule, vfl
+from repro.core import state as rstate
 from repro.core.blendavg import blendavg_weights
 from repro.core.encoders import (
     EncoderConfig,
@@ -75,9 +76,6 @@ from repro.core.engine import (
     EngineConfig,
     RoundEngine,
     sample_clients,
-    sample_opt_state,
-    scatter_clients,
-    scatter_opt_state,
     stack_with,
 )
 from repro.core.partitioner import ClientData, ModalView, fragmented_overlap
@@ -435,10 +433,9 @@ class Federation:
         if scfg.prox:
             strat["anchor"] = anchor
         if scfg.control:
-            strat["c_global"] = self.strat_state["c_global"]
-            strat["c_local"] = (self.strat_state["c_local"] if idxd is None
-                                else sample_clients(
-                                    self.strat_state["c_local"], idxd))
+            sub = strategies.sample_state(self.strat_state, idxd)
+            strat["c_global"] = sub["c_global"]
+            strat["c_local"] = sub["c_local"]
         return strat
 
     def _unimodal_phase(self, strat=None) -> float:
@@ -527,12 +524,13 @@ class Federation:
         if codec_on:
             assert base is not None, "codec rounds must pass the uplink base"
             idxd = None if idx is None else jnp.asarray(idx, jnp.int32)
-            resid = (self.resid_up if idxd is None
-                     else sample_clients(self.resid_up, idxd))
+            resid = rstate.sample_block(
+                "codec", {"resid_up": self.resid_up}, idxd)["resid_up"]
             cand_stacked, resid = self.engine.codec_uplink(cand_stacked, base,
                                                            resid)
-            self.resid_up = (resid if idxd is None else
-                             dict(scatter_clients(self.resid_up, resid, idxd)))
+            self.resid_up = rstate.scatter_block(
+                "codec", {"resid_up": self.resid_up}, {"resid_up": resid},
+                idxd)["resid_up"]
         sub_clients = (self.clients if idx is None
                        else [self.clients[i] for i in idx])
         stale = None
@@ -624,8 +622,9 @@ class Federation:
         # stale weights until they are next sampled.
         glob_groups = {k: self.global_models[k] for k in CLIENT_GROUPS}
         if idx is not None and cfg.async_mode:
-            self.stacked = dict(scatter_clients(
-                self.stacked, fns.broadcast(glob_groups, len(idx)), idx))
+            self.stacked = dict(rstate.scatter_block(
+                "models", self.stacked, fns.broadcast(glob_groups, len(idx)),
+                idx))
             self.last_round[np.asarray(idx)] = self.round_no
         else:
             self.stacked = dict(fns.broadcast(glob_groups, cfg.n_clients))
@@ -654,15 +653,13 @@ class Federation:
         if not scfg.control:
             return
         st = self.strat_state
-        cl = (st["c_local"] if idxd is None
-              else sample_clients(st["c_local"], idxd))
+        cl = strategies.sample_state(st, idxd)["c_local"]
         k = self.cfg.n_clients if idxd is None else int(idxd.shape[0])
         new_cg, new_cl = self.engine.scaffold_round(
             st["c_global"], cl, anchor, trained, self.scaffold_steps,
             k / self.cfg.n_clients)
-        st["c_global"] = new_cg
-        st["c_local"] = (new_cl if idxd is None
-                         else dict(scatter_clients(st["c_local"], new_cl, idxd)))
+        self.strat_state = strategies.scatter_state(
+            st, {**st, "c_global": new_cg, "c_local": new_cl}, idxd)
 
     # ---- K-of-C sampled round ----
 
@@ -716,12 +713,12 @@ class Federation:
         host_rng identically to the pre-scheduler code (bit-exact)."""
         idx = self.policy_obj.select(self.host_rng, self._sched_telemetry())
         idxd = jnp.asarray(idx, jnp.int32)
-        sub = sample_clients(self.stacked, idxd)
+        sub = rstate.sample_block("models", self.stacked, idxd)
         # codec uplink base AND strategy anchor: the weights each
         # participant starts the round from
         base = sub
         strat = self._strat_block(base, idxd)
-        sub_opt = sample_opt_state(self.opt_state, idxd)
+        sub_opt = rstate.sample_block("opt", self.opt_state, idxd)
         uni = sample_clients(self.data["uni"], idxd)
         paired = (sample_clients(self.data["paired"], idxd)
                   if self.data["paired"] is not None else None)
@@ -748,7 +745,8 @@ class Federation:
                 logs["loss_paired"] = float("nan")
         # moments ride home with their clients; the trained weights only
         # matter as aggregation candidates (broadcast decides what sticks)
-        self.opt_state = scatter_opt_state(self.opt_state, sub_opt, idxd)
+        self.opt_state = rstate.scatter_block("opt", self.opt_state, sub_opt,
+                                              idxd)
         self._scaffold_update(base, sub, idxd)
         logs.update(self._aggregate(cand_stacked=sub, idx=idx, base=base))
         return logs

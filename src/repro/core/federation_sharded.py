@@ -67,15 +67,12 @@ import jax.numpy as jnp
 from repro.core import aggregate as strategies
 from repro.core import codec as wire
 from repro.core import schedule
+from repro.core import state as rstate
 from repro.core.encoders import EncoderConfig
 from repro.core.engine import (
     CLIENT_GROUPS,
     EngineConfig,
     make_phase_fns,
-    sample_clients,
-    sample_opt_state,
-    scatter_clients,
-    scatter_opt_state,
     stack_with,
 )
 
@@ -146,6 +143,15 @@ class ShardedFedSpec:
     server_opt: str = "none"  # none | adam | momentum
     server_lr: float = 1.0
 
+    def __post_init__(self):
+        if not 0 <= self.n_sampled <= self.n_clients:
+            raise ValueError(
+                f"n_sampled={self.n_sampled} must be in [0, n_clients="
+                f"{self.n_clients}]: a K-of-C sampled round cannot gather "
+                "more client rows than the federation stacks (jit gathers "
+                "clamp out-of-range ids silently, so this must fail on the "
+                "host)")
+
     @property
     def ecfg(self) -> EncoderConfig:
         return EncoderConfig(d_hidden=self.d_hidden, n_layers=self.n_layers,
@@ -199,40 +205,20 @@ def init_round_state(key, spec: ShardedFedSpec) -> dict:
     state comes from ``fns.srv_opt`` — the optimizer with the server's
     own schedule horizon (``server_total_steps``), not the clients' — so
     the threaded schedule state matches the optimizer that consumes it in
-    ``vfl_step``."""
+    ``vfl_step``.
+
+    The block LAYOUT is not spelled out here — it is the round-state
+    registry's (``repro.core.state.build_round_state``, byte-identical
+    to the historical layout): codec "none" and stateless strategies add
+    no keys, so existing checkpoints restore untouched."""
     stacked, server_gmv, global_models = init_stacked_models(key, spec)
     fns = make_phase_fns(spec.engine_cfg)
-    state = {
-        "models": stacked,
-        "server_gmv": server_gmv,
-        "global_models": global_models,
-        "opt": fns.opt.init({k: stacked[k] for k in CLIENT_GROUPS}),
-        "srv_opt": fns.srv_opt.init(server_gmv),
-        "last_round": jnp.full((spec.n_clients,), -1, jnp.int32),
-        "round": jnp.zeros((), jnp.int32),
-        "sched": schedule.sched_state(spec.n_clients),
-    }
-    if spec.codec != "none":
-        # Error-feedback residuals are round state like everything else:
-        # per-client uplink rows (stacked, gathered/scattered with the
-        # sampled ids exactly like opt moments) + one server-side
-        # downlink tree. Codec "none" adds NO keys, so existing
-        # checkpoints and the uncompressed round are untouched.
-        state["codec"] = {
-            "resid_up": wire.zeros_like_tree(stacked),
-            "resid_down": wire.zeros_like_tree(global_models),
-        }
-    scfg = spec.engine_cfg.strategy
-    if scfg.stateful:
-        # Strategy state follows the same contract: SCAFFOLD's stacked
-        # c_local rows gather/scatter with the sampled ids, c_global and
-        # the server-optimizer moments are global trees. Stateless
-        # strategies (blendavg/fedavg/fedprox, no server opt) add NO
-        # keys, so the default checkpoint layout is byte-identical to
-        # pre-strategy checkpoints.
-        state["strat"] = strategies.init_state(
-            scfg, {k: stacked[k] for k in CLIENT_GROUPS}, global_models)
-    return state
+    return rstate.build_round_state(
+        stacked=stacked, server_gmv=server_gmv, global_models=global_models,
+        opt_state=fns.opt.init({k: stacked[k] for k in CLIENT_GROUPS}),
+        srv_opt_state=fns.srv_opt.init(server_gmv),
+        n_clients=spec.n_clients, codec_on=spec.codec != "none",
+        scfg=spec.engine_cfg.strategy)
 
 
 def make_blendfl_round(spec: ShardedFedSpec):
@@ -357,34 +343,30 @@ def make_blendfl_round(spec: ShardedFedSpec):
         return new_global, infos
 
     def round_fn(state, batch):
-        if spec.n_sampled:
-            idx = batch["sampled"]
-            models = sample_clients(state["models"], idx)
-            opt_state = sample_opt_state(state["opt"], idx)
-            staleness = jnp.maximum(
-                state["round"] - 1 - state["last_round"][idx], 0
-            ).astype(jnp.float32)
-        else:
-            idx = None
-            models, opt_state = state["models"], state["opt"]
-            staleness = None
-        server_gmv, srv_state = state["server_gmv"], state["srv_opt"]
+        # ONE registry-routed gather covers every block: stacked leaves
+        # come down to the K sampled rows ((C,...) -> (K,...), ids as
+        # data), global leaves pass through. Full participation (idx
+        # None) is the identity.
+        idx = batch["sampled"] if spec.n_sampled else None
+        sub = rstate.sample(state, idx)
+        models, opt_state = sub["models"], sub["opt"]
+        staleness = (jnp.maximum(state["round"] - 1 - sub["last_round"], 0)
+                     .astype(jnp.float32) if spec.n_sampled else None)
+        server_gmv, srv_state = sub["server_gmv"], sub["srv_opt"]
         codec_on = spec.codec != "none"
         if codec_on:
             # uplink base: the weights each participant starts this
             # round from (its delta is what crosses the wire), plus its
             # error-feedback residual rows
             base = models
-            resid_up = (sample_clients(state["codec"]["resid_up"], idx)
-                        if spec.n_sampled else state["codec"]["resid_up"])
+            resid_up = sub["codec"]["resid_up"]
         # strategy block for the phase functions: each participant's
         # round-start weights anchor the FedProx pull; SCAFFOLD's c_local
-        # rows gather with the sampled ids exactly like opt moments
+        # rows arrive gathered like opt moments
         anchor = models
         strat = None
         if scfg.control:
-            c_local = (sample_clients(state["strat"]["c_local"], idx)
-                       if spec.n_sampled else state["strat"]["c_local"])
+            c_local = sub["strat"]["c_local"]
         if scfg.client_active:
             strat = {}
             if scfg.prox:
@@ -479,54 +461,48 @@ def make_blendfl_round(spec: ShardedFedSpec):
                 new_global, state["global_models"], state["codec"]["resid_down"])
         bcast = dict(fns.broadcast(
             {k: new_global[k] for k in CLIENT_GROUPS}, K))
-        if spec.n_sampled:
-            models = scatter_clients(state["models"], bcast, idx)
-            opt_state = scatter_opt_state(state["opt"], opt_state, idx)
-            last_round = state["last_round"].at[idx].set(state["round"])
-        else:
-            models = bcast
-            last_round = jnp.full_like(state["last_round"], state["round"])
-        server_gmv = srv_gmv_true
+        # per-participant sync stamp: K rows in a sampled round (the
+        # registry scatters them to the drawn slots), the whole vector at
+        # full participation (idx None replaces wholesale)
+        last_round = (jnp.full((K,), state["round"], jnp.int32)
+                      if spec.n_sampled
+                      else jnp.full_like(state["last_round"], state["round"]))
 
         # participation telemetry for the host-side scheduler: this
         # round's per-client omega (mean over the three heads' Eq. 10
         # weights; omega_M's trailing server-head slot excluded) folds
         # into the EMA at the participants' slots only, mirroring the
         # async broadcast. Pure jnp — the policy choice is host-side, so
-        # the compiled round is identical across policies.
+        # the compiled round is identical across policies. The update
+        # math runs on the gathered rows; WHERE the rows land is the
+        # registry scatter's job.
         cli_omega = (infos["omega_A"] + infos["omega_B"]
                      + infos["omega_M"][: K]) / 3.0
-        sched = state["sched"]
         new_sched = {
-            "omega_ema": schedule.ema_update(sched["omega_ema"], cli_omega,
-                                             spec.ema_beta, idx=idx),
-            "part_count": (sched["part_count"].at[idx].add(1)
-                           if spec.n_sampled else sched["part_count"] + 1),
+            "omega_ema": schedule.ema_update(sub["sched"]["omega_ema"],
+                                             cli_omega, spec.ema_beta),
+            "part_count": sub["sched"]["part_count"] + 1,
             "last_round": last_round,
         }
 
-        new_state = {"models": models, "server_gmv": server_gmv,
-                     "global_models": new_global, "opt": opt_state,
-                     "srv_opt": srv_state, "last_round": last_round,
-                     "round": state["round"] + 1, "sched": new_sched}
+        # ONE registry-routed scatter writes the round back: stacked
+        # rows land at the sampled slots, global blocks replace.
+        updates = {"models": bcast, "server_gmv": srv_gmv_true,
+                   "global_models": new_global, "opt": opt_state,
+                   "srv_opt": srv_state, "last_round": last_round,
+                   "round": state["round"] + 1, "sched": new_sched}
         if codec_on:
-            new_state["codec"] = {
-                "resid_up": (scatter_clients(state["codec"]["resid_up"],
-                                             resid_up, idx)
-                             if spec.n_sampled else resid_up),
-                "resid_down": resid_down,
-            }
+            updates["codec"] = {"resid_up": resid_up,
+                                "resid_down": resid_down}
         if scfg.stateful:
-            new_strat = dict(state["strat"])
+            new_strat = {}
             if scfg.control:
                 new_strat["c_global"] = new_cg
-                new_strat["c_local"] = (
-                    scatter_clients(state["strat"]["c_local"], new_cl, idx)
-                    if spec.n_sampled else new_cl)
+                new_strat["c_local"] = new_cl
             if scfg.server_opt != "none":
                 new_strat["srv"] = srv_moments
-            new_state["strat"] = new_strat
-        state = new_state
+            updates["strat"] = new_strat
+        state = rstate.scatter(state, updates, idx)
         metrics = dict(loss_uni=loss_uni, loss_vfl=loss_vfl,
                        loss_paired=loss_paired, **infos)
         return state, metrics

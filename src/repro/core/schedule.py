@@ -28,6 +28,12 @@ need — see each policy's ``needs_state``):
                        ``ema_update``)
     part_count  (C,)   how many rounds each client has participated in
     rows        (C,)   per-client training-row counts (static data volume)
+    active      (C,)   bool membership mask under a churn scenario
+                       (``repro.data.scenario``): inactive slots (not yet
+                       joined / departed / capacity padding) are never
+                       selected. Absent = everyone is active, and every
+                       policy's rng consumption stays byte-identical to
+                       the pre-scenario code.
 
 ``last_round``/``omega_ema``/``part_count`` live in the drivers' round
 state as the ``sched`` telemetry block (``sched_state``), so they
@@ -139,6 +145,20 @@ class Policy:
     def select(self, rng: np.random.Generator, telemetry: dict) -> np.ndarray:
         raise NotImplementedError
 
+    def _active_ids(self, telemetry: dict) -> np.ndarray | None:
+        """Ids the scenario's membership mask allows this round, or None
+        when no mask is present (the non-scenario fast path — policies
+        must keep their rng consumption unchanged in that case)."""
+        act = telemetry.get("active")
+        if act is None:
+            return None
+        ids = np.flatnonzero(np.asarray(act, bool)[: self.n_clients])
+        if self.k > len(ids):
+            raise ValueError(
+                f"policy {self.name!r} needs k={self.k} participants but "
+                f"only {len(ids)} clients are active this round")
+        return ids
+
     def _top_k(self, keys: np.ndarray, jitter: np.ndarray) -> np.ndarray:
         """Sorted ids of the K largest keys, ties broken by jitter."""
         order = np.lexsort((jitter, -np.asarray(keys, np.float64)))
@@ -152,7 +172,11 @@ class Uniform(Policy):
     name = "uniform"
 
     def select(self, rng, telemetry):
-        return np.sort(rng.choice(self.n_clients, size=self.k, replace=False))
+        ids = self._active_ids(telemetry)
+        if ids is None:
+            return np.sort(rng.choice(self.n_clients, size=self.k,
+                                      replace=False))
+        return np.sort(rng.choice(ids, size=self.k, replace=False))
 
 
 class RoundRobin(Policy):
@@ -169,8 +193,14 @@ class RoundRobin(Policy):
 
     def select(self, rng, telemetry):
         r = int(telemetry["round"])
-        return np.sort((r * self.k + np.arange(self.k)) % self.n_clients
-                       ).astype(np.int64)
+        ids = self._active_ids(telemetry)
+        if ids is None:
+            return np.sort((r * self.k + np.arange(self.k)) % self.n_clients
+                           ).astype(np.int64)
+        # rotate within the active cohort: same coverage guarantee over
+        # the ids that actually exist this round
+        pos = (r * self.k + np.arange(self.k)) % len(ids)
+        return np.sort(ids[pos]).astype(np.int64)
 
 
 class Staleness(Policy):
@@ -183,7 +213,13 @@ class Staleness(Policy):
 
     def select(self, rng, telemetry):
         last = np.asarray(telemetry["last_round"], np.int64)
-        stale = np.maximum(int(telemetry["round"]) - 1 - last, 0)
+        stale = np.maximum(int(telemetry["round"]) - 1 - last, 0
+                           ).astype(np.float64)
+        ids = self._active_ids(telemetry)
+        if ids is not None:
+            mask = np.zeros(self.n_clients, bool)
+            mask[ids] = True
+            stale = np.where(mask, stale, -np.inf)
         return self._top_k(stale, rng.random(self.n_clients))
 
 
@@ -203,9 +239,14 @@ class OmegaEMA(Policy):
         self.pool = min(n_clients, max(k, int(pool_factor) * k))
 
     def select(self, rng, telemetry):
-        pool = rng.choice(self.n_clients, size=self.pool, replace=False)
+        ids = self._active_ids(telemetry)
+        if ids is None:
+            pool = rng.choice(self.n_clients, size=self.pool, replace=False)
+        else:
+            pool = rng.choice(ids, size=min(len(ids), self.pool),
+                              replace=False)
         ema = np.asarray(telemetry["omega_ema"], np.float64)[pool]
-        order = np.lexsort((rng.random(self.pool), -ema))
+        order = np.lexsort((rng.random(len(pool)), -ema))
         return np.sort(pool[order[: self.k]]).astype(np.int64)
 
 
@@ -220,10 +261,19 @@ class DataVolume(Policy):
     def select(self, rng, telemetry):
         w = np.maximum(np.asarray(telemetry["rows"], np.float64), 0.0)
         u = rng.random(self.n_clients)
-        if not (w > 0).any():  # degenerate: nobody holds rows -> uniform
-            return self._top_k(np.zeros(self.n_clients), u)
+        ids = self._active_ids(telemetry)
+        if ids is None:
+            if not (w > 0).any():  # degenerate: nobody holds rows -> uniform
+                return self._top_k(np.zeros(self.n_clients), u)
+            keys = np.where(w > 0, u ** (1.0 / np.maximum(w, 1e-300)), -1.0)
+            return self._top_k(keys, u)
+        # active zero-row clients rank at -1 (picked only when fewer than
+        # K active clients hold data); inactive slots sink to -inf and —
+        # since _active_ids guarantees k <= active count — never surface
         keys = np.where(w > 0, u ** (1.0 / np.maximum(w, 1e-300)), -1.0)
-        return self._top_k(keys, u)
+        mask = np.zeros(self.n_clients, bool)
+        mask[ids] = True
+        return self._top_k(np.where(mask, keys, -np.inf), u)
 
 
 _POLICY_CLASSES = {p.name: p for p in

@@ -1,0 +1,375 @@
+"""Round-state block registry — the single source of state-block layout.
+
+Round state accreted one block per feature across the repo's history:
+stacked client models, optimizer moments, the async ``last_round``
+vector, ``sched`` participation telemetry, ``codec`` error-feedback
+residuals, ``strat`` control variates / server moments. Each block used
+to carry its own bespoke init / sample-by-ids / scatter / checkpoint
+plumbing in BOTH drivers. This module replaces that with one declarative
+registry: a ``BlockSpec`` per block states which leaves carry the
+leading client axis, how the block gathers/scatters under K-of-C
+sampled ids, and how new client rows are filled when the cohort grows —
+and every driver routes through the shared operations below.
+
+The registry is also the seam for **elastic cohorts**: the stacked
+leading-C axis is a *capacity*, not a membership count. ``grow`` pads
+every registered stacked leaf to the next capacity bucket
+(``capacity_for``), so a federation whose cohort crosses a bucket
+boundary recompiles its round program at most once per bucket and the
+compile cache stays 1 within a bucket. Membership itself (who is
+active, joined, left) is host-side scenario data
+(``repro.data.scenario``) — inactive rows are simply never sampled.
+
+Gather/scatter semantics per block, declared by ``BlockSpec.stacked``:
+
+- ``"all"``    every leaf has a leading client axis (models, last_round,
+               sched) — gather/scatter whole-tree by ids.
+- ``"none"``   no leaf is per-client (server head, global models, the
+               round counter) — sampling passes through, scatter
+               replaces wholesale.
+- a tuple      only the named top-level sub-keys are stacked (opt
+               moments vs. the shared ``step``; ``resid_up`` vs. the
+               server-side ``resid_down``; ``c_local`` vs. ``c_global``
+               and ``srv``) — listed keys gather/scatter by ids, the
+               rest replace wholesale.
+
+Everything here is pure jnp and safe under jit: sampled ids stay data,
+never shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregate as strategies
+from repro.core import codec as wire
+from repro.core import schedule
+
+# Model groups of Algorithm 1: per-modality encoders f, unimodal heads
+# g, and the multimodal fusion head g_M. (Canonical home; re-exported by
+# ``repro.core.engine`` where the phase functions consume it.)
+CLIENT_GROUPS = ("f_A", "g_A", "f_B", "g_B", "g_M")
+
+# Optimizer-state pytrees that mirror the params (and therefore carry
+# the leading client axis); everything else in an opt state (the shared
+# ``step`` counter) is global.
+OPT_MOMENT_KEYS = ("mu", "nu", "mom")
+
+# Clients are padded to capacity buckets so cohort growth recompiles at
+# most once per bucket: capacity_for(17) == capacity_for(24) == 24.
+CAPACITY_BUCKET = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """Declarative description of one top-level round-state block.
+
+    ``stacked``: "all" | "none" | tuple of stacked top-level sub-keys.
+    ``fill``: value new client rows take when the cohort grows — a
+    scalar, the sentinel ``"global"`` (new rows adopt the current global
+    models, i.e. a fresh client joins exactly like Algorithm 1's shared
+    init), or a dict of per-sub-key scalars for "all" blocks whose
+    sub-trees fill differently (``sched``).
+    ``optional``: the block may be absent from a state dict (codec
+    "none" / stateless strategies add no keys — the standing checkpoint
+    layout contract).
+    """
+
+    name: str
+    stacked: object = "none"
+    fill: object = 0.0
+    optional: bool = False
+
+
+REGISTRY: tuple[BlockSpec, ...] = (
+    BlockSpec("models", "all", fill="global"),
+    BlockSpec("server_gmv"),
+    BlockSpec("global_models"),
+    BlockSpec("opt", OPT_MOMENT_KEYS, fill=0.0),
+    BlockSpec("srv_opt"),
+    BlockSpec("last_round", "all", fill=-1),
+    BlockSpec("round"),
+    BlockSpec("sched", "all",
+              fill={"omega_ema": 0.0, "part_count": 0, "last_round": -1}),
+    BlockSpec("codec", ("resid_up",), fill=0.0, optional=True),
+    BlockSpec("strat", ("c_local",), fill=0.0, optional=True),
+)
+
+BLOCKS = {b.name: b for b in REGISTRY}
+
+
+def block(name: str) -> BlockSpec:
+    try:
+        return BLOCKS[name]
+    except KeyError:
+        raise KeyError(
+            f"unregistered round-state block {name!r} — every top-level "
+            f"state key must be declared in repro.core.state.REGISTRY "
+            f"(known: {sorted(BLOCKS)})") from None
+
+
+# --------------------------------------------- K-of-C leaf primitives ------
+
+def sample_clients(stacked_tree, idx):
+    """Gather the sampled clients' rows of every stacked leaf:
+    (C, ...) -> (K, ...). ``idx`` (K,) int is data, not shape — a fixed K
+    compiles once across different sampled subsets."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), stacked_tree)
+
+
+def scatter_clients(stacked_tree, sub_tree, idx):
+    """Inverse of ``sample_clients``: write K updated rows back into the
+    full stacked tree at the sampled positions."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return jax.tree.map(lambda full, s: full.at[idx].set(s.astype(full.dtype)),
+                        stacked_tree, sub_tree)
+
+
+# ------------------------------------------------- block-level operations --
+
+def sample_block(name: str, value, idx):
+    """Gather one registered block down to the sampled rows. ``idx`` None
+    (full participation) is the identity; "none" blocks pass through;
+    tuple blocks gather only their stacked sub-keys (absent optional
+    sub-keys are skipped)."""
+    spec = block(name)
+    if idx is None or spec.stacked == "none":
+        return value
+    if spec.stacked == "all":
+        return sample_clients(value, idx)
+    out = dict(value)
+    for k in spec.stacked:
+        if k in value:
+            out[k] = sample_clients(value[k], idx)
+    return out
+
+
+def scatter_block(name: str, full, sub, idx):
+    """Write one block's per-round update back. ``idx`` None replaces
+    wholesale (full participation / global blocks); otherwise stacked
+    leaves scatter the K rows to the sampled positions while a tuple
+    block's unstacked sub-keys replace. Sub-keys absent from ``sub``
+    keep their previous value."""
+    spec = block(name)
+    if idx is None or spec.stacked == "none":
+        return sub
+    if spec.stacked == "all":
+        return scatter_clients(full, sub, idx)
+    out = dict(full)
+    for k, v in sub.items():
+        out[k] = scatter_clients(full[k], v, idx) if k in spec.stacked else v
+    return out
+
+
+def sample(state: dict, idx) -> dict:
+    """Gather a whole round state down to the sampled rows, block by
+    registered block (unknown keys raise — register new blocks, don't
+    smuggle them)."""
+    return {name: sample_block(name, value, idx)
+            for name, value in state.items()}
+
+
+def scatter(state: dict, updates: dict, idx) -> dict:
+    """Write a round's per-block updates back into the full state.
+    Blocks absent from ``updates`` keep their previous value."""
+    out = dict(state)
+    for name, value in updates.items():
+        out[name] = scatter_block(name, state.get(name), value, idx)
+    return out
+
+
+# opt-state views used directly by the engine/tests (back-compat names)
+
+def sample_opt_state(opt_state, idx):
+    """Gather an optimizer state's per-client moment pytrees down to the
+    sampled rows; the shared ``step`` counter (and any other non-stacked
+    entries) pass through untouched."""
+    return sample_block("opt", opt_state, idx)
+
+
+def scatter_opt_state(opt_state, sub_state, idx):
+    """Write a sampled round's optimizer state back: moment rows scatter
+    to the sampled positions, the shared ``step`` counter (advanced by the
+    sampled round) replaces the old one."""
+    return scatter_block("opt", opt_state, sub_state, idx)
+
+
+# ----------------------------------------------------- state construction --
+
+def build_round_state(stacked, server_gmv, global_models, opt_state,
+                      srv_opt_state, n_clients: int, codec_on: bool,
+                      scfg) -> dict:
+    """Assemble the canonical round-state dict from its model/optimizer
+    ingredients — the ONE place the block layout is spelled out. Both
+    drivers' ``init_round_state`` delegate here, and the layout is
+    byte-identical to pre-registry checkpoints: codec "none" and
+    stateless strategies add no keys."""
+    state = {
+        "models": stacked,
+        "server_gmv": server_gmv,
+        "global_models": global_models,
+        "opt": opt_state,
+        "srv_opt": srv_opt_state,
+        "last_round": jnp.full((n_clients,), -1, jnp.int32),
+        "round": jnp.zeros((), jnp.int32),
+        "sched": schedule.sched_state(n_clients),
+    }
+    if codec_on:
+        state["codec"] = {
+            "resid_up": wire.zeros_like_tree(stacked),
+            "resid_down": wire.zeros_like_tree(global_models),
+        }
+    if scfg is not None and scfg.stateful:
+        state["strat"] = strategies.init_state(
+            scfg, {k: stacked[k] for k in CLIENT_GROUPS}, global_models)
+    return state
+
+
+# ------------------------------------------------------- elastic cohorts ---
+
+def capacity_for(n_clients: int, bucket: int = CAPACITY_BUCKET) -> int:
+    """Smallest capacity bucket holding ``n_clients`` slots. Buckets
+    bound recompiles: every cohort size inside a bucket shares one
+    compiled round program."""
+    if n_clients < 1:
+        raise ValueError(f"n_clients={n_clients} must be >= 1")
+    return bucket * ((n_clients + bucket - 1) // bucket)
+
+
+def state_capacity(state: dict) -> int:
+    """Client capacity C a round state was stacked for (the leading axis
+    of its ``last_round`` vector — present in every layout)."""
+    return int(state["last_round"].shape[0])
+
+
+def _pad_rows(leaf, n_new: int, fill):
+    if n_new <= 0:
+        return leaf
+    pad = jnp.full((n_new,) + leaf.shape[1:], fill, leaf.dtype)
+    return jnp.concatenate([leaf, pad], axis=0)
+
+
+def _grow_tree(tree, n_new: int, fill):
+    return jax.tree.map(lambda x: _pad_rows(x, n_new, fill), tree)
+
+
+def _global_rows(state, value, n_new: int):
+    """New-client model rows: broadcast the current global models, so a
+    joining client starts exactly like Algorithm 1's shared init — from
+    the blend everyone else currently agrees on."""
+    glob = {k: state["global_models"][k] for k in value}
+    return jax.tree.map(
+        lambda x, g: jnp.concatenate(
+            [x, jnp.broadcast_to(g[None], (n_new,) + g.shape).astype(x.dtype)],
+            axis=0),
+        value, glob)
+
+
+def grow(state: dict, new_capacity: int) -> dict:
+    """Re-stack every registered block to a larger capacity: existing
+    rows are untouched (bit-exact), new rows take each block's declared
+    fill (models adopt the current globals; moments, residuals, and
+    control variates start at zero; ``last_round`` starts at -1 like a
+    fresh federation). Shrinking in place is refused — retire slots via
+    the scenario's active mask instead (``retire_clients``)."""
+    old = state_capacity(state)
+    if new_capacity < old:
+        raise ValueError(
+            f"cannot shrink round state in place: capacity {old} -> "
+            f"{new_capacity}; retire clients via the scenario active mask")
+    if new_capacity == old:
+        return state
+    n_new = new_capacity - old
+    out = {}
+    for name, value in state.items():
+        spec = block(name)
+        if spec.stacked == "none":
+            out[name] = value
+        elif spec.stacked == "all":
+            if spec.fill == "global":
+                out[name] = _global_rows(state, value, n_new)
+            elif isinstance(spec.fill, dict):
+                out[name] = {k: _grow_tree(v, n_new, spec.fill.get(k, 0))
+                             for k, v in value.items()}
+            else:
+                out[name] = _grow_tree(value, n_new, spec.fill)
+        else:
+            out[name] = {k: (_grow_tree(v, n_new, spec.fill)
+                             if k in spec.stacked else v)
+                         for k, v in value.items()}
+    return out
+
+
+def retire_clients(state: dict, ids) -> dict:
+    """Reset the given client slots to their fresh-join fill values
+    (models back to the current globals, moments/residuals/variates to
+    zero, ``last_round`` to -1). Membership removal itself is the
+    scenario's active mask — retired slots are never sampled again; this
+    just stops a departed client's private state from lingering in
+    checkpoints."""
+    idx = jnp.asarray(ids, jnp.int32)
+
+    def _reset(leaf, fill):
+        rows = jnp.full((idx.shape[0],) + leaf.shape[1:], fill, leaf.dtype)
+        return leaf.at[idx].set(rows)
+
+    def _reset_tree(tree, fill):
+        return jax.tree.map(lambda x: _reset(x, fill), tree)
+
+    out = {}
+    for name, value in state.items():
+        spec = block(name)
+        if spec.stacked == "none":
+            out[name] = value
+        elif spec.stacked == "all":
+            if spec.fill == "global":
+                glob = {k: state["global_models"][k] for k in value}
+                out[name] = jax.tree.map(
+                    lambda x, g: x.at[idx].set(jnp.broadcast_to(
+                        g[None], (idx.shape[0],) + g.shape).astype(x.dtype)),
+                    value, glob)
+            elif isinstance(spec.fill, dict):
+                out[name] = {k: _reset_tree(v, spec.fill.get(k, 0))
+                             for k, v in value.items()}
+            else:
+                out[name] = _reset_tree(value, spec.fill)
+        else:
+            out[name] = {k: (_reset_tree(v, spec.fill)
+                             if k in spec.stacked else v)
+                         for k, v in value.items()}
+    return out
+
+
+# --------------------------------------------------- checkpoint inspection --
+
+def manifest_layout(manifest: dict) -> dict:
+    """Group a checkpoint manifest's flat ``a/b/c`` leaf keys by their
+    top-level state block, in registry order. Returns
+    ``{block_name: [(leaf_path, shape, dtype), ...]}`` with any
+    UNREGISTERED top-level keys collected under ``"?<key>"`` — the drift
+    detector ``tools/ckpt_inspect.py`` prints loudly."""
+    shapes, dtypes = manifest["shapes"], manifest["dtypes"]
+    grouped: dict[str, list] = {}
+    for key in manifest["keys"]:
+        top = key.split("/", 1)[0]
+        name = top if top in BLOCKS else f"?{top}"
+        grouped.setdefault(name, []).append(
+            (key, tuple(shapes[key]), dtypes[key]))
+    order = [b.name for b in REGISTRY]
+    return {name: grouped[name]
+            for name in sorted(grouped, key=lambda n: (
+                order.index(n) if n in BLOCKS else len(order), n))}
+
+
+def manifest_capacity(manifest: dict) -> int:
+    """Client capacity a checkpointed round state was stacked for, read
+    off its ``last_round`` leaf — the migration dispatch key."""
+    try:
+        return int(manifest["shapes"]["last_round"][0])
+    except KeyError:
+        raise KeyError(
+            "checkpoint manifest has no 'last_round' leaf — not a "
+            "round-state checkpoint") from None

@@ -101,6 +101,14 @@ def _rows(ds: dict, key: str) -> int:
     return 0 if v is None else len(v)
 
 
+def _flip(y: np.ndarray, kind: str) -> np.ndarray:
+    """Label corruption for a scenario's adversarial clients — the
+    deterministic flip from ``repro.data.scenario.flip_labels``."""
+    from repro.data.scenario import flip_labels
+
+    return flip_labels(y, kind)
+
+
 class FederatedBatcher:
     """Federated batch loader: C ragged per-client datasets -> one static
     ``(K, N, ...)`` masked round batch per call, double-buffered to device.
@@ -123,22 +131,48 @@ class FederatedBatcher:
         ``jax.device_put``. None = default placement.
     prefetch : staging depth of ``rounds()``; 0 disables the worker
         thread (build strictly alternates with compute).
+    scenario : optional ``repro.data.scenario.Scenario``. The client list
+        then covers the FULL roster (initial cohort + every future
+        joiner, in join order); ``spec.n_clients`` is the current state
+        *capacity* and ``set_spec`` re-binds the loader when the driver
+        grows it. Requires sampled rounds (``spec.n_sampled > 0``): batch
+        shapes are fixed at K, so membership churn never touches them.
+    n_initial : size of the round-0 cohort under a scenario (defaults to
+        the full roster — i.e. no pending joiners).
     """
 
     def __init__(self, clients: list, spec, val: dict, *, seed: int = 0,
-                 shardings=None, prefetch: int = 1):
+                 shardings=None, prefetch: int = 1, scenario=None,
+                 n_initial: int | None = None):
         # dict(c) also accepts the lazy mapping views of a ClientStore
         # (values stay ShardRows — no shard data is read at init)
-        self.clients = [dict(c) for c in clients]
+        self._roster = [dict(c) for c in clients]
         self.store = None  # set by from_store; used for checkpoint identity
-        if len(self.clients) != spec.n_clients:
-            raise ValueError(f"{len(self.clients)} client datasets for "
-                             f"spec.n_clients={spec.n_clients}")
+        self.scenario = scenario
+        self.n_initial = (len(self._roster) if n_initial is None
+                          else int(n_initial))
+        if scenario is None:
+            if len(self._roster) != spec.n_clients:
+                raise ValueError(f"{len(self._roster)} client datasets for "
+                                 f"spec.n_clients={spec.n_clients}")
+        else:
+            if not getattr(spec, "n_sampled", 0):
+                raise ValueError(
+                    "a churn scenario requires sampled rounds (n_sampled "
+                    "> 0): the phase batches are stacked at K, so only the "
+                    "state capacity — never the batch shapes — grows")
+            scenario.validate(self.n_initial)
+            need = self.n_initial + scenario.total_joins()
+            if len(self._roster) < need:
+                raise ValueError(
+                    f"scenario needs {need} client datasets (initial "
+                    f"{self.n_initial} + {scenario.total_joins()} joiners) "
+                    f"but the roster holds {len(self._roster)}")
         paired_keys = [("frag_a", "frag_ids_a"), ("frag_b", "frag_ids_b"),
                        ("frag_a", "frag_y"), ("partial_a", "partial_ya"),
                        ("partial_b", "partial_yb"), ("paired_a", "paired_b"),
                        ("paired_a", "paired_y")]
-        for i, c in enumerate(self.clients):
+        for i, c in enumerate(self._roster):
             for k in c:
                 if k not in CLIENT_KEYS:
                     raise KeyError(f"unknown client dataset key {k!r}")
@@ -148,16 +182,35 @@ class FederatedBatcher:
                         f"client {i}: {ka} has {_rows(c, ka)} rows but {kb} "
                         f"has {_rows(c, kb)} — per-client arrays of one "
                         "group must align row-for-row")
-        self.spec = spec
         self.seed = int(seed)
         self.shardings = shardings
         self.prefetch = int(prefetch)
-        # participation policy for sampled rounds (repro.core.schedule):
-        # selection is host-side data, so the policy never recompiles the
-        # round. Per-client row totals (manifest lengths for store-backed
-        # clients — no shard IO) feed the data_volume policy.
+        self._bind_spec(spec)
+        self.build_seconds = 0.0  # cumulative host batch-build time
+        self.stall_seconds = 0.0  # prefetch mode: consumer time blocked
+        # waiting for a staged batch (the build time prefetch FAILED to hide)
+        self.rounds_built = 0
+        # the replicated val set never changes: transfer once, with the
+        # configured shardings so the jitted round never re-shards it
+        import jax
+
+        self._val = {
+            k: jax.device_put(np.ascontiguousarray(val[k], _F32),
+                              None if shardings is None else shardings.get(k))
+            for k in ("val_a", "val_b", "val_y")}
+
+    def _bind_spec(self, spec):
+        """Bind the loader to a spec (capacity): slice/pad the roster view
+        to ``spec.n_clients`` slots ({}-padded slots hold no data and are
+        masked inactive by the scenario), rebuild the per-client row
+        totals, and re-instantiate the participation policy at the new C.
+        The policy is stateless host code, so re-binding changes nothing
+        about rng consumption for a given (telemetry, k)."""
         from repro.core.schedule import make_policy
 
+        self.spec = spec
+        view = self._roster[: spec.n_clients]
+        self.clients = view + [{}] * (spec.n_clients - len(view))
         policy_name = getattr(spec, "policy", "uniform")
         if getattr(spec, "n_sampled", 0):
             self.policy = make_policy(policy_name, spec.n_clients,
@@ -172,18 +225,11 @@ class FederatedBatcher:
             [sum(_rows(c, k) for k in ("partial_a", "partial_b", "frag_a",
                                        "frag_b", "paired_a"))
              for c in self.clients], np.float64)
-        self.build_seconds = 0.0  # cumulative host batch-build time
-        self.stall_seconds = 0.0  # prefetch mode: consumer time blocked
-        # waiting for a staged batch (the build time prefetch FAILED to hide)
-        self.rounds_built = 0
-        # the replicated val set never changes: transfer once, with the
-        # configured shardings so the jitted round never re-shards it
-        import jax
 
-        self._val = {
-            k: jax.device_put(np.ascontiguousarray(val[k], _F32),
-                              None if shardings is None else shardings.get(k))
-            for k in ("val_a", "val_b", "val_y")}
+    def set_spec(self, spec) -> None:
+        """Re-bind after the driver grew the state capacity (a scenario
+        join crossed a bucket): same roster, new ``spec.n_clients``."""
+        self._bind_spec(spec)
 
     @classmethod
     def from_store(cls, store, spec, val: dict | None = None, *, seed: int = 0,
@@ -241,6 +287,11 @@ class FederatedBatcher:
         K = s.k_round
         if s.n_sampled:
             t = {"round": int(round_no), "rows": self._client_rows}
+            if self.scenario is not None:
+                # membership is a pure function of the round index, so a
+                # resumed run rebuilds the identical mask (and stream)
+                t["active"] = self.scenario.active_mask(
+                    int(round_no), self.n_initial, s.n_clients)
             if sched is not None:
                 t.update(sched)
             elif self.policy.needs_state:
@@ -255,6 +306,10 @@ class FederatedBatcher:
         else:
             idx = np.arange(s.n_clients)
         sub = [self.clients[i] for i in idx]
+        flip = [False] * len(idx)
+        if self.scenario is not None:
+            bad = set(self.scenario.corrupt_ids(int(round_no)))
+            flip = [int(i) in bad for i in idx]
 
         batch = {}
         # phases 1 & 3: padded slabs + 0/1 row masks
@@ -281,7 +336,8 @@ class FederatedBatcher:
                     continue
                 x[k, :n] = ds[xk][sel]
                 if y is not None:
-                    y[k, :n] = ds[yk][sel]
+                    y[k, :n] = (_flip(ds[yk][sel], s.kind) if flip[k]
+                                else ds[yk][sel])
                 if m is not None:
                     m[k, :n] = 1.0
             batch[xk] = x
@@ -305,7 +361,8 @@ class FederatedBatcher:
             sel_b = self._draw(rng, _rows(ds, "frag_b"), nf)
             if len(sel_a):
                 fa[k, : len(sel_a)] = ds["frag_a"][sel_a]
-                fy[k, : len(sel_a)] = ds["frag_y"][sel_a]
+                fy[k, : len(sel_a)] = (_flip(ds["frag_y"][sel_a], s.kind)
+                                       if flip[k] else ds["frag_y"][sel_a])
                 ids_a[k * nf : k * nf + len(sel_a)] = ds["frag_ids_a"][sel_a]
             if len(sel_b):
                 fb[k, : len(sel_b)] = ds["frag_b"][sel_b]
@@ -374,6 +431,11 @@ class FederatedBatcher:
         path regardless of ``prefetch``: each batch builds only after the
         caller's previous round updated the state the telemetry reads.
         State-free policies keep the full prefetch overlap."""
+        if self.scenario is not None:
+            raise ValueError(
+                "rounds() cannot stream a churn scenario: capacity (and "
+                "with it this loader's spec) may change between rounds — "
+                "drive build()/put() round-by-round from the scenario loop")
         if (self.policy is not None and self.policy.needs_state):
             if telemetry_fn is None:
                 raise ValueError(

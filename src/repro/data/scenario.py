@@ -1,0 +1,228 @@
+"""Churn scenarios — declarative mid-run cohort events for a federation.
+
+Real federations are not fixed cohorts: hospitals onboard mid-study,
+clients drop out, and some turn adversarial. A ``Scenario`` is a sorted
+list of per-round events:
+
+    join     int — this many fresh clients join BEFORE round r runs
+             (their model rows adopt the current globals; their data was
+             partitioned up-front but held out of the active set)
+    leave    tuple of client ids that depart before round r (their state
+             rows are retired; they are never sampled again)
+    corrupt  tuple of client ids whose labels flip starting at round r
+             (a label-flipping adversary — the classic poisoning model)
+
+Membership is pure host-side bookkeeping over the round index: the
+stacked round state only ever grows (to capacity buckets, see
+``repro.core.state.capacity_for``); who is *active* at round r is the
+boolean mask ``active_mask(r, ...)``, consumed by the participation
+policies so inactive rows are simply never sampled. All queries are
+pure functions of (events, r) — a resumed run at round r sees exactly
+the membership the original run saw, which is what keeps
+``--selftest-resume`` bit-exact across churn.
+
+Scenario files are YAML::
+
+    events:
+      - round: 3
+        join: 4
+      - round: 5
+        leave: [0, 1]
+        corrupt: [2]
+
+Parsed with PyYAML when available; otherwise a built-in mini-parser
+covers exactly this shape (the CI image has no yaml), so scenario files
+load identically everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One round's cohort changes, applied BEFORE the round runs."""
+
+    round: int
+    join: int = 0
+    leave: tuple = ()
+    corrupt: tuple = ()
+
+    def __post_init__(self):
+        if self.round < 1:
+            raise ValueError(
+                f"scenario events start at round 1 (round 0 membership is "
+                f"the --clients flag), got round={self.round}")
+        if self.join < 0:
+            raise ValueError(f"join must be >= 0, got {self.join}")
+        object.__setattr__(self, "leave", tuple(int(i) for i in self.leave))
+        object.__setattr__(self, "corrupt",
+                           tuple(int(i) for i in self.corrupt))
+        if any(i < 0 for i in self.leave + self.corrupt):
+            raise ValueError(f"client ids must be >= 0: {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """An immutable, round-sorted event list with pure membership queries.
+
+    Client ids are global and stable: the initial cohort is
+    ``0..n_initial-1``, joiners take the next ids in join order, and a
+    departed id is never reused (its state row is retired, its slot
+    masked inactive forever).
+    """
+
+    events: tuple = ()
+
+    def __post_init__(self):
+        evs = tuple(sorted(self.events, key=lambda e: e.round))
+        rounds = [e.round for e in evs]
+        if len(set(rounds)) != len(rounds):
+            raise ValueError(f"duplicate event rounds: {sorted(rounds)}")
+        object.__setattr__(self, "events", evs)
+
+    def total_joins(self) -> int:
+        return sum(e.join for e in self.events)
+
+    def events_at(self, r: int) -> Event | None:
+        """The event applied before round ``r`` runs, if any."""
+        for e in self.events:
+            if e.round == r:
+                return e
+        return None
+
+    def n_clients_at(self, r: int, n_initial: int) -> int:
+        """Total ids EVER assigned once all events with round <= r have
+        been applied (departed clients still count — ids are never
+        reused). ``r = -1`` (before any event) is ``n_initial``."""
+        return n_initial + sum(e.join for e in self.events if e.round <= r)
+
+    def left_ids(self, r: int) -> tuple:
+        return tuple(sorted(i for e in self.events if e.round <= r
+                            for i in e.leave))
+
+    def corrupt_ids(self, r: int) -> tuple:
+        return tuple(sorted(i for e in self.events if e.round <= r
+                            for i in e.corrupt))
+
+    def active_mask(self, r: int, n_initial: int, capacity: int) -> np.ndarray:
+        """(capacity,) bool: which state rows hold an active member when
+        round ``r`` runs. Rows past ``n_clients_at(r)`` are padding;
+        departed ids are off."""
+        n = self.n_clients_at(r, n_initial)
+        if n > capacity:
+            raise ValueError(f"{n} clients exceed state capacity {capacity}")
+        mask = np.zeros(capacity, bool)
+        mask[:n] = True
+        left = [i for i in self.left_ids(r) if i < capacity]
+        mask[left] = False
+        return mask
+
+    def validate(self, n_initial: int) -> "Scenario":
+        """Check event ids against the cohort each event sees: you cannot
+        remove or corrupt a client that has not joined yet (or at all),
+        and a departed client cannot depart twice."""
+        gone: set = set()
+        for e in self.events:
+            n = self.n_clients_at(e.round, n_initial)
+            for i in e.leave + e.corrupt:
+                if i >= n:
+                    raise ValueError(
+                        f"round {e.round} references client {i}, but only "
+                        f"{n} ids exist by then")
+            dup = gone.intersection(e.leave)
+            if dup:
+                raise ValueError(
+                    f"round {e.round} removes already-departed clients "
+                    f"{sorted(dup)}")
+            gone.update(e.leave)
+        return self
+
+
+def flip_labels(y: np.ndarray, kind: str) -> np.ndarray:
+    """Label-flipping corruption: binary/multilabel targets invert
+    (y -> 1 - y); multiclass one-hot rows rotate to the next class
+    (``np.roll`` along the class axis) — both are the standard
+    deterministic poisoning transforms, so a corrupt client's batches
+    stay a pure function of (seed, round) and resume stays bit-exact."""
+    y = np.asarray(y)
+    if kind == "multiclass":
+        return np.roll(y, 1, axis=-1)
+    return (1.0 - y).astype(y.dtype)
+
+
+# ------------------------------------------------------------- file loading --
+
+def _mini_yaml(text: str) -> dict:
+    """Restricted YAML subset parser for scenario files (the CI image has
+    no PyYAML): a top-level ``events:`` key, ``- key: value`` list items
+    with two-space continuation lines, int scalars, and inline
+    ``[a, b]`` int lists. Comments and blank lines are ignored."""
+
+    def scalar(tok: str):
+        tok = tok.strip()
+        if tok.startswith("[") and tok.endswith("]"):
+            body = tok[1:-1].strip()
+            return [int(t) for t in body.split(",")] if body else []
+        return int(tok)
+
+    events, current = [], None
+    lines = [ln.split("#", 1)[0].rstrip() for ln in text.splitlines()]
+    in_events = False
+    for ln in lines:
+        if not ln.strip():
+            continue
+        if not ln.startswith(" "):
+            if ln.rstrip(":") != "events":
+                raise ValueError(f"mini-yaml: unsupported top-level {ln!r}")
+            in_events = True
+            continue
+        if not in_events:
+            raise ValueError(f"mini-yaml: content before 'events:': {ln!r}")
+        item = ln.strip()
+        if item.startswith("- "):
+            current = {}
+            events.append(current)
+            item = item[2:]
+        elif current is None:
+            raise ValueError(f"mini-yaml: mapping line outside an item: {ln!r}")
+        key, _, val = item.partition(":")
+        if not _:
+            raise ValueError(f"mini-yaml: expected 'key: value', got {ln!r}")
+        current[key.strip()] = scalar(val)
+    return {"events": events}
+
+
+def parse_scenario(doc: dict) -> Scenario:
+    """Build a Scenario from a parsed document (the shape both PyYAML and
+    the mini-parser produce)."""
+    if not isinstance(doc, dict) or "events" not in doc:
+        raise ValueError("scenario file must be a mapping with an "
+                         "'events' list")
+    evs = []
+    for item in doc["events"] or []:
+        unknown = set(item) - {"round", "join", "leave", "corrupt"}
+        if unknown:
+            raise ValueError(f"unknown scenario event keys: {sorted(unknown)}")
+        if "round" not in item:
+            raise ValueError(f"scenario event missing 'round': {item}")
+        evs.append(Event(round=int(item["round"]),
+                         join=int(item.get("join", 0)),
+                         leave=tuple(item.get("leave", ())),
+                         corrupt=tuple(item.get("corrupt", ()))))
+    return Scenario(tuple(evs))
+
+
+def load_scenario(path: str) -> Scenario:
+    """Load a scenario YAML file; PyYAML when importable, the built-in
+    mini-parser otherwise (identical result for the supported subset)."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        import yaml
+        doc = yaml.safe_load(text)
+    except ImportError:
+        doc = _mini_yaml(text)
+    return parse_scenario(doc)

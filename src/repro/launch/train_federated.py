@@ -37,13 +37,15 @@ against a different store fails loudly instead of silently diverging.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import numpy as np
 
-from repro.checkpoint import (latest_step, read_metadata, restore_checkpoint,
+from repro.checkpoint import (latest_step, read_manifest, restore_checkpoint,
                               save_checkpoint)
+from repro.core import state as rstate
 from repro.core.federation_sharded import (
     ShardedFedSpec,
     batch_specs,
@@ -55,6 +57,7 @@ from repro.core.codec import CODECS, make_codec, round_bytes
 from repro.core.partitioner import ClientData, partition
 from repro.core.schedule import POLICIES, telemetry_from_state
 from repro.data.pipeline import FederatedBatcher
+from repro.data.scenario import load_scenario
 from repro.data.store import ClientStore, write_store
 from repro.data.synthetic import make_task, train_val_test
 from repro.launch import shardings as sh
@@ -111,6 +114,14 @@ def build_federation(args) -> tuple:
     drawn row subsets are ever materialized)."""
     # static per-round capacities sized to the ragged partition
     n_partial = max(args.rows_cap, 1)
+    scenario = None
+    if getattr(args, "scenario", None):
+        scenario = load_scenario(args.scenario)
+        if getattr(args, "store_dir", None):
+            raise SystemExit(
+                "--scenario does not compose with --store-dir: a store's "
+                "client count is fixed at import, a scenario's roster "
+                "grows — partition in-memory data instead")
     store = None
     if getattr(args, "store_dir", None):
         store = ClientStore(args.store_dir)
@@ -133,10 +144,25 @@ def build_federation(args) -> tuple:
         task = make_task(args.task)
         tr, va, _ = train_val_test(task, args.n_train, args.n_val, 64,
                                    seed=args.data_seed)
-        clients = partition(tr, args.clients, seed=args.data_seed,
+        # under a scenario the FULL roster (initial cohort + every future
+        # joiner) is partitioned up-front — a joiner's data exists from
+        # round 0 but its slot stays inactive until its join event — and
+        # spec.n_clients is the state CAPACITY for the cohort size at the
+        # (possibly resumed) start round, bucketed so growth recompiles
+        # at most once per bucket
+        n_part = args.clients
+        n_cap = args.clients
+        if scenario is not None:
+            scenario.validate(args.clients)
+            n_part = args.clients + scenario.total_joins()
+            r0 = ((latest_step(args.ckpt_dir) or 0)
+                  if getattr(args, "ckpt_dir", None) else 0)
+            n_cap = rstate.capacity_for(
+                scenario.n_clients_at(r0 - 1, args.clients))
+        clients = partition(tr, n_part, seed=args.data_seed,
                             dirichlet_alpha=args.dirichlet_alpha)
         spec = ShardedFedSpec(
-            n_clients=args.clients, d_hidden=args.d_hidden, n_layers=args.n_layers,
+            n_clients=n_cap, d_hidden=args.d_hidden, n_layers=args.n_layers,
             seq_a=task.seq_a, feat_a=task.feat_a, seq_b=task.seq_b,
             feat_b=task.feat_b, out_dim=task.out_dim, kind=task.kind,
             n_partial=n_partial, n_frag=n_partial, n_paired=n_partial,
@@ -158,7 +184,8 @@ def build_federation(args) -> tuple:
         batcher = FederatedBatcher(
             [client_arrays(cd) for cd in clients], spec,
             {"val_a": va.x_a, "val_b": va.x_b, "val_y": va.y},
-            seed=args.seed, shardings=shard, prefetch=args.prefetch)
+            seed=args.seed, shardings=shard, prefetch=args.prefetch,
+            scenario=scenario, n_initial=args.clients)
     return spec, batcher, jax.jit(make_blendfl_round(spec)), mesh
 
 
@@ -211,6 +238,68 @@ def _fingerprint(batcher) -> str | None:
     return batcher.store.fingerprint() if batcher.store is not None else None
 
 
+def run_scenario(args, spec, batcher, round_fn, mesh, start: int, state: dict,
+                 log=print):
+    """Drive rounds [start, args.rounds) under the batcher's churn
+    scenario: before each round, apply its events — grow the state to the
+    round's capacity bucket (one re-jit per NEW bucket; the per-bucket
+    round functions live in the returned dict and each compiles exactly
+    once), retire departing clients' state rows — then build the round
+    batch against the scenario's active mask. Returns
+    ``(history, round_fns, spec, state)``.
+
+    Membership is a pure function of the round index, so a resumed run
+    replays the identical capacity/event sequence from ``start`` and the
+    bit-exact resume contract survives churn unchanged.
+    """
+    scenario = batcher.scenario
+    round_fns = {spec.n_clients: round_fn}
+    history = []
+    fp = _fingerprint(batcher)
+    t0 = time.time()
+    for r in range(start, args.rounds):
+        ev = scenario.events_at(r)
+        n_now = scenario.n_clients_at(r, batcher.n_initial)
+        cap = rstate.capacity_for(n_now)
+        if cap > spec.n_clients:
+            log(f"round {r}: cohort grows to {n_now} clients -> capacity "
+                f"{cap} (new bucket, one re-jit)")
+            state = place_state(rstate.grow(state, cap), mesh)
+            spec = dataclasses.replace(spec, n_clients=cap)
+            batcher.set_spec(spec)
+            if cap not in round_fns:
+                round_fns[cap] = jax.jit(make_blendfl_round(spec))
+        if ev is not None and ev.leave:
+            log(f"round {r}: clients {list(ev.leave)} depart "
+                "(state rows retired, never sampled again)")
+            state = place_state(rstate.retire_clients(state, ev.leave), mesh)
+        if ev is not None and ev.corrupt:
+            log(f"round {r}: clients {list(ev.corrupt)} turn adversarial "
+                "(labels flipped from this round on)")
+        sched = (telemetry_from_state(state)
+                 if batcher.policy is not None and batcher.policy.needs_state
+                 else None)
+        batch = batcher.put(batcher.build(r, sched))
+        state, metrics = round_fns[spec.n_clients](state, batch)
+        row = {k: float(np.asarray(v)) for k, v in metrics.items()
+               if np.asarray(v).ndim == 0}
+        row["round"] = r
+        history.append(row)
+        if args.log_every and (r + 1) % args.log_every == 0:
+            log(f"round {r + 1:4d} loss_uni {row['loss_uni']:.4f} "
+                f"loss_vfl {row['loss_vfl']:.4f} "
+                f"loss_paired {row['loss_paired']:.4f} "
+                f"[{n_now} clients / cap {spec.n_clients}] "
+                f"({(time.time() - t0) / (r + 1 - start):.2f}s/round)")
+        if args.ckpt_dir and args.ckpt_every and (r + 1) % args.ckpt_every == 0:
+            meta = {"round": r + 1, "loss_uni": row["loss_uni"]}
+            if fp is not None:
+                meta["store_fingerprint"] = fp
+            out = save_checkpoint(args.ckpt_dir, r + 1, state, meta)
+            log(f"checkpointed round {r + 1} -> {out}")
+    return history, round_fns, spec, state
+
+
 def init_or_restore(args, spec, mesh, store_fingerprint: str | None = None
                     ) -> tuple[int, dict]:
     """Fresh ``init_round_state`` or the latest full-state checkpoint.
@@ -224,7 +313,8 @@ def init_or_restore(args, spec, mesh, store_fingerprint: str | None = None
     start = 0
     if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
         start = latest_step(args.ckpt_dir)
-        want = read_metadata(args.ckpt_dir, start).get("store_fingerprint")
+        manifest = read_manifest(args.ckpt_dir, start)
+        want = manifest.get("metadata", {}).get("store_fingerprint")
         if want is not None and store_fingerprint is None:
             raise ValueError(
                 f"checkpoint at {args.ckpt_dir} round {start} was written "
@@ -241,7 +331,29 @@ def init_or_restore(args, spec, mesh, store_fingerprint: str | None = None
             print("note: resuming a checkpoint with no store fingerprint "
                   "from a store-backed run (ok if the store was imported "
                   "from the same dataset)")
-        state = restore_checkpoint(args.ckpt_dir, state, step=start)
+        # capacity migration: a checkpoint stacked for fewer client slots
+        # restores bit-exactly into its own capacity, then grows — never
+        # silently reinitializes; shrinking in place is refused outright
+        ckpt_cap = rstate.manifest_capacity(manifest)
+        if ckpt_cap > spec.n_clients:
+            raise ValueError(
+                f"checkpoint at {args.ckpt_dir} round {start} holds "
+                f"{ckpt_cap} client slots but this federation was built "
+                f"for {spec.n_clients} — shrinking a cohort in place is "
+                f"not supported (retire clients via a scenario instead); "
+                f"rerun with --clients >= {ckpt_cap}")
+        if ckpt_cap < spec.n_clients:
+            print(f"migrating checkpoint: {ckpt_cap} client slots -> "
+                  f"capacity {spec.n_clients} (existing rows restore "
+                  "bit-exactly; new rows take each block's declared fill)")
+            template = init_round_state(
+                jax.random.PRNGKey(args.seed),
+                dataclasses.replace(spec, n_clients=ckpt_cap))
+            state = rstate.grow(
+                restore_checkpoint(args.ckpt_dir, template, step=start),
+                spec.n_clients)
+        else:
+            state = restore_checkpoint(args.ckpt_dir, state, step=start)
         print(f"restored full round state at round {start} from {args.ckpt_dir}")
     return start, place_state(state, mesh)
 
@@ -292,6 +404,71 @@ def selftest_resume(args) -> None:
           f"policy={getattr(args, 'policy', 'uniform')})")
 
 
+def selftest_resume_scenario(args) -> None:
+    """Churn resume smoke: a federation killed and resumed mid-scenario —
+    across a cohort-growth event — reproduces the uninterrupted run's
+    round metrics bit-for-bit, with every capacity bucket's round
+    function compiling exactly once in every leg."""
+    import tempfile
+
+    assert args.rounds >= 2, "resume selftest needs >= 2 rounds"
+    mid = args.rounds // 2
+
+    def fresh(a):
+        spec, batcher, round_fn, mesh = build_federation(a)
+        start, state = init_or_restore(a, spec, mesh, None)
+        return spec, batcher, round_fn, mesh, start, state
+
+    def check_caches(fns, leg):
+        for cap, fn in fns.items():
+            n = int(fn._cache_size())
+            assert n == 1, (f"{leg}: capacity-{cap} round function "
+                            f"compiled {n}x (expected exactly once)")
+
+    spec, batcher, round_fn, mesh, _, state = fresh(
+        argparse.Namespace(**{**vars(args), "ckpt_dir": None}))
+    scenario = batcher.scenario
+    joins = [e.round for e in scenario.events if e.join]
+    assert joins and min(joins) < args.rounds, \
+        "the scenario resume selftest needs a join event inside the run"
+    caps_seen = {rstate.capacity_for(scenario.n_clients_at(r, args.clients))
+                 for r in range(args.rounds)}
+
+    ref_args = argparse.Namespace(**{**vars(args), "ckpt_dir": None})
+    ref, ref_fns, _, _ = run_scenario(ref_args, spec, batcher, round_fn,
+                                      mesh, 0, state)
+    check_caches(ref_fns, "reference")
+    assert len(ref_fns) == len(caps_seen), \
+        f"{len(ref_fns)} compiled buckets for {len(caps_seen)} capacities"
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        a1 = argparse.Namespace(**{**vars(args), "ckpt_dir": ckpt_dir,
+                                   "ckpt_every": mid, "rounds": mid})
+        spec1, b1, fn1, mesh1, _, st1 = fresh(a1)
+        part1, fns1, _, _ = run_scenario(a1, spec1, b1, fn1, mesh1, 0, st1)
+        check_caches(fns1, "pre-kill")
+        # "crash": rebuild from scratch; build_federation sizes the spec
+        # to the checkpointed round's capacity, init_or_restore restores
+        a2 = argparse.Namespace(**{**vars(args), "ckpt_dir": ckpt_dir})
+        spec2, b2, fn2, mesh2, start, st2 = fresh(a2)
+        assert start == mid, f"expected restore at round {mid}, got {start}"
+        part2, fns2, _, _ = run_scenario(a2, spec2, b2, fn2, mesh2, start, st2)
+        check_caches(fns2, "resumed")
+
+    resumed = part1 + part2
+    assert len(resumed) == len(ref)
+    for got, want in zip(resumed, ref):
+        for k in want:
+            if not (got[k] == want[k] or (np.isnan(got[k]) and np.isnan(want[k]))):
+                raise AssertionError(
+                    f"scenario resume parity broken at round {want['round']}: "
+                    f"{k} {got[k]!r} != {want[k]!r}")
+    print(f"scenario resume parity OK: {len(ref)} rounds bit-identical "
+          f"across churn (interrupted at round {mid}, capacities "
+          f"{sorted(caps_seen)}, codec={getattr(args, 'codec', 'none')}, "
+          f"strategy={getattr(args, 'strategy', 'blendavg')})")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("command", nargs="?", choices=["import"], default=None,
@@ -304,6 +481,11 @@ def main() -> None:
                     help="import: replace an existing store directory")
     ap.add_argument("--task", default="smnist")
     ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--scenario", default=None,
+                    help="churn scenario YAML (repro.data.scenario): "
+                         "join/leave/corrupt events per round; requires "
+                         "--n-sampled > 0, grows state capacity in "
+                         "buckets (see examples/scenarios/)")
     ap.add_argument("--n-sampled", type=int, default=0)
     ap.add_argument("--policy", default="uniform", choices=POLICIES,
                     help="participation policy for K-of-C sampled rounds "
@@ -352,7 +534,10 @@ def main() -> None:
         import_store(args)
         return
     if args.selftest_resume:
-        selftest_resume(args)
+        if args.scenario:
+            selftest_resume_scenario(args)
+        else:
+            selftest_resume(args)
         return
     spec, batcher, round_fn, mesh = build_federation(args)
     start, state = init_or_restore(args, spec, mesh, _fingerprint(batcher))
@@ -363,7 +548,10 @@ def main() -> None:
         print(f"codec {spec.codec} (topk_frac={spec.topk_frac}): "
               f"{rb['bytes_per_round']:,} bytes/round, "
               f"{rb['compression_ratio']:.1f}x vs dense fp32")
-    run(args, spec, batcher, round_fn, start, state)
+    if batcher.scenario is not None:
+        run_scenario(args, spec, batcher, round_fn, mesh, start, state)
+    else:
+        run(args, spec, batcher, round_fn, start, state)
     print(f"done ({args.rounds - start} rounds; host batch-build "
           f"{batcher.build_seconds:.2f}s over {batcher.rounds_built} builds).")
 

@@ -8,7 +8,8 @@ numbers (incl. the non-RFC ``NaN`` literal ``json.dump`` emits),
 compile-cache counts < 1, wire-codec compression fields (ratio < 1,
 zero byte counts; null ``bytes_to_target`` stays valid), and
 convergence fields (``rounds_to_target`` null-or-int>=1, AUROCs inside
-the unit interval).
+the unit interval), and scenario event counts (``n_join`` / ``n_leave``
+/ ``n_corrupt`` int >= 0).
 """
 import json
 import os
@@ -120,6 +121,30 @@ def test_null_rounds_to_target_is_valid(tmp_path):
                          "rounds_to_target": None, "target_auroc": 0.8,
                          "final_auroc": 0.76, "best_auroc": 0.79,
                          "compile_cache": 1}]})
+    r = _run(tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_event_counts_validated(tmp_path):
+    _write(tmp_path, "BENCH_events.json",
+           {"bench": "scenario", "backend": "cpu",
+            "records": [{"policy": "uniform", "n_join": -1},
+                        {"policy": "omega_ema", "n_leave": 1.5},
+                        {"policy": "data_volume", "n_corrupt": True}]})
+    r = _run(tmp_path)
+    assert r.returncode == 1
+    assert r.stdout.count("scenario event count must be an int >= 0") == 3
+
+
+def test_zero_event_counts_are_valid(tmp_path):
+    """A churn-free scenario record (all counts 0) is a measurement,
+    not a violation."""
+    _write(tmp_path, "BENCH_scenario.json",
+           {"bench": "scenario", "backend": "cpu",
+            "n_join": 0, "n_leave": 0, "n_corrupt": 0,
+            "records": [{"policy": "uniform", "rounds_to_target": None,
+                         "target_auroc": 0.8, "final_auroc": 0.7,
+                         "best_auroc": 0.75, "caches": [1, 1]}]})
     r = _run(tmp_path)
     assert r.returncode == 0, r.stdout + r.stderr
 

@@ -1,0 +1,256 @@
+"""``repro.data.scenario`` + the scenario-aware ``FederatedBatcher``.
+
+Covers the three layers of the churn harness separately:
+
+- the declarative model: event validation, pure membership queries
+  (``n_clients_at`` / ``active_mask`` / ``corrupt_ids``), and the
+  label-flip transforms;
+- file loading: ``_mini_yaml`` (the no-PyYAML fallback the CI image
+  uses) must parse the supported subset IDENTICALLY to PyYAML, so a
+  scenario file means the same thing on every machine — the fallback is
+  unit-tested directly because environments with PyYAML installed would
+  otherwise never execute it;
+- the batcher: inactive clients are never sampled, corrupt clients'
+  labels arrive flipped, the batch stream stays a pure function of
+  (seed, round), and misuse (no sampling, short roster, K > active)
+  fails loudly.
+"""
+import numpy as np
+import pytest
+
+from repro.data.scenario import (Event, Scenario, _mini_yaml, flip_labels,
+                                 load_scenario, parse_scenario)
+
+# ------------------------------------------------------- declarative model --
+
+
+def _scn():
+    return Scenario((Event(round=2, join=4),
+                     Event(round=3, leave=(0,), corrupt=(1,)))).validate(4)
+
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="start at round 1"):
+        Event(round=0, join=1)
+    with pytest.raises(ValueError, match="join must be >= 0"):
+        Event(round=1, join=-2)
+    with pytest.raises(ValueError, match="ids must be >= 0"):
+        Event(round=1, leave=(-1,))
+    with pytest.raises(ValueError, match="duplicate event rounds"):
+        Scenario((Event(round=1, join=1), Event(round=1, join=2)))
+
+
+def test_validate_checks_ids_against_cohort():
+    with pytest.raises(ValueError, match="references client 9"):
+        Scenario((Event(round=1, leave=(9,)),)).validate(4)
+    # client 5 exists only after the round-2 join -> corrupting it at
+    # round 1 is an error, at round 2 it is fine
+    with pytest.raises(ValueError, match="references client 5"):
+        Scenario((Event(round=1, corrupt=(5,)),
+                  Event(round=2, join=4))).validate(4)
+    Scenario((Event(round=2, join=4),
+              Event(round=3, corrupt=(5,)))).validate(4)
+    with pytest.raises(ValueError, match="already-departed"):
+        Scenario((Event(round=1, leave=(0,)),
+                  Event(round=2, leave=(0,)))).validate(4)
+
+
+def test_membership_queries_are_pure_in_round():
+    s = _scn()
+    assert [s.n_clients_at(r, 4) for r in (-1, 0, 1, 2, 3)] == [4, 4, 4, 8, 8]
+    assert s.total_joins() == 4
+    assert s.left_ids(2) == () and s.left_ids(3) == (0,)
+    assert s.corrupt_ids(2) == () and s.corrupt_ids(3) == (1,)
+    assert s.events_at(2).join == 4 and s.events_at(1) is None
+
+
+def test_active_mask():
+    s = _scn()
+    np.testing.assert_array_equal(
+        s.active_mask(0, 4, 8), [1, 1, 1, 1, 0, 0, 0, 0])
+    np.testing.assert_array_equal(
+        s.active_mask(2, 4, 8), [1, 1, 1, 1, 1, 1, 1, 1])
+    np.testing.assert_array_equal(
+        s.active_mask(3, 4, 8), [0, 1, 1, 1, 1, 1, 1, 1])
+    with pytest.raises(ValueError, match="exceed state capacity"):
+        s.active_mask(2, 4, 4)
+
+
+def test_flip_labels():
+    one_hot = np.eye(3, dtype=np.float32)[[0, 1, 2]]
+    np.testing.assert_array_equal(flip_labels(one_hot, "multiclass"),
+                                  np.eye(3, dtype=np.float32)[[1, 2, 0]])
+    y = np.array([[0.0], [1.0]], np.float32)
+    np.testing.assert_array_equal(flip_labels(y, "binary"),
+                                  np.array([[1.0], [0.0]], np.float32))
+
+
+# ----------------------------------------------------------- file loading --
+
+_DOC = """\
+# a comment
+events:
+  - round: 2
+    join: 4        # trailing comment
+  - round: 3
+    leave: [0, 1]
+    corrupt: []
+"""
+
+
+def test_mini_yaml_matches_pyyaml():
+    yaml = pytest.importorskip("yaml")
+    assert _mini_yaml(_DOC) == yaml.safe_load(_DOC)
+
+
+def test_mini_yaml_parses_the_subset():
+    doc = _mini_yaml(_DOC)
+    assert doc == {"events": [{"round": 2, "join": 4},
+                              {"round": 3, "leave": [0, 1], "corrupt": []}]}
+    s = parse_scenario(doc)
+    assert s.total_joins() == 4 and s.left_ids(3) == (0, 1)
+
+
+def test_mini_yaml_rejects_out_of_subset():
+    with pytest.raises(ValueError, match="unsupported top-level"):
+        _mini_yaml("settings:\n  - round: 1\n")
+    with pytest.raises(ValueError, match="content before 'events:'"):
+        _mini_yaml("  - round: 1\n")
+    with pytest.raises(ValueError, match="mapping line outside an item"):
+        _mini_yaml("events:\n  round: 1\n")
+
+
+def test_parse_scenario_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown scenario event keys"):
+        parse_scenario({"events": [{"round": 1, "jion": 2}]})
+    with pytest.raises(ValueError, match="missing 'round'"):
+        parse_scenario({"events": [{"join": 2}]})
+    with pytest.raises(ValueError, match="must be a mapping"):
+        parse_scenario([1, 2])
+
+
+def test_load_scenario_file(tmp_path):
+    p = tmp_path / "s.yaml"
+    p.write_text(_DOC)
+    s = load_scenario(str(p))
+    assert s == parse_scenario(_mini_yaml(_DOC))
+
+
+def test_ci_scenario_file_loads_and_validates():
+    """The checked-in CI scenario must stay loadable by BOTH parsers and
+    valid for the ci-smoke lane's --clients 6."""
+    import os
+
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "examples", "scenarios", "ci_join.yaml")
+    with open(path) as f:
+        text = f.read()
+    s = parse_scenario(_mini_yaml(text))
+    s.validate(6)
+    assert s.total_joins() > 0, "the CI scenario must exercise a join"
+    yaml = pytest.importorskip("yaml")
+    assert _mini_yaml(text) == yaml.safe_load(text)
+
+
+# ------------------------------------------------------- batcher behavior --
+
+
+def _spec(**kw):
+    from repro.core.federation_sharded import ShardedFedSpec
+
+    base = dict(n_clients=8, d_hidden=8, n_layers=2, seq_a=2, feat_a=3,
+                seq_b=2, feat_b=3, out_dim=3, kind="multiclass", n_partial=2,
+                n_frag=2, n_paired=4, n_val=4, n_sampled=2)
+    base.update(kw)
+    return ShardedFedSpec(**base)
+
+
+def _client(rng, spec, label: int):
+    """A paired-only client whose every row carries one-hot ``label`` —
+    so any drawn subset's labels are that constant."""
+    n = spec.n_paired
+    y = np.zeros((n, spec.out_dim), np.float32)
+    y[:, label] = 1.0
+    return {"paired_a": rng.random((n, spec.seq_a, spec.feat_a),
+                                   dtype=np.float32),
+            "paired_b": rng.random((n, spec.seq_b, spec.feat_b),
+                                   dtype=np.float32),
+            "paired_y": y}
+
+
+def _val(spec):
+    rng = np.random.default_rng(7)
+    return {"val_a": rng.random((spec.n_val, spec.seq_a, spec.feat_a),
+                                dtype=np.float32),
+            "val_b": rng.random((spec.n_val, spec.seq_b, spec.feat_b),
+                                dtype=np.float32),
+            "val_y": np.zeros((spec.n_val, spec.out_dim), np.float32)}
+
+
+def _batcher(scenario, n_initial, n_roster, spec=None, prefetch=0):
+    from repro.data.pipeline import FederatedBatcher
+
+    spec = spec or _spec()
+    rng = np.random.default_rng(0)
+    clients = [_client(rng, spec, label=0) for _ in range(n_roster)]
+    return FederatedBatcher(clients, spec, _val(spec), seed=3,
+                            prefetch=prefetch, scenario=scenario,
+                            n_initial=n_initial)
+
+
+def test_scenario_requires_sampled_rounds():
+    with pytest.raises(ValueError, match="requires sampled rounds"):
+        _batcher(_scn(), 4, 8, spec=_spec(n_sampled=0))
+
+
+def test_scenario_requires_full_roster():
+    with pytest.raises(ValueError, match="scenario needs 8 client datasets"):
+        _batcher(_scn(), 4, 5)
+
+
+def test_rounds_iterator_refused_under_scenario():
+    b = _batcher(_scn(), 4, 8)
+    with pytest.raises(ValueError, match="round-by-round"):
+        next(iter(b.rounds(0, 2)))
+
+
+def test_inactive_clients_are_never_sampled():
+    b = _batcher(_scn(), 4, 8)
+    for r in range(6):
+        idx = b.build(r)["sampled"]
+        active = np.flatnonzero(b.scenario.active_mask(r, 4, 8))
+        assert set(idx.tolist()) <= set(active.tolist()), \
+            f"round {r}: sampled {idx} outside active {active}"
+        if r >= 3:
+            assert 0 not in idx, "departed client 0 must never be sampled"
+
+
+def test_corrupt_client_labels_arrive_flipped():
+    scn = Scenario((Event(round=1, corrupt=(1,)),)).validate(2)
+    b = _batcher(scn, 2, 2)
+    flipped = np.roll(np.eye(3, dtype=np.float32)[[0] * 4], 1, axis=-1)
+    for r in range(3):
+        batch = b.build(r)
+        for k, i in enumerate(batch["sampled"]):
+            want = flipped if (r >= 1 and i == 1) else \
+                np.eye(3, dtype=np.float32)[[0] * 4]
+            np.testing.assert_array_equal(batch["paired_y"][k], want,
+                                          err_msg=f"round {r} client {i}")
+
+
+def test_batch_stream_is_pure_in_seed_and_round():
+    a = _batcher(_scn(), 4, 8)
+    b = _batcher(_scn(), 4, 8)
+    for r in range(5):
+        ba, bb = a.build(r), b.build(r)
+        assert set(ba) == set(bb)
+        for k in ba:
+            np.testing.assert_array_equal(ba[k], bb[k], err_msg=k)
+
+
+def test_k_above_active_count_raises():
+    scn = Scenario((Event(round=1, leave=(0,)),)).validate(2)
+    b = _batcher(scn, 2, 2)
+    b.build(0)  # 2 active, K=2 — fine
+    with pytest.raises(ValueError, match="only 1 clients are active"):
+        b.build(1)

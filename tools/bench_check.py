@@ -27,7 +27,11 @@ schema documented in ``docs/benchmarks.md``:
   ``rounds_to_target`` is null ("never reached" is a valid outcome) or
   an integer >= 1, and ``target_auroc`` / ``final_auroc`` /
   ``best_auroc`` are numbers in [0, 1] (an AUROC outside the unit
-  interval means the metric plumbing broke).
+  interval means the metric plumbing broke);
+- scenario event counts (the churn accounting of
+  ``BENCH_scenario.json``): ``n_join`` / ``n_leave`` / ``n_corrupt``
+  are integers >= 0 (a negative or non-integer event count means the
+  scenario bookkeeping broke).
 
 ``benchmarks/results/`` is gitignored, so a fresh checkout has nothing
 to validate — that's a pass (the checker guards whatever records the
@@ -57,6 +61,8 @@ _BYTES_KEYS = ("bytes_per_round", "bytes_to_target", "bytes_per_message")
 # convergence accounting: rounds null-or-int>=1, AUROCs in the unit interval
 _ROUNDS_KEYS = ("rounds_to_target",)
 _AUROC_KEYS = ("target_auroc", "final_auroc", "best_auroc")
+# churn accounting: scenario event counts are non-negative integers
+_EVENT_KEYS = ("n_join", "n_leave", "n_corrupt")
 
 
 def _walk_numbers(node, path, errors):
@@ -107,6 +113,10 @@ def _check_caches(node, path, errors):
                 if not (_is_number(v) and 0.0 <= v <= 1.0):
                     errors.append(f"{p}: AUROC must be a number in [0, 1], "
                                   f"got {v!r}")
+            elif k in _EVENT_KEYS:
+                if isinstance(v, bool) or not isinstance(v, int) or v < 0:
+                    errors.append(f"{p}: scenario event count must be an "
+                                  f"int >= 0, got {v!r}")
             else:
                 _check_caches(v, p, errors)
     elif isinstance(node, list):

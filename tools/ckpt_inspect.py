@@ -1,0 +1,71 @@
+"""Checkpoint inspector — the debugging surface for state-block migrations.
+
+Prints, for one checkpoint step (latest by default), what a resume would
+see BEFORE committing to a target tree: the round it was saved at, its
+metadata (store fingerprint included), its client capacity, and the
+round-state block layout — every leaf grouped under its registered
+block (``repro.core.state.REGISTRY``) with shape and dtype. Top-level
+keys that no registered block claims print under a ``?`` prefix: that
+is layout drift, the exact thing to look at when a restore or a
+capacity migration fails.
+
+    PYTHONPATH=src python tools/ckpt_inspect.py /tmp/fedckpt
+    PYTHONPATH=src python tools/ckpt_inspect.py /tmp/fedckpt --step 4
+    make ckpt-inspect CKPT_DIR=/tmp/fedckpt
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def inspect(ckpt_dir: str, step: int | None = None, out=sys.stdout) -> int:
+    from repro.checkpoint import latest_step, read_manifest
+    from repro.core.state import manifest_capacity, manifest_layout
+
+    resolved = step if step is not None else latest_step(ckpt_dir)
+    if resolved is None:
+        print(f"no checkpoints under {ckpt_dir}", file=out)
+        return 1
+    manifest = read_manifest(ckpt_dir, resolved)
+    meta = manifest.get("metadata", {})
+    print(f"checkpoint {ckpt_dir} step {resolved}", file=out)
+    print(f"  round:       {meta.get('round', manifest.get('step'))}", file=out)
+    fp = meta.get("store_fingerprint")
+    store = f"{fp[:12]}…" if fp else "in-memory (no fingerprint)"
+    print(f"  store:       {store}", file=out)
+    for k, v in sorted(meta.items()):
+        if k not in ("round", "store_fingerprint"):
+            print(f"  {k + ':':<12} {v}", file=out)
+    try:
+        print(f"  capacity:    {manifest_capacity(manifest)} client slots",
+              file=out)
+    except KeyError as e:
+        print(f"  capacity:    ? ({e})", file=out)
+    layout = manifest_layout(manifest)
+    drift = [n for n in layout if n.startswith("?")]
+    print(f"  blocks:      {len(layout)}"
+          + (f"  (UNREGISTERED: {', '.join(drift)})" if drift else ""),
+          file=out)
+    for name, leaves in layout.items():
+        tag = " <- NOT IN REGISTRY" if name.startswith("?") else ""
+        print(f"\n  {name}  ({len(leaves)} leaves){tag}", file=out)
+        for path, shape, dtype in leaves:
+            print(f"    {path:<52} {str(tuple(shape)):<20} {dtype}", file=out)
+    return 2 if drift else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("ckpt_dir", help="checkpoint directory (step_N subdirs)")
+    ap.add_argument("--step", type=int, default=None,
+                    help="step to inspect (default: latest)")
+    args = ap.parse_args()
+    try:
+        sys.exit(inspect(args.ckpt_dir, args.step))
+    except BrokenPipeError:  # e.g. piped through `head`
+        sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()
