@@ -8,7 +8,8 @@ TEST_FAST_BUDGET_S ?= 240
 
 .PHONY: test test-fast docs-check bench-check ci ci-test ci-smoke \
 	bench-sampled bench-loader bench-store bench-participation \
-	bench-comm bench-agg bench-scenario train-federated ckpt-inspect
+	bench-comm bench-agg bench-scenario bench-attack train-federated \
+	ckpt-inspect
 
 test: docs-check
 	$(PYTEST)
@@ -51,10 +52,13 @@ ci-test: docs-check bench-check
 # (stacked per-client control variates), so CI exercises the
 # scheduler's, the wire codec's, and the aggregation strategies'
 # checkpoint/resume contracts end to end (residual trees and control
-# variates must restore bit-exactly). The three --scenario lanes replay
-# the same contract across CHURN: a mid-run join crosses a capacity
-# bucket (8 -> 16) before the kill point, so the resume restores a
-# grown state — plain, codec, and scaffold variants.
+# variates must restore bit-exactly). The --scenario lanes replay the
+# same contract across CHURN: a mid-run join crosses a capacity bucket
+# (8 -> 16) before the kill point, so the resume restores a grown state
+# — plain, codec, scaffold, and ATTACKED variants (the last one turns
+# two clients into gradient-space attackers mid-run and aggregates with
+# the trimmed_mean robust defense, pinning the attack_coef uplink hook
+# and the robust reducers into the resume-parity contract).
 ci-smoke: train-federated
 	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
 		--rounds 4 --clients 6 --n-sampled 3 --policy omega_ema \
@@ -75,6 +79,10 @@ ci-smoke: train-federated
 		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
 	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
 		--scenario examples/scenarios/ci_join.yaml --strategy scaffold \
+		--rounds 4 --clients 6 --n-sampled 3 \
+		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
+	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
+		--scenario examples/scenarios/ci_attack.yaml --strategy trimmed_mean \
 		--rounds 4 --clients 6 --n-sampled 3 \
 		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
 
@@ -112,6 +120,14 @@ bench-agg:
 # Emits BENCH_scenario.json.
 bench-scenario:
 	PYTHONPATH=src python -m benchmarks.scenario_bench
+
+# Gradient-space attacks (none/sign_flip/scale/backdoor) x defenses
+# (blendavg/fedavg/median/trimmed_mean/krum) on the straggler cohort:
+# rounds-to-target AUROC + backdoor success rate per cell, one compiled
+# round per defense shared across all attack arms. Emits
+# BENCH_attack.json.
+bench-attack:
+	PYTHONPATH=src python -m benchmarks.attack_bench
 
 # Print a checkpoint's round, client capacity, store fingerprint, and
 # per-block leaf layout (shapes/dtypes, grouped by the round-state

@@ -1,0 +1,283 @@
+"""§Byzantine attacks × robust defenses: the BlendAvg robustness matrix.
+
+Sweeps every gradient-space scenario attack (``repro.data.scenario``:
+none / sign_flip / scale / backdoor, two adversaries among the rich
+clients) against every defense in the ``repro.core.aggregate`` strategy
+family (blendavg / fedavg / median / trimmed_mean / krum) on the
+participation bench's straggler cohort (8 rich + 8 label-noise clients,
+C=16 / K=4 sampled rounds).
+
+Per defense there is exactly ONE jitted round program shared by all four
+attack arms: the attack membership is scenario data (the ``attack_coef``
+batch vector), so switching attacks must never retrace — every
+defense's compile cache is asserted to end at 1 across the whole sweep.
+The attack is applied before the uplink (where a codec would sit);
+defenses aggregate what the server receives.
+
+Per cell the bench reports rounds to a target validation multimodal
+AUROC (host-side ``repro.metrics.auroc``, evaluated outside the timed
+region) and the **backdoor success rate**: the fraction of triggered
+validation inputs (``scenario.apply_trigger`` on both modalities) the
+final global model classifies as the attacker's target class, measured
+over rows whose true label is NOT the target.
+
+Emits ``BENCH_attack.json``. Acceptance: every compile cache is 1, at
+least one attacked cell where a robust defense beats the volume-weighted
+fedavg baseline (fewer rounds to target, clearly higher best AUROC, or a
+clearly lower backdoor success rate), and at least one attacked cell
+where blendavg's Eq. 9-10 performance weighting already suffices on its
+own (still reaches the target, or holds its own unattacked AUROC).
+
+A finding this matrix pins rather than assumes: blendavg's improvement
+filter (candidates must beat the current global on server validation to
+earn any omega; nothing-improves keeps the old global) is itself a
+strong Byzantine defense — it zeroes sign-flipped, boosted, AND
+accuracy-degrading poisoned candidates, so no robust reducer beats
+blendavg in any attacked cell here. The reducers earn their keep
+against fedavg (which happily averages whatever volume shows up:
+backdoor success collapses from ~0.9 to ~0.5-0.6 under median / trimmed
+mean), and blendavg's filter is only as trustworthy as the server's
+validation set — the geometric defenses assume nothing about it.
+
+    PYTHONPATH=src python -m benchmarks.attack_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_bench_json
+
+N_CLIENTS, K = 16, 4
+TARGET_AUROC = 0.80
+N_MALICIOUS = 1  # the defenses' assumed per-round attacker budget f
+# gradient-space attackers are rich clients (clean data, big updates —
+# the most damaging compromise). The backdoor arm compromises twice as
+# many: stealthy data poisoning needs sustained participation to
+# implant under K-of-C sampling, while a single sign-flipper already
+# shows up in gradient space every round it is drawn.
+UPLINK_ATTACKER_IDS = (0, 1)
+BACKDOOR_ATTACKER_IDS = (0, 1, 2, 3)
+
+# (record name, scenario Event kwargs for the round-1 attack event)
+ATTACK_GRID = (
+    ("none", {}),
+    ("sign_flip", {"sign_flip": UPLINK_ATTACKER_IDS}),
+    ("scale", {"scale": UPLINK_ATTACKER_IDS}),
+    ("backdoor", {"backdoor": BACKDOOR_ATTACKER_IDS}),
+)
+# (record name, ShardedFedSpec strategy overrides)
+DEFENSE_GRID = (
+    ("blendavg", {"strategy": "blendavg"}),
+    ("fedavg", {"strategy": "fedavg"}),
+    ("median", {"strategy": "median"}),
+    ("trimmed_mean", {"strategy": "trimmed_mean"}),
+    ("krum", {"strategy": "krum"}),
+)
+ROBUST = ("median", "trimmed_mean", "krum")
+
+
+def _straggler_cohort(task, quick: bool):
+    from benchmarks.participation_bench import _straggler_clients
+    from repro.data.synthetic import train_val_test
+
+    rich_paired, rich_partial, strag = ((96, 48, 8) if quick
+                                        else (160, 64, 8))
+    need = (N_CLIENTS // 2) * (rich_paired + rich_partial + 2 * strag) + 64
+    tr, va, _ = train_val_test(task, need, 512, 64, seed=0)
+    clients, _ = _straggler_clients(task, tr, rich_paired, rich_partial,
+                                    strag, seed=1)
+    return clients, va, {"n_partial": rich_partial, "n_paired": rich_paired}
+
+
+def _make_spec(task, caps: dict, overrides: dict):
+    from repro.core.federation_sharded import ShardedFedSpec
+
+    # attacks=True for EVERY arm (the none arm ships an all-ones
+    # attack_coef), so each defense's single compiled round covers the
+    # whole attack axis
+    return ShardedFedSpec(
+        n_clients=N_CLIENTS, d_hidden=32, n_layers=2, seq_a=task.seq_a,
+        feat_a=task.feat_a, seq_b=task.seq_b, feat_b=task.feat_b,
+        out_dim=task.out_dim, kind=task.kind, n_frag=8, n_val=512,
+        lr=2e-2, optimizer="adamw", n_sampled=K, attacks=True,
+        n_malicious=N_MALICIOUS, n_partial=caps["n_partial"],
+        n_paired=caps["n_paired"], **overrides)
+
+
+def _attack_scenario(event_kwargs: dict):
+    from repro.data.scenario import Event, Scenario
+
+    events = (Event(round=1, **event_kwargs),) if event_kwargs else ()
+    return Scenario(events).validate(N_CLIENTS)
+
+
+def _backdoor_success(g, va, spec) -> float:
+    """Fraction of trigger-stamped validation inputs the global model
+    maps to the attacker's target class, over rows whose true label is
+    a different class (the standard targeted-attack success metric)."""
+    from repro.core.encoders import fusion_apply, task_scores
+    from repro.core.federation import _client_fwd
+    from repro.data.scenario import apply_trigger, backdoor_target
+
+    xa = apply_trigger(np.asarray(va.x_a))
+    xb = apply_trigger(np.asarray(va.x_b))
+    h_a = _client_fwd(g["f_A"], jnp.asarray(xa), ecfg=spec.ecfg)
+    h_b = _client_fwd(g["f_B"], jnp.asarray(xb), ecfg=spec.ecfg)
+    scores = np.asarray(task_scores(fusion_apply(g["g_M"], h_a, h_b),
+                                    spec.kind))
+    target = int(np.argmax(backdoor_target(spec.kind, spec.out_dim)))
+    y = np.asarray(va.y)
+    rows = y.argmax(-1) != target
+    return float(np.mean(scores[rows].argmax(-1) == target))
+
+
+def _run_cell(attack: str, event_kwargs: dict, spec, round_fn, clients, va,
+              mesh, rounds: int) -> dict:
+    """One (attack, defense) cell over the shared cohort and seed. The
+    scenario batcher is driven round-by-round (attack membership is a
+    round-indexed query); the round program arrives pre-compiled and
+    shared across the defense's four attack arms."""
+    from repro.core.federation import eval_multimodal
+    from repro.core.federation_sharded import batch_specs, init_round_state
+    from repro.data.pipeline import FederatedBatcher
+    from repro.launch import shardings as sh
+    from repro.launch.train_federated import place_state
+
+    shard = sh.batch_shardings(mesh, batch_specs(spec, ragged=True))
+    val = {"val_a": va.x_a, "val_b": va.x_b, "val_y": va.y}
+    batcher = FederatedBatcher(clients, spec, val, seed=0, shardings=shard,
+                               scenario=_attack_scenario(event_kwargs),
+                               n_initial=N_CLIENTS)
+    state = place_state(init_round_state(jax.random.PRNGKey(0), spec), mesh)
+    aurocs, eval_spent, to_target = [], 0.0, None
+    t_loop = time.perf_counter()
+    for r in range(rounds):
+        batch = batcher.put(batcher.build(r))
+        state, _ = round_fn(state, batch)
+        jax.block_until_ready(state["global_models"])
+        t0 = time.perf_counter()
+        g = state["global_models"]
+        auc = eval_multimodal(g["f_A"], g["f_B"], g["g_M"], va.x_a, va.x_b,
+                              va.y, spec.ecfg, spec.kind)
+        eval_spent += time.perf_counter() - t0
+        aurocs.append(auc)
+        if to_target is None and auc >= TARGET_AUROC:
+            to_target = r + 1
+    loop_spent = time.perf_counter() - t_loop
+    return {
+        "attack": attack,
+        "rounds_to_target": to_target,
+        "target_auroc": TARGET_AUROC,
+        "final_auroc": round(aurocs[-1], 4),
+        "best_auroc": round(max(aurocs), 4),
+        "backdoor_success_rate": round(
+            _backdoor_success(state["global_models"], va, spec), 4),
+        "s_per_round": round((loop_spent - eval_spent) / rounds, 4),
+    }
+
+
+def _beats(cell: dict, base: dict, rounds: int) -> bool:
+    """Did a defense's cell beat the baseline's under the same attack?
+    Any of: fewer rounds to target, clearly higher best AUROC, or (the
+    score-invisible attack) a clearly lower backdoor success rate."""
+    rtt = lambda c: (c["rounds_to_target"] if c["rounds_to_target"]
+                     is not None else rounds + 1)
+    return (rtt(cell) < rtt(base)
+            or cell["best_auroc"] > base["best_auroc"] + 0.02
+            or (cell["attack"] == "backdoor"
+                and cell["backdoor_success_rate"] + 0.10
+                < base["backdoor_success_rate"]))
+
+
+def main(quick: bool = False) -> None:
+    from repro.data.synthetic import make_task
+    from repro.launch.mesh import make_host_mesh
+
+    task = make_task("smnist")
+    mesh = make_host_mesh()
+    rounds = 10 if quick else 16
+    clients, va, caps = _straggler_cohort(task, quick)
+
+    from repro.core.federation_sharded import (
+        batch_specs, init_round_state, make_blendfl_round)
+    from repro.data.pipeline import FederatedBatcher
+    from repro.launch import shardings as sh
+    from repro.launch.train_federated import place_state
+
+    records = []
+    for defense, overrides in DEFENSE_GRID:
+        spec = _make_spec(task, caps, overrides)
+        round_fn = jax.jit(make_blendfl_round(spec))
+        # warmup: compile the defense's round once on a throwaway state so
+        # its first cell's s_per_round doesn't carry the compile
+        shard = sh.batch_shardings(mesh, batch_specs(spec, ragged=True))
+        wb = FederatedBatcher(clients, spec,
+                              {"val_a": va.x_a, "val_b": va.x_b,
+                               "val_y": va.y},
+                              seed=0, shardings=shard)
+        wstate = place_state(init_round_state(jax.random.PRNGKey(0), spec),
+                             mesh)
+        for _, batch in wb.rounds(0, 1, prefetch=0):
+            jax.block_until_ready(round_fn(wstate, batch)[0])
+        print(f"\n=== defense {defense}: C={N_CLIENTS} K={K}, {rounds} "
+              f"rounds, uplink attackers {list(UPLINK_ATTACKER_IDS)}, "
+              f"backdoor {list(BACKDOOR_ATTACKER_IDS)} ===")
+        print(f"{'attack':>10s} {'to_target':>9s} {'final':>7s} "
+              f"{'best':>7s} {'bdoor':>6s} {'s/round':>8s}")
+        for attack, event_kwargs in ATTACK_GRID:
+            rec = _run_cell(attack, event_kwargs, spec, round_fn, clients,
+                            va, mesh, rounds)
+            rec["defense"] = defense
+            rec["n_attackers"] = sum(len(v) for v in event_kwargs.values())
+            rec["compile_cache"] = int(round_fn._cache_size())
+            records.append(rec)
+            tt = ("-" if rec["rounds_to_target"] is None
+                  else rec["rounds_to_target"])
+            print(f"{attack:>10s} {tt!s:>9s} {rec['final_auroc']:7.3f} "
+                  f"{rec['best_auroc']:7.3f} "
+                  f"{rec['backdoor_success_rate']:6.3f} "
+                  f"{rec['s_per_round']:8.3f}", flush=True)
+
+    # record first, assert after: a failed acceptance still leaves the
+    # measurement on disk for the next comparison
+    write_bench_json("BENCH_attack.json",
+                     {"bench": "attack",
+                      "backend": jax.default_backend(),
+                      "n_clients": N_CLIENTS, "k": K, "rounds": rounds,
+                      "n_malicious": N_MALICIOUS,
+                      "quick": quick,
+                      "compile_cache": max(r["compile_cache"]
+                                           for r in records),
+                      "records": records})
+
+    by = {(r["defense"], r["attack"]): r for r in records}
+    for r in records:
+        assert r["compile_cache"] == 1, \
+            f"{r['defense']}/{r['attack']}: round program retraced " \
+            f"(cache {r['compile_cache']}) — the attack axis must be data"
+    wins = [(d, a) for d in ROBUST for a, _ in ATTACK_GRID if a != "none"
+            and _beats(by[(d, a)], by[("fedavg", a)], rounds)]
+    assert wins, ("no robust defense beat volume-weighted fedavg in any "
+                  "attacked cell — the matrix shows no defense value")
+    # blendavg "suffices" under an attack when it still reaches the
+    # target, or holds its own unattacked best AUROC (candidates that
+    # stop improving the server-val score earn omega 0 and drop out)
+    clean = by[("blendavg", "none")]["best_auroc"]
+    holds = [a for a, _ in ATTACK_GRID if a != "none"
+             and (by[("blendavg", a)]["rounds_to_target"] is not None
+                  or by[("blendavg", a)]["best_auroc"] >= clean - 0.02)]
+    assert holds, ("blendavg collapsed under every attack — expected its "
+                   "performance weighting to absorb at least one")
+    print(f"\n--> robust wins over fedavg in cells {wins}; "
+          f"blendavg's own improvement filter suffices under {holds}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

@@ -32,6 +32,25 @@ Aggregation weights per strategy (the engine's ``fedavg_update`` /
     scaffold   uniform over participants (SCAFFOLD's x + mean(y_i - x)
                server step at eta_g = 1)
 
+Byzantine-robust defenses are the same kind of object — a *stateless*
+strategy name that changes only how candidates reduce to the new
+global (so old checkpoints stay loadable and the compile cache stays 1
+per strategy):
+
+    median        coordinate-wise median of the candidates (breakdown
+                  point f < n/2); weights are ignored
+    trimmed_mean  coordinate-wise mean after dropping the n_malicious
+                  largest and smallest values per coordinate (needs
+                  n >= 2 * n_malicious + 1); at n_malicious = 0 it
+                  degenerates to the unweighted fedavg path bit-exactly
+    krum          multi-Krum (Blanchard et al. 2017): score each
+                  candidate by the summed squared distances to its
+                  n - f - 2 nearest peers, keep the m = n - f
+                  lowest-scoring, and average the survivors through the
+                  ordinary volume-weighted fedavg path — at
+                  n_malicious = 0 every candidate survives, so krum IS
+                  fedavg bit-for-bit
+
 State layout (only the keys a strategy needs exist — mirrors the codec
 block's "none adds no keys" contract):
 
@@ -53,7 +72,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-STRATEGIES = ("blendavg", "fedavg", "scaffold", "fedprox")
+ROBUST = ("median", "trimmed_mean", "krum")
+STRATEGIES = ("blendavg", "fedavg", "scaffold", "fedprox") + ROBUST
 SERVER_OPTS = ("none", "adam", "momentum")
 
 # Strategy-state trees that carry a leading client axis (gathered /
@@ -85,6 +105,13 @@ class StrategyConfig:
     server_beta1: float = 0.9
     server_beta2: float = 0.99
     server_eps: float = 1e-3  # FedAdam tau (Reddi et al. 2021)
+    # Assumed malicious-client budget f for the robust defenses: the
+    # per-side trim count for trimmed_mean, the f in multi-Krum's
+    # m = n - f survivor count and n - f - 2 neighbor count. Static
+    # structure (a different f is a different compiled round); ignored
+    # by the non-robust strategies and by median (whose breakdown point
+    # is f < n/2 regardless).
+    n_malicious: int = 1
 
     def __post_init__(self):
         if self.name not in STRATEGIES:
@@ -97,6 +124,9 @@ class StrategyConfig:
         if self.fedprox_mu and self.name not in ("fedprox",):
             raise ValueError("fedprox_mu > 0 requires strategy 'fedprox' "
                              f"(got {self.name!r})")
+        if not isinstance(self.n_malicious, int) or self.n_malicious < 0:
+            raise ValueError(
+                f"n_malicious must be an int >= 0, got {self.n_malicious!r}")
 
     # -- static structure queries (drivers branch on these at trace time) --
 
@@ -126,12 +156,19 @@ class StrategyConfig:
         """Aggregation weights come from validation scores (Eq. 9-10)."""
         return self.name == "blendavg"
 
+    @property
+    def robust(self) -> bool:
+        """Candidates reduce through a Byzantine-robust reducer instead
+        of a weighted average (stateless: adds no state keys)."""
+        return self.name in ROBUST
+
 
 def make_strategy(name: str = "blendavg", fedprox_mu: float = 0.0,
-                  server_opt: str = "none", server_lr: float = 1.0
-                  ) -> StrategyConfig:
+                  server_opt: str = "none", server_lr: float = 1.0,
+                  n_malicious: int = 1) -> StrategyConfig:
     return StrategyConfig(name=name, fedprox_mu=fedprox_mu,
-                          server_opt=server_opt, server_lr=server_lr)
+                          server_opt=server_opt, server_lr=server_lr,
+                          n_malicious=int(n_malicious))
 
 
 # ------------------------------------------------------------ state layout --
@@ -287,3 +324,77 @@ def server_update(scfg: StrategyConfig, srv: dict, new_global: dict,
                            + lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
                            ).astype(p.dtype), prev_global, m, v)
     return out, {"m": m, "v": v, "t": t}
+
+
+# ------------------------------------------------- Byzantine-robust reducers --
+#
+# Pure jnp reductions over a stacked candidate tree (leading axis = the
+# n candidates). They ignore aggregation weights by design: robustness
+# comes from order statistics / distance scores, and a weighted variant
+# would let one attacker inflate its own weight. Each has a numpy
+# reference + property tests in tests/test_robust.py.
+
+def coordinate_median_tree(stacked: dict) -> dict:
+    """Coordinate-wise median of ``n`` stacked candidates. Tolerates any
+    f < n/2 arbitrary candidates per coordinate (the optimal breakdown
+    point). Never reduces to a mean — even honest-only cohorts get the
+    order statistic, which is why median has no fedavg-parity claim."""
+    return jax.tree.map(
+        lambda x: jnp.median(x.astype(jnp.float32), axis=0).astype(x.dtype),
+        stacked)
+
+
+def trimmed_mean_tree(stacked: dict, trim: int) -> dict:
+    """Coordinate-wise mean after dropping the ``trim`` largest and
+    ``trim`` smallest values per coordinate. Needs n >= 2*trim + 1
+    (validated by the drivers); callers route trim == 0 through the
+    ordinary fedavg path instead, so the degenerate case stays bit-exact
+    with fedavg rather than merely close."""
+    def red(x):
+        n = x.shape[0]
+        if n <= 2 * trim:
+            raise ValueError(
+                f"trimmed mean needs > 2*trim candidates, got n={n} "
+                f"with trim={trim}")
+        s = jnp.sort(x.astype(jnp.float32), axis=0)
+        return jnp.mean(s[trim:n - trim], axis=0).astype(x.dtype)
+
+    return jax.tree.map(red, stacked)
+
+
+def _flatten_candidates(stacked: dict) -> jnp.ndarray:
+    """(n, D) float32 matrix: every leaf of every candidate, flattened
+    and concatenated — Krum scores distances in full parameter space."""
+    leaves = jax.tree.leaves(stacked)
+    n = leaves[0].shape[0]
+    return jnp.concatenate(
+        [leaf.astype(jnp.float32).reshape(n, -1) for leaf in leaves], axis=1)
+
+
+def krum_scores(stacked: dict, f: int) -> jnp.ndarray:
+    """(n,) Krum scores (Blanchard et al. 2017): candidate i's score is
+    the sum of squared distances to its n - f - 2 nearest peers (clamped
+    to at least one neighbor for tiny cohorts). Outliers sit far from
+    everything, so low score = well-supported candidate. The guarantee
+    needs n >= 2f + 3; computing only needs n >= 2."""
+    x = _flatten_candidates(stacked)
+    n = x.shape[0]
+    sq = jnp.sum(x * x, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    d2 = jnp.maximum(d2, 0.0)
+    d2 = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d2)
+    k = max(n - f - 2, 1)
+    return jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+
+
+def krum_mask(stacked: dict, f: int) -> jnp.ndarray:
+    """(n,) float32 0/1 multi-Krum survivor mask: the m = n - f
+    lowest-scoring candidates. At f = 0 the mask is all-ones whatever
+    the scores — multiplying it into the fedavg volume weights is then
+    the identity, which is the defense==fedavg bit-parity contract."""
+    n = len(jax.tree.leaves(stacked)[0])
+    m = max(n - f, 1)
+    if m >= n:
+        return jnp.ones(n, jnp.float32)
+    order = jnp.argsort(krum_scores(stacked, f))
+    return jnp.zeros(n, jnp.float32).at[order[:m]].set(1.0)

@@ -416,6 +416,45 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
         return jax.tree.map(lambda b, g: jnp.where(tot > 0, b, g.astype(b.dtype)),
                             blended, global_tree)
 
+    def robust_update(global_tree, stacked_cands, weights):
+        """Byzantine-robust phase-4 reduction (cfg.strategy is one of
+        ``aggregate.ROBUST``). Returns (new_global, omega) where omega is
+        the effective per-candidate weight vector (for telemetry — the
+        sched block's omega EMA — not for blending):
+
+        - krum: the multi-Krum survivor mask multiplies the volume
+          weights and the product goes through the ordinary
+          ``fedavg_update`` — at n_malicious = 0 the mask is all-ones,
+          so krum is fedavg bit-for-bit;
+        - trimmed_mean at trim 0 delegates to ``fedavg_update`` with
+          uniform weights (the documented degenerate case);
+        - median / trimmed_mean (trim > 0) are coordinate-wise order
+          statistics; omega reports the uniform 1/n they treat honest
+          candidates with.
+        """
+        scfg = cfg.strategy
+        n = len(jnp.asarray(weights, jnp.float32))
+        if scfg.name == "krum":
+            mask = aggregate.krum_mask(stacked_cands, scfg.n_malicious)
+            w = jnp.asarray(weights, jnp.float32) * mask
+            new = fedavg_update(global_tree, stacked_cands, w)
+            tot = jnp.sum(w)
+            omega = jnp.where(tot > 0, w / jnp.maximum(tot, 1e-12),
+                              jnp.zeros_like(w))
+            return new, omega
+        uniform = jnp.full(n, 1.0 / n, jnp.float32)
+        if scfg.name == "trimmed_mean":
+            if scfg.n_malicious == 0:
+                return fedavg_update(global_tree, stacked_cands,
+                                     uniform), uniform
+            new = aggregate.trimmed_mean_tree(stacked_cands, scfg.n_malicious)
+        elif scfg.name == "median":
+            new = aggregate.coordinate_median_tree(stacked_cands)
+        else:
+            raise ValueError(f"not a robust strategy: {scfg.name!r}")
+        new = jax.tree.map(lambda b, g: b.astype(g.dtype), new, global_tree)
+        return new, uniform
+
     def broadcast(global_tree, n_clients: int):
         """LocalUpdate (line 32): every client adopts the blended weights."""
         return jax.tree.map(
@@ -464,6 +503,7 @@ def make_phase_fns(cfg: EngineConfig) -> SimpleNamespace:
         unimodal_step=unimodal_step, vfl_step=vfl_step, paired_step=paired_step,
         omega_from_scores=omega_from_scores, blend_stacked=blend_stacked,
         blendavg_update=blendavg_update, fedavg_update=fedavg_update,
+        robust_update=robust_update,
         broadcast=broadcast, codec_uplink=codec_uplink,
         codec_downlink=codec_downlink, scaffold_round=scaffold_round,
         server_update=server_update)

@@ -99,9 +99,12 @@ class FedConfig:
     # weights + the mu-scaled proximal pull toward each client's
     # round-start anchor) | scaffold (uniform blend + control-variate
     # gradient corrections threaded through federation state).
-    # ``aggregator`` is the pre-strategy spelling of the same knob, kept
-    # as an alias: setting it fills ``strategy``, and the two are always
-    # equal after init.
+    # The Byzantine-robust reducers (median | trimmed_mean | krum) are
+    # strategy names too — stateless, weights-free order-statistic /
+    # distance-score aggregation (``n_malicious`` = their assumed
+    # attacker budget f). ``aggregator`` is the pre-strategy spelling of
+    # the same knob, kept as an alias: setting it fills ``strategy``,
+    # and the two are always equal after init.
     strategy: str = ""  # "" = follow aggregator (default blendavg)
     aggregator: str = "blendavg"
     fedprox_mu: float = 0.0
@@ -109,6 +112,7 @@ class FedConfig:
     # applied before broadcast; composes with any strategy.
     server_opt: str = "none"  # none | adam | momentum
     server_lr: float = 1.0
+    n_malicious: int = 1
     # Which local rows feed phase-1 unimodal training. "all" (default)
     # reads Alg. 1's "partial data" as "the unimodal portions of D_m" —
     # every locally held x_m row (partial + fragmented + paired), matching
@@ -144,11 +148,22 @@ class FedConfig:
         if not self.strategy:
             object.__setattr__(self, "strategy", self.aggregator)
         object.__setattr__(self, "aggregator", self.strategy)
+        k = self.n_sampled or self.n_clients
+        f = self.n_malicious
+        if self.strategy == "krum" and k < f + 3:
+            raise ValueError(
+                f"krum needs at least n_malicious + 3 = {f + 3} candidates "
+                f"per round, got K={k}")
+        if self.strategy == "trimmed_mean" and k < 2 * f + 1:
+            raise ValueError(
+                f"trimmed_mean needs at least 2 * n_malicious + 1 = "
+                f"{2 * f + 1} candidates per round, got K={k}")
 
     @property
     def strategy_cfg(self) -> strategies.StrategyConfig:
         return strategies.make_strategy(self.strategy, self.fedprox_mu,
-                                        self.server_opt, self.server_lr)
+                                        self.server_opt, self.server_lr,
+                                        self.n_malicious)
 
 
 # ------------------------------------------------------------- evaluation --
@@ -486,7 +501,16 @@ class Federation:
         presence for scaffold). Returns (new_global, omega). ``staleness``
         (per-candidate, rounds the candidate's base global is behind)
         damps the BlendAvg omegas — zero/None for synchronous rounds, and
-        a scoring concept the weighted strategies ignore."""
+        a scoring concept the weighted strategies ignore.
+
+        The Byzantine-robust strategies dispatch to the engine's
+        ``robust_update`` (median / trimmed-mean order statistics, or
+        the multi-Krum survivor mask multiplied into the volume weights
+        — which makes krum the fedavg path bit-for-bit at
+        n_malicious = 0). They treat every candidate as present: an
+        absent client's weight-zero row still occupies a candidate slot
+        in the order statistics, so robust runs want full-modality
+        cohorts (the bench's straggler cohort is one)."""
         fns = self.engine.fns
         if self.engine.cfg.strategy.score_based:
             omega = blendavg_weights(scores, global_score, staleness=staleness,
@@ -495,6 +519,9 @@ class Federation:
                 return global_tree, omega
             return fns.blend_stacked(stacked_cands, omega), omega
         w = np.asarray(fedavg_weights, np.float64)
+        if self.engine.cfg.strategy.robust:
+            new, omega = fns.robust_update(global_tree, stacked_cands, w)
+            return new, np.asarray(omega)
         new = fns.fedavg_update(global_tree, stacked_cands, w)
         tot = w.sum()
         return new, (w / tot if tot > 0 else w)

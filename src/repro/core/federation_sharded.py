@@ -138,10 +138,24 @@ class ShardedFedSpec:
     # broadcast and composes with any strategy. Like the codec, the
     # strategy is static round structure: the default adds no state keys
     # and traces no extra ops.
-    strategy: str = "blendavg"  # blendavg | fedavg | scaffold | fedprox
+    # blendavg | fedavg | scaffold | fedprox, or a Byzantine-robust
+    # reducer: median | trimmed_mean | krum (stateless — no new state
+    # keys, old checkpoints stay loadable; ``n_malicious`` is their
+    # assumed attacker budget f).
+    strategy: str = "blendavg"
     fedprox_mu: float = 0.0
     server_opt: str = "none"  # none | adam | momentum
     server_lr: float = 1.0
+    n_malicious: int = 1
+    # Gradient-space uplink attackers (``repro.data.scenario`` sign_flip
+    # / scale events): when True the batch carries a per-participant
+    # ``attack_coef`` (K,) float32 vector — 1.0 honest (exact
+    # passthrough), -1.0 sign-flip, SCALE_FACTOR boosted — applied to
+    # each candidate's delta vs. its round-start anchor AFTER training
+    # (and the SCAFFOLD control update) but BEFORE the uplink codec, so
+    # the server decodes exactly what the attacker shipped. The flag is
+    # static structure; WHO attacks each round is data.
+    attacks: bool = False
 
     def __post_init__(self):
         if not 0 <= self.n_sampled <= self.n_clients:
@@ -151,6 +165,16 @@ class ShardedFedSpec:
                 "more client rows than the federation stacks (jit gathers "
                 "clamp out-of-range ids silently, so this must fail on the "
                 "host)")
+        f = self.n_malicious
+        if self.strategy == "krum" and self.k_round < f + 3:
+            raise ValueError(
+                f"krum needs at least n_malicious + 3 = {f + 3} candidates "
+                f"per round to score n - f - 2 neighbors, got K="
+                f"{self.k_round}")
+        if self.strategy == "trimmed_mean" and self.k_round < 2 * f + 1:
+            raise ValueError(
+                f"trimmed_mean needs at least 2 * n_malicious + 1 = "
+                f"{2 * f + 1} candidates per round, got K={self.k_round}")
 
     @property
     def ecfg(self) -> EncoderConfig:
@@ -173,7 +197,8 @@ class ShardedFedSpec:
                             codec=wire.make_codec(self.codec, self.topk_frac),
                             strategy=strategies.make_strategy(
                                 self.strategy, self.fedprox_mu,
-                                self.server_opt, self.server_lr))
+                                self.server_opt, self.server_lr,
+                                self.n_malicious))
 
 
 def init_stacked_models(key, spec: ShardedFedSpec):
@@ -231,6 +256,8 @@ def make_blendfl_round(spec: ShardedFedSpec):
       perm_b    (K*Nf,) int32 global alignment: row i of gathered h_a
                 pairs with row perm_b[i] of gathered h_b (the PSI output)
       sampled   (K,) int32 sampled client ids [n_sampled > 0 only]
+      attack_coef (K,) f32 per-participant uplink attack coefficient
+                (1 honest / -1 sign-flip / SCALE_FACTOR) [attacks only]
       val_a (Nv,Sa,Fa) val_b (Nv,Sb,Fb) val_y (Nv,O)   [replicated]
 
     With ``spec.n_sampled`` set, the round gathers the sampled rows of the
@@ -303,7 +330,15 @@ def make_blendfl_round(spec: ShardedFedSpec):
         multimodal blend stacks the server's g_M^v as candidate K with
         the total live aligned rows as its volume — it trained on every
         client's fragmented rows. Staleness damping is a BlendAvg scoring
-        concept and does not apply here."""
+        concept and does not apply here.
+
+        The Byzantine-robust strategies route the same candidates
+        through ``fns.robust_update`` instead of the weighted average:
+        krum masks the volume weights down to the multi-Krum survivors
+        (so at n_malicious = 0 it IS this function's fedavg path
+        bit-for-bit), median / trimmed_mean reduce coordinate-wise. The
+        server's g_M^v rides as an extra candidate for the M head there
+        too — an honest anchor the distance scores can lean on."""
         if "partial_ma" in batch:
             na = jnp.sum(batch["partial_ma"], axis=1)
             nb = jnp.sum(batch["partial_mb"], axis=1)
@@ -328,18 +363,25 @@ def make_blendfl_round(spec: ShardedFedSpec):
             cand = {"f": models[f"f_{mod}"], "g": models[f"g_{mod}"]}
             glob = {"f": global_models[f"f_{mod}"],
                     "g": global_models[f"g_{mod}"]}
-            blended = fns.fedavg_update(glob, cand, w_cli)
+            if scfg.robust:
+                blended, om = fns.robust_update(glob, cand, w_cli)
+            else:
+                blended = fns.fedavg_update(glob, cand, w_cli)
+                # normalized weights double as the sched telemetry
+                # omegas, so the participation policies see the same
+                # [0, 1] mass they see under blendavg
+                om = w_cli / jnp.maximum(jnp.sum(w_cli), 1e-12)
             new_global[f"f_{mod}"] = blended["f"]
             new_global[f"g_{mod}"] = blended["g"]
+            infos[f"omega_{mod}"] = om
         cand = stack_with(models["g_M"], server_gmv)
-        new_global["g_M"] = fns.fedavg_update(global_models["g_M"], cand, w_m)
-        # normalized weights double as the sched telemetry omegas, so the
-        # participation policies see the same [0, 1] mass they see under
-        # blendavg
-        om_cli = w_cli / jnp.maximum(jnp.sum(w_cli), 1e-12)
-        infos["omega_A"] = om_cli
-        infos["omega_B"] = om_cli
-        infos["omega_M"] = w_m / jnp.maximum(jnp.sum(w_m), 1e-12)
+        if scfg.robust:
+            new_global["g_M"], infos["omega_M"] = fns.robust_update(
+                global_models["g_M"], cand, w_m)
+        else:
+            new_global["g_M"] = fns.fedavg_update(global_models["g_M"],
+                                                  cand, w_m)
+            infos["omega_M"] = w_m / jnp.maximum(jnp.sum(w_m), 1e-12)
         return new_global, infos
 
     def round_fn(state, batch):
@@ -424,6 +466,25 @@ def make_blendfl_round(spec: ShardedFedSpec):
             new_cg, new_cl = fns.scaffold_round(
                 state["strat"]["c_global"], c_local, anchor, models,
                 scaffold_steps, K / spec.n_clients)
+
+        # gradient-space uplink attackers: each participant ships
+        # anchor + coef * (trained - anchor). coef is DATA (the attacker
+        # set changes round to round without recompiling); an exact
+        # where-passthrough keeps honest rows (coef == 1) bit-identical
+        # to the unattacked round. Sits after the SCAFFOLD update (the
+        # true training still happened client-side) and before the
+        # uplink codec (the server decodes what the attacker shipped).
+        if spec.attacks:
+            coef = batch["attack_coef"].astype(jnp.float32)
+
+            def forge(t, a):
+                c = coef.reshape((K,) + (1,) * (t.ndim - 1))
+                forged = (a.astype(jnp.float32)
+                          + c * (t.astype(jnp.float32)
+                                 - a.astype(jnp.float32))).astype(t.dtype)
+                return jnp.where(c == 1.0, t, forged)
+
+            models = jax.tree.map(forge, models, anchor)
 
         # wire codec, uplink leg: the trained weights become candidates
         # only after the lossy client->server round-trip — aggregation
@@ -548,4 +609,6 @@ def batch_specs(spec: ShardedFedSpec, ragged: bool = False):
         })
     if spec.n_sampled:
         specs["sampled"] = sds((K,), jnp.int32)
+    if spec.attacks:
+        specs["attack_coef"] = sds((K,), f32)
     return specs

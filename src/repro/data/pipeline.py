@@ -307,9 +307,12 @@ class FederatedBatcher:
             idx = np.arange(s.n_clients)
         sub = [self.clients[i] for i in idx]
         flip = [False] * len(idx)
+        bdoor = [False] * len(idx)
         if self.scenario is not None:
             bad = set(self.scenario.corrupt_ids(int(round_no)))
             flip = [int(i) in bad for i in idx]
+            bd = set(self.scenario.backdoor_ids(int(round_no)))
+            bdoor = [int(i) in bd for i in idx]
 
         batch = {}
         # phases 1 & 3: padded slabs + 0/1 row masks
@@ -338,6 +341,19 @@ class FederatedBatcher:
                 if y is not None:
                     y[k, :n] = (_flip(ds[yk][sel], s.kind) if flip[k]
                                 else ds[yk][sel])
+                if bdoor[k]:
+                    # targeted backdoor (scenario `backdoor:` events): a
+                    # deterministic prefix of the drawn rows gets the
+                    # fixed trigger patch + the attacker's target label.
+                    # The prefix of the (seed, round)-pure draw adds no
+                    # RNG, so poisoned streams resume bit-exactly. The
+                    # fragmented (VFL) slabs stay clean: their labels
+                    # live server-side, out of the client's reach.
+                    from repro.data import scenario as scn
+                    nb = scn.backdoor_rows(n)
+                    x[k, :nb] = scn.apply_trigger(x[k, :nb])
+                    if y is not None:
+                        y[k, :nb] = scn.backdoor_target(s.kind, s.out_dim)
                 if m is not None:
                     m[k, :n] = 1.0
             batch[xk] = x
@@ -391,6 +407,15 @@ class FederatedBatcher:
         })
         if s.n_sampled:
             batch["sampled"] = idx.astype(np.int32)
+        if getattr(s, "attacks", False):
+            # per-participant uplink coefficient (1 honest / -1
+            # sign-flip / SCALE_FACTOR boosted) — scenario-derived, pure
+            # in the round index; all-ones without a scenario (the
+            # bench's no-attack arm shares the attacked arms' compiled
+            # round)
+            batch["attack_coef"] = (
+                self.scenario.attack_coef(int(round_no), idx)
+                if self.scenario is not None else np.ones(len(idx), _F32))
         self.build_seconds += time.perf_counter() - t0
         self.rounds_built += 1
         return batch

@@ -4,13 +4,32 @@ Real federations are not fixed cohorts: hospitals onboard mid-study,
 clients drop out, and some turn adversarial. A ``Scenario`` is a sorted
 list of per-round events:
 
-    join     int — this many fresh clients join BEFORE round r runs
-             (their model rows adopt the current globals; their data was
-             partitioned up-front but held out of the active set)
-    leave    tuple of client ids that depart before round r (their state
-             rows are retired; they are never sampled again)
-    corrupt  tuple of client ids whose labels flip starting at round r
-             (a label-flipping adversary — the classic poisoning model)
+    join       int — this many fresh clients join BEFORE round r runs
+               (their model rows adopt the current globals; their data
+               was partitioned up-front but held out of the active set)
+    leave      tuple of client ids that depart before round r (their
+               state rows are retired; they are never sampled again)
+    corrupt    tuple of client ids whose labels flip starting at round r
+               (a label-flipping adversary — the classic poisoning model)
+    sign_flip  tuple of client ids that, starting at round r, upload the
+               NEGATED model delta (a gradient-space Byzantine attacker:
+               candidate = anchor - (trained - anchor))
+    scale      tuple of client ids that upload a boosted delta
+               (candidate = anchor + SCALE_FACTOR * (trained - anchor),
+               the model-replacement / scaling attack)
+    backdoor   tuple of client ids that, starting at round r, train a
+               targeted backdoor: a fraction BACKDOOR_FRAC of their
+               drawn rows get a fixed trigger patch stamped into the
+               inputs (``apply_trigger``) and their label replaced by
+               the attacker's target (``backdoor_target``)
+
+Sign-flip and scale act on the client→server candidate uplink: the
+driver turns them into a per-sampled-client coefficient vector
+(``attack_coef``) that is *data* to the jitted round — the set of
+attackers can change round to round without recompiling — and applies
+it BEFORE the wire codec, so defenses see exactly what a real server
+would decode. Backdoor is data poisoning and lives entirely in the
+batcher, like ``corrupt``.
 
 Membership is pure host-side bookkeeping over the round index: the
 stacked round state only ever grows (to capacity buckets, see
@@ -29,6 +48,7 @@ Scenario files are YAML::
       - round: 5
         leave: [0, 1]
         corrupt: [2]
+        sign_flip: [3]
 
 Parsed with PyYAML when available; otherwise a built-in mini-parser
 covers exactly this shape (the CI image has no yaml), so scenario files
@@ -37,8 +57,22 @@ load identically everywhere.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
+
+# Gradient-space attack constants. SCALE_FACTOR is the boost applied by
+# `scale` attackers to their model delta; TRIGGER_VALUE / BACKDOOR_FRAC
+# define the backdoor trigger patch and how much of a backdoor client's
+# drawn batch is poisoned. All three are deliberately module constants,
+# not per-event knobs: the attack *membership* is scenario data, the
+# attack *shape* is fixed, which keeps the jitted round's structure
+# static and resume bit-exact.
+SCALE_FACTOR = 10.0
+TRIGGER_VALUE = 3.0
+BACKDOOR_FRAC = 0.5
+
+_ATTACK_KINDS = ("sign_flip", "scale", "backdoor")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +83,9 @@ class Event:
     join: int = 0
     leave: tuple = ()
     corrupt: tuple = ()
+    sign_flip: tuple = ()
+    scale: tuple = ()
+    backdoor: tuple = ()
 
     def __post_init__(self):
         if self.round < 1:
@@ -57,10 +94,12 @@ class Event:
                 f"the --clients flag), got round={self.round}")
         if self.join < 0:
             raise ValueError(f"join must be >= 0, got {self.join}")
-        object.__setattr__(self, "leave", tuple(int(i) for i in self.leave))
-        object.__setattr__(self, "corrupt",
-                           tuple(int(i) for i in self.corrupt))
-        if any(i < 0 for i in self.leave + self.corrupt):
+        for f in ("leave", "corrupt") + _ATTACK_KINDS:
+            object.__setattr__(self, f,
+                               tuple(int(i) for i in getattr(self, f)))
+        ids = (self.leave + self.corrupt + self.sign_flip + self.scale
+               + self.backdoor)
+        if any(i < 0 for i in ids):
             raise ValueError(f"client ids must be >= 0: {self}")
 
 
@@ -107,6 +146,40 @@ class Scenario:
         return tuple(sorted(i for e in self.events if e.round <= r
                             for i in e.corrupt))
 
+    def sign_flip_ids(self, r: int) -> tuple:
+        return tuple(sorted(i for e in self.events if e.round <= r
+                            for i in e.sign_flip))
+
+    def scale_ids(self, r: int) -> tuple:
+        return tuple(sorted(i for e in self.events if e.round <= r
+                            for i in e.scale))
+
+    def backdoor_ids(self, r: int) -> tuple:
+        return tuple(sorted(i for e in self.events if e.round <= r
+                            for i in e.backdoor))
+
+    def has_uplink_attacks(self) -> bool:
+        """True when any event carries a sign-flip or scale attacker —
+        i.e. the driver must thread an ``attack_coef`` batch key.
+        Backdoor is pure data poisoning and needs no uplink hook."""
+        return any(e.sign_flip or e.scale for e in self.events)
+
+    def attack_coef(self, r: int, ids) -> np.ndarray:
+        """Per-sampled-client uplink coefficients for round ``r``: 1.0
+        for an honest client, -1.0 for a sign-flipper, ``SCALE_FACTOR``
+        for a scaler. The driver applies ``candidate = anchor +
+        coef * (trained - anchor)`` (with an exact passthrough at
+        coef == 1.0), so the coefficient vector — not the attacker set —
+        is what crosses into the jitted round as data."""
+        flip, scale = set(self.sign_flip_ids(r)), set(self.scale_ids(r))
+        coef = np.ones(len(ids), np.float32)
+        for k, i in enumerate(ids):
+            if int(i) in flip:
+                coef[k] = -1.0
+            elif int(i) in scale:
+                coef[k] = SCALE_FACTOR
+        return coef
+
     def active_mask(self, r: int, n_initial: int, capacity: int) -> np.ndarray:
         """(capacity,) bool: which state rows hold an active member when
         round ``r`` runs. Rows past ``n_clients_at(r)`` are padding;
@@ -127,7 +200,8 @@ class Scenario:
         gone: set = set()
         for e in self.events:
             n = self.n_clients_at(e.round, n_initial)
-            for i in e.leave + e.corrupt:
+            for i in (e.leave + e.corrupt + e.sign_flip + e.scale
+                      + e.backdoor):
                 if i >= n:
                     raise ValueError(
                         f"round {e.round} references client {i}, but only "
@@ -138,6 +212,12 @@ class Scenario:
                     f"round {e.round} removes already-departed clients "
                     f"{sorted(dup)}")
             gone.update(e.leave)
+        last = max((e.round for e in self.events), default=0)
+        both = set(self.sign_flip_ids(last)) & set(self.scale_ids(last))
+        if both:
+            raise ValueError(
+                f"clients {sorted(both)} are both sign_flip and scale "
+                f"attackers — the uplink coefficient would be ambiguous")
         return self
 
 
@@ -149,8 +229,45 @@ def flip_labels(y: np.ndarray, kind: str) -> np.ndarray:
     stay a pure function of (seed, round) and resume stays bit-exact."""
     y = np.asarray(y)
     if kind == "multiclass":
+        if y.shape[-1] < 2:
+            # np.roll over a single class is the identity — the
+            # "corruption" would silently do nothing.
+            raise ValueError(
+                f"multiclass label flip needs >= 2 classes, got "
+                f"class axis of size {y.shape[-1]}")
         return np.roll(y, 1, axis=-1)
     return (1.0 - y).astype(y.dtype)
+
+
+def apply_trigger(x: np.ndarray) -> np.ndarray:
+    """Stamp the backdoor trigger into a batch of inputs: the first
+    timestep's first two features are set to ``TRIGGER_VALUE`` — a
+    fixed, input-independent patch (the classic pixel-pattern trigger),
+    so triggered inputs are recognizable regardless of content. Returns
+    a copy; the input is never mutated."""
+    x = np.asarray(x).copy()
+    x[..., 0, :min(2, x.shape[-1])] = TRIGGER_VALUE
+    return x
+
+
+def backdoor_target(kind: str, out_dim: int) -> np.ndarray:
+    """The attacker's target label: class 0 for multiclass (one-hot),
+    all-ones for binary/multilabel. Fixed per task, so backdoor success
+    rate is simply the fraction of triggered inputs the global model
+    maps to this label."""
+    if kind == "multiclass":
+        y = np.zeros(out_dim, np.float32)
+        y[0] = 1.0
+        return y
+    return np.ones(out_dim, np.float32)
+
+
+def backdoor_rows(n: int) -> int:
+    """How many of a backdoor client's ``n`` drawn rows get poisoned:
+    the first ``ceil(BACKDOOR_FRAC * n)`` — a deterministic prefix of
+    the (seed, round)-pure draw, so poisoning adds no RNG state and
+    resume stays bit-exact."""
+    return math.ceil(BACKDOOR_FRAC * n)
 
 
 # ------------------------------------------------------------- file loading --
@@ -203,7 +320,8 @@ def parse_scenario(doc: dict) -> Scenario:
                          "'events' list")
     evs = []
     for item in doc["events"] or []:
-        unknown = set(item) - {"round", "join", "leave", "corrupt"}
+        unknown = set(item) - ({"round", "join", "leave", "corrupt"}
+                               | set(_ATTACK_KINDS))
         if unknown:
             raise ValueError(f"unknown scenario event keys: {sorted(unknown)}")
         if "round" not in item:
@@ -211,7 +329,10 @@ def parse_scenario(doc: dict) -> Scenario:
         evs.append(Event(round=int(item["round"]),
                          join=int(item.get("join", 0)),
                          leave=tuple(item.get("leave", ())),
-                         corrupt=tuple(item.get("corrupt", ()))))
+                         corrupt=tuple(item.get("corrupt", ())),
+                         sign_flip=tuple(item.get("sign_flip", ())),
+                         scale=tuple(item.get("scale", ())),
+                         backdoor=tuple(item.get("backdoor", ()))))
     return Scenario(tuple(evs))
 
 

@@ -139,7 +139,8 @@ def build_federation(args) -> tuple:
             strategy=getattr(args, "strategy", "blendavg"),
             fedprox_mu=getattr(args, "fedprox_mu", 0.0),
             server_opt=getattr(args, "server_opt", "none"),
-            server_lr=getattr(args, "server_lr", 1.0))
+            server_lr=getattr(args, "server_lr", 1.0),
+            n_malicious=getattr(args, "n_malicious", 1))
     else:
         task = make_task(args.task)
         tr, va, _ = train_val_test(task, args.n_train, args.n_val, 64,
@@ -173,7 +174,13 @@ def build_federation(args) -> tuple:
             strategy=getattr(args, "strategy", "blendavg"),
             fedprox_mu=getattr(args, "fedprox_mu", 0.0),
             server_opt=getattr(args, "server_opt", "none"),
-            server_lr=getattr(args, "server_lr", 1.0))
+            server_lr=getattr(args, "server_lr", 1.0),
+            n_malicious=getattr(args, "n_malicious", 1),
+            # gradient-space attackers ride the scenario: the flag is
+            # static round structure (the attack hook + attack_coef
+            # batch key trace in), WHO attacks each round is data
+            attacks=(scenario.has_uplink_attacks()
+                     if scenario is not None else False))
     mesh = make_host_mesh()
     shard = sh.batch_shardings(mesh, batch_specs(spec, ragged=True))
     if store is not None:
@@ -276,6 +283,12 @@ def run_scenario(args, spec, batcher, round_fn, mesh, start: int, state: dict,
         if ev is not None and ev.corrupt:
             log(f"round {r}: clients {list(ev.corrupt)} turn adversarial "
                 "(labels flipped from this round on)")
+        if ev is not None and (ev.sign_flip or ev.scale or ev.backdoor):
+            parts = [f"{kind} {list(ids)}" for kind, ids in
+                     (("sign_flip", ev.sign_flip), ("scale", ev.scale),
+                      ("backdoor", ev.backdoor)) if ids]
+            log(f"round {r}: gradient-space attackers from this round on: "
+                + ", ".join(parts))
         sched = (telemetry_from_state(state)
                  if batcher.policy is not None and batcher.policy.needs_state
                  else None)
@@ -483,9 +496,10 @@ def main() -> None:
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--scenario", default=None,
                     help="churn scenario YAML (repro.data.scenario): "
-                         "join/leave/corrupt events per round; requires "
-                         "--n-sampled > 0, grows state capacity in "
-                         "buckets (see examples/scenarios/)")
+                         "join/leave/corrupt plus gradient-space attack "
+                         "events (sign_flip/scale/backdoor) per round; "
+                         "requires --n-sampled > 0, grows state capacity "
+                         "in buckets (see examples/scenarios/)")
     ap.add_argument("--n-sampled", type=int, default=0)
     ap.add_argument("--policy", default="uniform", choices=POLICIES,
                     help="participation policy for K-of-C sampled rounds "
@@ -498,7 +512,12 @@ def main() -> None:
     ap.add_argument("--strategy", default="blendavg", choices=STRATEGIES,
                     help="aggregation strategy (repro.core.aggregate): "
                          "blendavg scored blend | fedavg volume weights | "
-                         "scaffold control variates | fedprox proximal term")
+                         "scaffold control variates | fedprox proximal term "
+                         "| median / trimmed_mean / krum Byzantine-robust "
+                         "reducers (see --n-malicious)")
+    ap.add_argument("--n-malicious", type=int, default=1,
+                    help="assumed malicious-client budget f for the robust "
+                         "strategies (trim count per side / multi-Krum's f)")
     ap.add_argument("--fedprox-mu", type=float, default=0.0,
                     help="FedProx proximal coefficient (requires "
                          "--strategy fedprox; mu 0 = plain fedavg)")

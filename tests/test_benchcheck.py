@@ -8,8 +8,9 @@ numbers (incl. the non-RFC ``NaN`` literal ``json.dump`` emits),
 compile-cache counts < 1, wire-codec compression fields (ratio < 1,
 zero byte counts; null ``bytes_to_target`` stays valid), and
 convergence fields (``rounds_to_target`` null-or-int>=1, AUROCs inside
-the unit interval), and scenario event counts (``n_join`` / ``n_leave``
-/ ``n_corrupt`` int >= 0).
+the unit interval), scenario event counts (``n_join`` / ``n_leave`` /
+``n_corrupt`` int >= 0), and attack accounting
+(``backdoor_success_rate`` a number in [0, 1]).
 """
 import json
 import os
@@ -145,6 +146,34 @@ def test_zero_event_counts_are_valid(tmp_path):
             "records": [{"policy": "uniform", "rounds_to_target": None,
                          "target_auroc": 0.8, "final_auroc": 0.7,
                          "best_auroc": 0.75, "caches": [1, 1]}]})
+    r = _run(tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_backdoor_success_rate_validated(tmp_path):
+    _write(tmp_path, "BENCH_atk.json",
+           {"bench": "attack", "backend": "cpu",
+            "records": [{"attack": "backdoor", "backdoor_success_rate": 1.2},
+                        {"attack": "scale", "backdoor_success_rate": -0.1},
+                        {"attack": "none", "backdoor_success_rate": None}]})
+    r = _run(tmp_path)
+    assert r.returncode == 1
+    assert r.stdout.count("attack success rate must be a number in "
+                          "[0, 1]") == 3
+
+
+def test_attack_matrix_record_conforms(tmp_path):
+    """A full BENCH_attack cell — both rate extremes are legal values."""
+    _write(tmp_path, "BENCH_attack.json",
+           {"bench": "attack", "backend": "cpu",
+            "records": [{"attack": "backdoor", "defense": "median",
+                         "rounds_to_target": None, "target_auroc": 0.8,
+                         "final_auroc": 0.77, "best_auroc": 0.79,
+                         "backdoor_success_rate": 0.0, "compile_cache": 1},
+                        {"attack": "sign_flip", "defense": "fedavg",
+                         "rounds_to_target": 7, "target_auroc": 0.8,
+                         "final_auroc": 0.85, "best_auroc": 0.85,
+                         "backdoor_success_rate": 1.0, "compile_cache": 1}]})
     r = _run(tmp_path)
     assert r.returncode == 0, r.stdout + r.stderr
 

@@ -1,0 +1,98 @@
+"""``tools/ckpt_inspect.py`` — the checkpoint layout/drift inspector.
+
+Pins the three contracts the ``make ckpt-inspect`` debugging surface
+promises on REAL checkpoints (saved through ``repro.checkpoint`` from a
+sharded round state carrying every optional block):
+
+- exit codes: 0 for a clean registered layout, 2 when the manifest has
+  a top-level key no registered block claims (layout drift — the reason
+  the tool exists), 1 when the directory has no checkpoints at all;
+- the printed per-block table is ``state.manifest_layout`` verbatim —
+  every block header, leaf path, shape, and dtype appears;
+- capacity reporting follows a grow migration: a capacity-8 state
+  inspects as 8 slots, and after ``state.grow`` to 16 the re-saved
+  checkpoint inspects as 16.
+"""
+import io
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools"))
+import ckpt_inspect  # noqa: E402
+
+from repro.checkpoint import save_checkpoint  # noqa: E402
+from repro.core import state as rstate  # noqa: E402
+
+
+def _spec(C: int):
+    from repro.core.federation_sharded import ShardedFedSpec
+
+    return ShardedFedSpec(
+        n_clients=C, d_hidden=8, n_layers=2, seq_a=4, feat_a=3, seq_b=4,
+        feat_b=3, out_dim=3, kind="multiclass", n_partial=4, n_frag=4,
+        n_paired=4, n_val=8, n_sampled=2, codec="int8_topk",
+        strategy="scaffold", server_opt="adam", optimizer="adamw")
+
+
+@pytest.fixture(scope="module")
+def all_blocks_state():
+    """A real round state with every optional block (codec residuals +
+    scaffold control variates) at capacity 8."""
+    from repro.core.federation_sharded import init_round_state
+
+    return init_round_state(jax.random.PRNGKey(0), _spec(8))
+
+
+def _inspect(ckpt_dir, step=None):
+    buf = io.StringIO()
+    code = ckpt_inspect.inspect(str(ckpt_dir), step=step, out=buf)
+    return code, buf.getvalue()
+
+
+def test_no_checkpoints_is_exit_1(tmp_path):
+    code, out = _inspect(tmp_path)
+    assert code == 1 and "no checkpoints" in out
+
+
+def test_clean_layout_is_exit_0_and_matches_manifest_layout(
+        tmp_path, all_blocks_state):
+    from repro.checkpoint import read_manifest
+
+    save_checkpoint(str(tmp_path), 3, all_blocks_state,
+                    {"round": 3, "store_fingerprint": "f" * 64})
+    code, out = _inspect(tmp_path)
+    assert code == 0
+    assert "step 3" in out and "round:       3" in out
+    assert "f" * 12 + "…" in out  # fingerprint abbreviation
+    assert "NOT IN REGISTRY" not in out
+    layout = rstate.manifest_layout(read_manifest(str(tmp_path), 3))
+    assert set(layout) == {b.name for b in rstate.REGISTRY}
+    for name, leaves in layout.items():
+        assert f"{name}  ({len(leaves)} leaves)" in out
+        for path, shape, dtype in leaves:
+            assert path in out and str(tuple(shape)) in out and dtype in out
+
+
+def test_unregistered_key_is_exit_2(tmp_path, all_blocks_state):
+    state = dict(all_blocks_state, rogue={"x": jax.numpy.zeros(3)})
+    save_checkpoint(str(tmp_path), 1, state, {"round": 1})
+    code, out = _inspect(tmp_path)
+    assert code == 2
+    assert "UNREGISTERED: ?rogue" in out and "NOT IN REGISTRY" in out
+
+
+def test_capacity_reported_across_grow(tmp_path, all_blocks_state):
+    """The migration dispatch key: 8 slots before, 16 after a bucket
+    grow — and --step selects among coexisting checkpoints."""
+    save_checkpoint(str(tmp_path), 2, all_blocks_state, {"round": 2})
+    grown = rstate.grow(all_blocks_state, 16)
+    save_checkpoint(str(tmp_path), 5, grown, {"round": 5})
+    code, out = _inspect(tmp_path, step=2)
+    assert code == 0 and "capacity:    8 client slots" in out
+    code, out = _inspect(tmp_path)  # latest = the grown one
+    assert code == 0 and "step 5" in out
+    assert "capacity:    16 client slots" in out

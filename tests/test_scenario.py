@@ -3,23 +3,28 @@
 Covers the three layers of the churn harness separately:
 
 - the declarative model: event validation, pure membership queries
-  (``n_clients_at`` / ``active_mask`` / ``corrupt_ids``), and the
-  label-flip transforms;
+  (``n_clients_at`` / ``active_mask`` / ``corrupt_ids``), the attack
+  events (sign_flip / scale / backdoor: id queries, the per-round
+  ``attack_coef`` uplink vector, the trigger/target transforms), and
+  the label-flip transforms;
 - file loading: ``_mini_yaml`` (the no-PyYAML fallback the CI image
   uses) must parse the supported subset IDENTICALLY to PyYAML, so a
   scenario file means the same thing on every machine — the fallback is
   unit-tested directly because environments with PyYAML installed would
   otherwise never execute it;
 - the batcher: inactive clients are never sampled, corrupt clients'
-  labels arrive flipped, the batch stream stays a pure function of
-  (seed, round), and misuse (no sampling, short roster, K > active)
-  fails loudly.
+  labels arrive flipped, backdoor clients' batches carry the trigger
+  pattern on a deterministic row prefix, the batch stream stays a pure
+  function of (seed, round), and misuse (no sampling, short roster,
+  K > active) fails loudly.
 """
 import numpy as np
 import pytest
 
-from repro.data.scenario import (Event, Scenario, _mini_yaml, flip_labels,
-                                 load_scenario, parse_scenario)
+from repro.data.scenario import (SCALE_FACTOR, TRIGGER_VALUE, Event, Scenario,
+                                 _mini_yaml, apply_trigger, backdoor_rows,
+                                 backdoor_target, flip_labels, load_scenario,
+                                 parse_scenario)
 
 # ------------------------------------------------------- declarative model --
 
@@ -85,6 +90,93 @@ def test_flip_labels():
                                   np.array([[1.0], [0.0]], np.float32))
 
 
+def test_flip_labels_regressions():
+    """The two silent-no-op traps: a multiclass flip over a single class
+    (np.roll identity) must refuse instead of pretending to corrupt, and
+    the flip must be a deterministic involution-like shift — applying it
+    out_dim times round-trips multiclass labels, twice round-trips
+    binary — so corrupt batches are reproducible, never RNG-dependent."""
+    with pytest.raises(ValueError, match=">= 2 classes"):
+        flip_labels(np.ones((4, 1), np.float32), "multiclass")
+    one_hot = np.eye(3, dtype=np.float32)[[2, 0, 1]]
+    y = one_hot
+    for _ in range(3):
+        y = flip_labels(y, "multiclass")
+    np.testing.assert_array_equal(y, one_hot)
+    # two classes: one flip swaps, a second flip restores
+    two = np.eye(2, dtype=np.float32)[[0, 1, 0]]
+    np.testing.assert_array_equal(
+        flip_labels(flip_labels(two, "multiclass"), "multiclass"), two)
+    b = np.array([[0.0], [1.0]], np.float32)
+    np.testing.assert_array_equal(flip_labels(flip_labels(b, "binary"),
+                                              "binary"), b)
+    # pure function of its input: same labels in, same corruption out
+    np.testing.assert_array_equal(flip_labels(one_hot, "multiclass"),
+                                  flip_labels(one_hot.copy(), "multiclass"))
+
+
+# ------------------------------------------------------------ attack model --
+
+
+def _attack_scn():
+    return Scenario((Event(round=2, sign_flip=(1,), backdoor=(3,)),
+                     Event(round=4, scale=(2,), sign_flip=(0,)))).validate(4)
+
+
+def test_attack_event_validation():
+    with pytest.raises(ValueError, match="ids must be >= 0"):
+        Event(round=1, sign_flip=(-1,))
+    with pytest.raises(ValueError, match="ids must be >= 0"):
+        Event(round=1, backdoor=(0, -2))
+    with pytest.raises(ValueError, match="references client 7"):
+        Scenario((Event(round=1, scale=(7,)),)).validate(4)
+    # one client in both uplink-attack sets would make its coefficient
+    # ambiguous — refused at validate time, not resolved silently
+    with pytest.raises(ValueError, match="ambiguous"):
+        Scenario((Event(round=1, sign_flip=(1,)),
+                  Event(round=2, scale=(1,)))).validate(4)
+
+
+def test_attack_queries_are_cumulative_and_pure():
+    s = _attack_scn()
+    assert s.sign_flip_ids(1) == ()
+    assert s.sign_flip_ids(2) == (1,)
+    assert s.sign_flip_ids(4) == (0, 1) == s.sign_flip_ids(9)
+    assert s.scale_ids(3) == () and s.scale_ids(4) == (2,)
+    assert s.backdoor_ids(1) == () and s.backdoor_ids(2) == (3,)
+    assert s.has_uplink_attacks()
+    assert not Scenario((Event(round=1, backdoor=(0,)),)).has_uplink_attacks()
+    assert not Scenario((Event(round=2, join=2),)).has_uplink_attacks()
+
+
+def test_attack_coef_vector():
+    s = _attack_scn()
+    ids = np.array([0, 1, 2, 3])
+    np.testing.assert_array_equal(s.attack_coef(1, ids), np.ones(4))
+    np.testing.assert_array_equal(s.attack_coef(2, ids), [1.0, -1.0, 1.0, 1.0])
+    coef = s.attack_coef(5, ids)
+    assert coef.dtype == np.float32
+    np.testing.assert_array_equal(coef, [-1.0, -1.0, SCALE_FACTOR, 1.0])
+    # backdoor is data poisoning, never an uplink coefficient
+    assert float(s.attack_coef(9, np.array([3]))[0]) == 1.0
+
+
+def test_apply_trigger_and_target():
+    x = np.zeros((5, 4, 3), np.float32)
+    out = apply_trigger(x)
+    assert np.all(x == 0.0), "apply_trigger must copy, not mutate"
+    np.testing.assert_array_equal(out[:, 0, :2],
+                                  np.full((5, 2), TRIGGER_VALUE))
+    assert np.all(out[:, 0, 2:] == 0.0) and np.all(out[:, 1:] == 0.0)
+    # narrow feature axes clamp the stamp instead of failing
+    assert np.all(apply_trigger(np.zeros((2, 3, 1)))[:, 0, 0]
+                  == TRIGGER_VALUE)
+    np.testing.assert_array_equal(backdoor_target("multiclass", 4),
+                                  [1.0, 0.0, 0.0, 0.0])
+    np.testing.assert_array_equal(backdoor_target("binary", 1), [1.0])
+    assert backdoor_rows(5) == 3 and backdoor_rows(0) == 0
+
+
 # ----------------------------------------------------------- file loading --
 
 _DOC = """\
@@ -109,6 +201,28 @@ def test_mini_yaml_parses_the_subset():
                               {"round": 3, "leave": [0, 1], "corrupt": []}]}
     s = parse_scenario(doc)
     assert s.total_joins() == 4 and s.left_ids(3) == (0, 1)
+
+
+_ATTACK_DOC = """\
+events:
+  - round: 2
+    sign_flip: [1]
+    backdoor: [3, 4]
+  - round: 3
+    scale: [2]
+"""
+
+
+def test_mini_yaml_parses_attack_events_like_pyyaml():
+    doc = _mini_yaml(_ATTACK_DOC)
+    assert doc == {"events": [{"round": 2, "sign_flip": [1],
+                               "backdoor": [3, 4]},
+                              {"round": 3, "scale": [2]}]}
+    s = parse_scenario(doc)
+    assert s.sign_flip_ids(2) == (1,) and s.scale_ids(3) == (2,)
+    assert s.backdoor_ids(2) == (3, 4)
+    yaml = pytest.importorskip("yaml")
+    assert _mini_yaml(_ATTACK_DOC) == yaml.safe_load(_ATTACK_DOC)
 
 
 def test_mini_yaml_rejects_out_of_subset():
@@ -254,3 +368,99 @@ def test_k_above_active_count_raises():
     b.build(0)  # 2 active, K=2 — fine
     with pytest.raises(ValueError, match="only 1 clients are active"):
         b.build(1)
+
+
+# ------------------------------------------------------ attacked batches --
+
+
+def test_backdoor_batches_carry_trigger_prefix():
+    """From the event round on, a backdoor client's drawn slab has the
+    trigger stamped and the target label written on exactly the
+    ``backdoor_rows`` prefix; the suffix and every other client's rows
+    stay clean. The clients carry label 1, so the class-0 target is
+    distinguishable from honest labels."""
+    from repro.data.pipeline import FederatedBatcher
+
+    spec = _spec(n_clients=2, n_sampled=2)
+    rng = np.random.default_rng(0)
+    clients = [_client(rng, spec, label=1) for _ in range(2)]
+    scn = Scenario((Event(round=1, backdoor=(1,)),)).validate(2)
+    b = FederatedBatcher(clients, spec, _val(spec), seed=3, prefetch=0,
+                         scenario=scn, n_initial=2)
+    nb = backdoor_rows(spec.n_paired)
+    assert 0 < nb < spec.n_paired
+    honest_y = np.eye(3, dtype=np.float32)[[1] * spec.n_paired]
+    target_y = np.eye(3, dtype=np.float32)[0]
+    for r in range(3):
+        batch = b.build(r)
+        for k, i in enumerate(batch["sampled"]):
+            x, y = batch["paired_a"][k], batch["paired_y"][k]
+            if r >= 1 and i == 1:
+                assert np.all(x[:nb, 0, :2] == TRIGGER_VALUE)
+                np.testing.assert_array_equal(y[:nb],
+                                              np.tile(target_y, (nb, 1)))
+                np.testing.assert_array_equal(y[nb:], honest_y[nb:])
+                assert not np.any(x[nb:, 0, :2] == TRIGGER_VALUE)
+            else:
+                np.testing.assert_array_equal(y, honest_y)
+                assert not np.any(x[:, 0, :2] == TRIGGER_VALUE)
+
+
+def test_attack_coef_rides_the_batch():
+    """With spec.attacks on, every built batch carries the per-candidate
+    uplink coefficient vector — scenario-derived, or all-ones without a
+    scenario (the none-attack arm of a sweep shares the same program)."""
+    from repro.data.pipeline import FederatedBatcher
+
+    spec = _spec(attacks=True)
+    scn = Scenario((Event(round=2, sign_flip=(1,), scale=(2,)),)).validate(8)
+    b = _batcher(scn, 8, 8, spec=spec)
+    for r in (0, 2):
+        batch = b.build(r)
+        coef = batch["attack_coef"]
+        assert coef.shape == (2,) and coef.dtype == np.float32
+        want = {1: -1.0 if r >= 2 else 1.0, 2: SCALE_FACTOR if r >= 2 else 1.0}
+        for k, i in enumerate(batch["sampled"]):
+            assert coef[k] == want.get(int(i), 1.0)
+    rng = np.random.default_rng(0)
+    plain = FederatedBatcher([_client(rng, spec, 0) for _ in range(8)],
+                             spec, _val(spec), seed=3, prefetch=0)
+    np.testing.assert_array_equal(plain.build(0)["attack_coef"],
+                                  np.ones(2, np.float32))
+
+
+def test_attacked_batch_stream_is_pure_in_seed_and_round():
+    """Kill-and-resume determinism for ATTACKED scenarios: a fresh
+    batcher (the post-restore situation) rebuilds bit-identical corrupt,
+    backdoored, and coefficient-bearing batches for any round."""
+    spec = _spec(attacks=True)
+    scn = Scenario((Event(round=1, corrupt=(3,), backdoor=(4,)),
+                    Event(round=2, sign_flip=(1,), scale=(2,)))).validate(8)
+    a = _batcher(scn, 8, 8, spec=spec)
+    b = _batcher(scn, 8, 8, spec=spec)
+    for r in (3, 0, 2, 1):  # out of order: no hidden iteration state
+        ba, bb = a.build(r), b.build(r)
+        assert set(ba) == set(bb)
+        for k in ba:
+            np.testing.assert_array_equal(ba[k], bb[k],
+                                          err_msg=f"round {r} key {k}")
+
+
+def test_ci_attack_scenario_file_loads_and_validates():
+    """The checked-in attacked-CI scenario must stay loadable by BOTH
+    parsers, valid for the ci-smoke lane's --clients 6, and must carry a
+    join (the resume selftest's capacity-growth requirement) plus live
+    uplink attacks (the lane exists to pin the attack hook)."""
+    import os
+
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "examples", "scenarios",
+        "ci_attack.yaml")
+    with open(path) as f:
+        text = f.read()
+    s = parse_scenario(_mini_yaml(text))
+    s.validate(6)
+    assert s.total_joins() > 0, "resume selftest needs a capacity crossing"
+    assert s.has_uplink_attacks()
+    yaml = pytest.importorskip("yaml")
+    assert _mini_yaml(text) == yaml.safe_load(text)

@@ -31,7 +31,10 @@ schema documented in ``docs/benchmarks.md``:
 - scenario event counts (the churn accounting of
   ``BENCH_scenario.json``): ``n_join`` / ``n_leave`` / ``n_corrupt``
   are integers >= 0 (a negative or non-integer event count means the
-  scenario bookkeeping broke).
+  scenario bookkeeping broke);
+- attack accounting (``BENCH_attack.json``): ``backdoor_success_rate``
+  is a number in [0, 1] (a rate outside the unit interval means the
+  triggered-eval bookkeeping broke).
 
 ``benchmarks/results/`` is gitignored, so a fresh checkout has nothing
 to validate — that's a pass (the checker guards whatever records the
@@ -63,6 +66,8 @@ _ROUNDS_KEYS = ("rounds_to_target",)
 _AUROC_KEYS = ("target_auroc", "final_auroc", "best_auroc")
 # churn accounting: scenario event counts are non-negative integers
 _EVENT_KEYS = ("n_join", "n_leave", "n_corrupt")
+# attack accounting (BENCH_attack.json): a success rate is a fraction
+_RATE_KEYS = ("backdoor_success_rate",)
 
 
 def _walk_numbers(node, path, errors):
@@ -117,6 +122,10 @@ def _check_caches(node, path, errors):
                 if isinstance(v, bool) or not isinstance(v, int) or v < 0:
                     errors.append(f"{p}: scenario event count must be an "
                                   f"int >= 0, got {v!r}")
+            elif k in _RATE_KEYS:
+                if not (_is_number(v) and 0.0 <= v <= 1.0):
+                    errors.append(f"{p}: attack success rate must be a "
+                                  f"number in [0, 1], got {v!r}")
             else:
                 _check_caches(v, p, errors)
     elif isinstance(node, list):
