@@ -8,8 +8,8 @@ TEST_FAST_BUDGET_S ?= 240
 
 .PHONY: test test-fast docs-check bench-check ci ci-test ci-smoke \
 	bench-sampled bench-loader bench-store bench-participation \
-	bench-comm bench-agg bench-scenario bench-attack train-federated \
-	ckpt-inspect
+	bench-comm bench-agg bench-scenario bench-attack bench-serve \
+	train-federated serve-smoke ckpt-inspect
 
 test: docs-check
 	$(PYTEST)
@@ -58,8 +58,11 @@ ci-test: docs-check bench-check
 # — plain, codec, scaffold, and ATTACKED variants (the last one turns
 # two clients into gradient-space attackers mid-run and aggregates with
 # the trimmed_mean robust defense, pinning the attack_coef uplink hook
-# and the robust reducers into the resume-parity contract).
-ci-smoke: train-federated
+# and the robust reducers into the resume-parity contract). The
+# serve-smoke lane then covers the SERVING side: padded-bucket scores
+# must match eager predict() bit-for-bit and measured wire bytes must
+# reconcile against the analytic formula (see launch/serve_federated.py).
+ci-smoke: train-federated serve-smoke
 	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
 		--rounds 4 --clients 6 --n-sampled 3 --policy omega_ema \
 		--n-train 384 --rows-cap 16 --d-hidden 16 --n-val 64 --log-every 0
@@ -143,3 +146,19 @@ train-federated:
 	PYTHONPATH=src python -m repro.launch.train_federated --selftest-resume \
 		--rounds 2 --clients 4 --n-train 384 --rows-cap 16 --d-hidden 16 \
 		--n-val 64 --log-every 0
+
+# Serving smoke: train a tiny federation, stream heterogeneous request
+# mixes through the ServingEngine, and assert (a) every padded-bucket
+# score equals the eager predict() path bit-for-bit, (b) exactly one
+# compile per (route, capacity), (c) measured VFL wire bytes == the
+# analytic communication_cost formula.
+serve-smoke:
+	PYTHONPATH=src python -m repro.launch.serve_federated --selftest \
+		--requests 16 --rows 4 --train-rounds 2 --d-hidden 16 \
+		--capacities 2,4,16 --window 8
+
+# Serving engine latency/throughput across request mixes (p50/p99, rps,
+# bytes/request, compile-cache counts) on codec none + int8_topk VFL.
+# Emits BENCH_serve.json.
+bench-serve:
+	PYTHONPATH=src python -m benchmarks.serve_bench

@@ -18,30 +18,31 @@ def run_inference_bench(quick: bool = False) -> None:
     import numpy as np
 
     from benchmarks.common import ExpConfig, run_blendfl, timeit
-    from repro.core.inference import (InferenceRequest, communication_cost,
-                                      local_predict, vfl_server_inference)
+    from repro.core.inference import InferenceRequest, predict
 
     print("\n=== decentralized inference vs VFL serving ===")
     exp = ExpConfig(task="smnist", rounds=4 if quick else 8)
     _, _, (fed, te) = run_blendfl(exp)
     m, ecfg, kind = fed.global_models, fed.ecfg, fed.spec.kind
     req = InferenceRequest(te.x_a[:32], te.x_b[:32])
+    vfl_req = InferenceRequest(te.x_a[:32], te.x_b[:32], vfl=True)
 
     t_local = timeit(lambda: jax.block_until_ready(
-        local_predict(m, req, ecfg, kind)[0]), n=10)
+        predict(m, req, ecfg, kind).scores), n=10)
     t_server = timeit(lambda: jax.block_until_ready(
-        vfl_server_inference(m, fed.server_gmv, req, ecfg, kind)[0]), n=10)
-    c_local = communication_cost(32, ecfg.d_hidden, "decentralized", fed.spec.out_dim)
-    c_server = communication_cost(32, ecfg.d_hidden, "vfl", fed.spec.out_dim)
-    c_srv_i8 = communication_cost(32, ecfg.d_hidden, "vfl", fed.spec.out_dim,
-                                  codec="int8")
+        predict(m, vfl_req, ecfg, kind, server_gmv=fed.server_gmv).scores),
+        n=10)
+    c_local = predict(m, req, ecfg, kind)
+    c_server = predict(m, vfl_req, ecfg, kind, server_gmv=fed.server_gmv)
+    c_srv_i8 = predict(m, vfl_req, ecfg, kind, server_gmv=fed.server_gmv,
+                       codec="int8")
     print(f"{'mode':16s} {'us_per_batch':>12s} {'net_msgs':>9s} {'net_bytes':>10s}")
-    print(f"{'decentralized':16s} {t_local:12.0f} {c_local['messages']:9d} "
-          f"{c_local['bytes']:10d}")
-    print(f"{'vfl_server':16s} {t_server:12.0f} {c_server['messages']:9d} "
-          f"{c_server['bytes']:10d}")
-    print(f"{'vfl_server_int8':16s} {'':>12s} {c_srv_i8['messages']:9d} "
-          f"{c_srv_i8['bytes']:10d}")
+    print(f"{'decentralized':16s} {t_local:12.0f} {c_local.messages:9d} "
+          f"{c_local.bytes:10d}")
+    print(f"{'vfl_server':16s} {t_server:12.0f} {c_server.messages:9d} "
+          f"{c_server.bytes:10d}")
+    print(f"{'vfl_server_int8':16s} {'':>12s} {c_srv_i8.messages:9d} "
+          f"{c_srv_i8.bytes:10d}")
     print("--> BlendFL serves locally with zero network traffic; conventional "
           "VFL pays 2 uploads + 1 download per request and needs a live "
           "server — the int8 wire codec shrinks but cannot close that gap")

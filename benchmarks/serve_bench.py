@@ -1,0 +1,190 @@
+"""§Serving: latency/throughput of the decentralized inference engine.
+
+Trains a small BlendFL federation in-host (``benchmarks.common``), then
+drives its blended models through ``repro.core.serving.ServingEngine``
+under three request mixes spanning the paper's serving regimes:
+
+  - ``all_multimodal``: every request carries both modalities — the
+    happy path, pure local multimodal fusion;
+  - ``mixed_unimodal``: 50/50 A-only / B-only — the modality-
+    heterogeneous cohort, local unimodal heads;
+  - ``vfl_heavy``: 60% conventional-VFL fallback — the comparison
+    regime where every request pays server round-trip bytes.
+
+All three mixes run through ONE engine (codec ``none``), so the
+compile-cache invariant is measured across the union of their shapes:
+exactly 1 per (route, capacity) no matter the mix. A second engine arm
+repeats ``vfl_heavy`` with the ``int8_topk`` wire codec to price the
+fallback's feature/score messages compressed. Per mix (after a warmup
+pass that absorbs compiles): p50/p99 request latency, requests/sec,
+rows/sec, measured bytes/request, and the analytic-vs-measured wire
+byte reconciliation.
+
+Emits ``BENCH_serve.json`` (before acceptance asserts, via the atomic
+``write_bench_json``). Acceptance: every (route, capacity) compile
+cache is exactly 1; every served score is bit-identical to a single-
+request ``inference.predict`` call; measured wire bytes equal the
+analytic ``communication_cost`` total on every mix.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import ExpConfig, max_rss_mb, run_blendfl, write_bench_json
+
+
+def serve_arm(engine, spec, ecfg, models, gmv, mix: str, n: int, rows: int,
+              *, codec: str, seed: int, check_parity: bool) -> dict:
+    """One measured pass of one mix through an engine (stats deltas are
+    computed around the pass so arms sharing an engine stay separable).
+    """
+    from repro.core.inference import predict
+    from repro.launch.serve_federated import make_requests
+
+    reqs = make_requests(spec, mix, n, rows=rows, seed=seed)
+    before = dict(engine.stats)
+    t0 = time.perf_counter()
+    results = engine.run(reqs)
+    wall = time.perf_counter() - t0
+
+    lat_ms = np.array([r.latency_s for r in results]) * 1e3
+    total_rows = int(sum(len(r.scores) for r in results))
+    analytic_bytes = int(sum(r.bytes for r in results))
+    measured_bytes = int(engine.stats["wire_bytes"] - before["wire_bytes"])
+    parity_checked = 0
+    if check_parity:
+        for res, req in zip(results, reqs):
+            ref = predict(models, req, ecfg, spec.kind, server_gmv=gmv,
+                          codec=codec if req.vfl else None)
+            if not (res.route is ref.route
+                    and np.array_equal(np.asarray(res.scores),
+                                       np.asarray(ref.scores))):
+                raise AssertionError(
+                    f"mix {mix}: request {res.index} ({res.route.value}) "
+                    "diverges from single-request predict")
+            parity_checked += 1
+    return {
+        "mix": mix, "codec": codec, "requests": n, "rows": total_rows,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "rps": n / wall,
+        "rows_per_s": total_rows / wall,
+        "bytes_per_request": analytic_bytes / n,
+        "wire_bytes_measured": measured_bytes,
+        "wire_bytes_analytic": analytic_bytes,
+        "wire_messages": int(engine.stats["wire_messages"]
+                             - before["wire_messages"]),
+        "batches": int(engine.stats["batches"] - before["batches"]),
+        "parity_checked": parity_checked,
+        "wall_s": wall,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller federation + request counts")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests per mix (overrides --quick sizing)")
+    args = ap.parse_args()
+
+    from repro.core.serving import ServingConfig, ServingEngine
+    from repro.data.synthetic import make_task
+    from repro.launch.serve_federated import MIXES
+
+    n_req = args.requests or (32 if args.quick else 96)
+    rows = 6 if args.quick else 12
+    exp = ExpConfig(rounds=4 if args.quick else 10,
+                    n_train=240 if args.quick else 500,
+                    d_hidden=32 if args.quick else 48)
+    print(f"training serving models: {exp.n_clients} clients, "
+          f"{exp.rounds} rounds, d_hidden {exp.d_hidden}")
+    metrics, _, (fed, _te) = run_blendfl(exp)
+    spec = make_task(exp.task)
+    models, gmv, ecfg = fed.global_models, fed.server_gmv, fed.ecfg
+    print(f"trained: multimodal AUROC {metrics['multimodal_auroc']:.3f}")
+
+    capacities = (2, 4, 16, 64)
+    scfg = ServingConfig(capacities=capacities, codec="none")
+    engine = ServingEngine(models, ecfg, spec.kind, server_gmv=gmv, cfg=scfg)
+    # warmup: absorb every (route, capacity) compile OUTSIDE the timed
+    # passes — a latency percentile that includes XLA compile time
+    # measures the compiler, not the engine
+    for mix in sorted(MIXES):
+        serve_arm(engine, spec, ecfg, models, gmv, mix, min(n_req, 24),
+                  rows=rows, codec="none", seed=7, check_parity=False)
+
+    records = []
+    for mix in sorted(MIXES):
+        rec = serve_arm(engine, spec, ecfg, models, gmv, mix, n_req,
+                        rows=rows, codec="none", seed=1,
+                        check_parity=True)
+        records.append(rec)
+        print(f"mix {mix:>15}: p50 {rec['p50_ms']:7.2f}ms "
+              f"p99 {rec['p99_ms']:7.2f}ms {rec['rps']:7.1f} req/s "
+              f"{rec['bytes_per_request']:8.0f} B/req")
+    shared_caches = {f"{route}/cap{cap}": n
+                     for (route, cap), n in engine.cache_counts().items()}
+
+    # codec arm: its VFL program differs (quantize/sparsify ops inline),
+    # so it gets its own engine — and its own cache-1 ledger
+    codec_engine = ServingEngine(models, ecfg, spec.kind, server_gmv=gmv,
+                                 cfg=ServingConfig(capacities=capacities,
+                                                   codec="int8_topk"))
+    serve_arm(codec_engine, spec, ecfg, models, gmv, "vfl_heavy",
+              min(n_req, 24), rows=rows, codec="int8_topk", seed=7,
+              check_parity=False)
+    rec = serve_arm(codec_engine, spec, ecfg, models, gmv, "vfl_heavy",
+                    n_req, rows=rows, codec="int8_topk", seed=1,
+                    check_parity=True)
+    records.append(rec)
+    print(f"mix {'vfl_heavy/int8_topk':>15}: p50 {rec['p50_ms']:7.2f}ms "
+          f"p99 {rec['p99_ms']:7.2f}ms {rec['rps']:7.1f} req/s "
+          f"{rec['bytes_per_request']:8.0f} B/req")
+    codec_caches = {f"{route}/cap{cap}": n
+                    for (route, cap), n in codec_engine.cache_counts().items()}
+
+    payload = {
+        "bench": "serve_engine",
+        "backend": jax.default_backend(),
+        "quick": bool(args.quick),
+        "records": records,
+        "record_extra": {
+            "capacities": list(capacities),
+            "d_hidden": exp.d_hidden,
+            "multimodal_auroc": metrics["multimodal_auroc"],
+            "caches": sorted(shared_caches.values())
+            + sorted(codec_caches.values()),
+            "cache_map": shared_caches,
+            "cache_map_codec": codec_caches,
+            "engine_stats": {k: v for k, v in engine.stats.items()
+                             if k != "batches_by_route"},
+            "max_rss_mb": max_rss_mb(),
+        },
+    }
+    write_bench_json("BENCH_serve.json", payload)
+
+    # acceptance AFTER the atomic emission — a failed assert must still
+    # leave the record on disk for comparison
+    for label, caches in (("shared", shared_caches), ("codec", codec_caches)):
+        assert caches and all(v == 1 for v in caches.values()), \
+            f"{label} engine compile cache not 1 per (route, capacity): {caches}"
+    for rec in records:
+        assert rec["wire_bytes_measured"] == rec["wire_bytes_analytic"], \
+            (rec["mix"], rec["codec"], rec["wire_bytes_measured"],
+             rec["wire_bytes_analytic"])
+        assert rec["parity_checked"] == rec["requests"]
+    print(f"acceptance ok: caches all 1 "
+          f"({len(shared_caches)} shared + {len(codec_caches)} codec "
+          "programs); measured == analytic wire bytes on every mix; "
+          "every request bit-exact vs predict")
+
+
+if __name__ == "__main__":
+    main()

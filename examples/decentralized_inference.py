@@ -14,8 +14,7 @@ import numpy as np
 
 from repro.core import FedConfig, Federation, partition
 from repro.core.encoders import EncoderConfig
-from repro.core.inference import (InferenceRequest, communication_cost,
-                                  local_predict, vfl_server_inference)
+from repro.core.inference import InferenceRequest, predict
 from repro.data.synthetic import make_task, train_val_test
 from repro.metrics import auroc
 
@@ -38,22 +37,25 @@ def main() -> None:
         (InferenceRequest(None, test.x_b[:64]), "only CXR/image (B)", test.y[:64]),
     ]:
         t0 = time.perf_counter()
-        scores, mode = local_predict(models, req, ecfg, kind)
-        jax.block_until_ready(scores)
+        res = predict(models, req, ecfg, kind)
+        jax.block_until_ready(res.scores)
         dt = (time.perf_counter() - t0) * 1e3
-        print(f"  {label:22s} -> {mode:12s} auroc={auroc(y, np.asarray(scores)):.3f} "
-              f"{dt:6.1f} ms, {communication_cost(64, ecfg.d_hidden, 'decentralized', spec.out_dim)}")
+        print(f"  {label:22s} -> {res.route.value:12s} "
+              f"auroc={auroc(y, np.asarray(res.scores)):.3f} "
+              f"{dt:6.1f} ms, {res.messages} msgs / {res.bytes} bytes")
 
     print("\n-- conventional VFL serving (server required, both modalities) --")
-    req = InferenceRequest(test.x_a[:64], test.x_b[:64])
+    req = InferenceRequest(test.x_a[:64], test.x_b[:64], vfl=True)
     t0 = time.perf_counter()
-    scores, msgs = vfl_server_inference(models, fed.server_gmv, req, ecfg, kind)
-    jax.block_until_ready(scores)
+    res = predict(models, req, ecfg, kind, server_gmv=fed.server_gmv)
+    jax.block_until_ready(res.scores)
     dt = (time.perf_counter() - t0) * 1e3
-    print(f"  both modalities        -> server       auroc={auroc(test.y[:64], np.asarray(scores)):.3f} "
-          f"{dt:6.1f} ms, {communication_cost(64, ecfg.d_hidden, 'vfl', spec.out_dim)}")
+    print(f"  both modalities        -> {res.route.value:12s} "
+          f"auroc={auroc(test.y[:64], np.asarray(res.scores)):.3f} "
+          f"{dt:6.1f} ms, {res.messages} msgs / {res.bytes} bytes")
     print("\nconventional VFL cannot serve the unimodal requests at all — "
-          "and every request costs a server round-trip.")
+          "and every request costs a server round-trip. (Batched serving "
+          "over a request stream: repro.launch.serve_federated.)")
 
 
 if __name__ == "__main__":

@@ -7,7 +7,7 @@ import jax
 
 from repro.core import FedConfig, Federation, evaluate_global, partition
 from repro.core.encoders import EncoderConfig
-from repro.core.inference import InferenceRequest, local_predict
+from repro.core.inference import InferenceRequest, predict
 from repro.data.synthetic import make_task, train_val_test
 
 # 1. a multimodal task (audio-visual digits stand-in) split across hospitals
@@ -38,7 +38,8 @@ print({k: round(v, 3) for k, v in evaluate_global(fed, test).items()})
 
 # 5. decentralized inference: any hospital serves locally, with whatever
 #    modalities the sample has — no server round-trip
-scores, mode = local_predict(fed.global_models,
-                             InferenceRequest(x_a=test.x_a[:4], x_b=None),
-                             fed.ecfg, spec.kind)
-print(f"local unimodal prediction ({mode}): scores shape {scores.shape}")
+res = predict(fed.global_models,
+              InferenceRequest(x_a=test.x_a[:4], x_b=None),
+              fed.ecfg, spec.kind)
+print(f"local unimodal prediction ({res.route.value}): "
+      f"scores shape {res.scores.shape}, {res.bytes} wire bytes")

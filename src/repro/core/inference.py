@@ -1,22 +1,41 @@
-"""Decentralized inference (paper contribution #2).
+"""Decentralized inference (paper contribution #2) — the typed request API.
 
 After BlendFL training every client holds the blended ``f_A, f_B, g_A,
 g_B, g_M`` — so it can serve predictions with whatever modalities a local
 sample has, with ZERO server round-trips:
 
-    both modalities present  -> g_M(f_A(x_A), f_B(x_B))
-    only A                   -> g_A(f_A(x_A))
-    only B                   -> g_B(f_B(x_B))
+    both modalities present  -> g_M(f_A(x_A), f_B(x_B))     Route.MULTIMODAL
+    only A                   -> g_A(f_A(x_A))               Route.UNIMODAL_A
+    only B                   -> g_B(f_B(x_B))               Route.UNIMODAL_B
 
-``vfl_server_inference`` is the conventional-VFL comparison path (SplitNN
-style): features go up, predictions come down — 2 network messages per
-request, and unavailable when the peer holding the other modality is
-offline. ``communication_cost`` quantifies the gap for the benchmark.
+``Route.VFL_FALLBACK`` is the conventional-VFL comparison path (SplitNN
+style): features go up to the server head ``g_M^v``, predictions come
+down — per-request network messages, and unavailable when the peer
+holding the other modality is offline. A request opts into it with
+``InferenceRequest(vfl=True)`` (it models a client that holds encoders
+but no blended heads).
+
+``predict`` is the single typed entry point: it routes the request,
+runs the forward through a per-(route, shape) compiled program, and
+returns a ``PredictResult`` carrying the scores, the chosen ``Route``,
+and the network cost (messages / bytes) the exchange incurred. The VFL
+route prices — and, when a codec is given, lossily round-trips — its
+feature/score messages through ``repro.core.codec``, one wire message
+per sample row (the same per-row message convention as the training
+codec's ``encode_decode_stacked``).
+
+``local_predict`` / ``vfl_server_inference`` are the pre-``predict``
+surface, kept as thin deprecated wrappers. The batched many-request
+engine over the same forward path is ``repro.core.serving``.
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
+import functools
+import warnings
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -25,51 +44,194 @@ from repro.core.encoders import EncoderConfig, encoder_apply, fusion_apply, task
 from repro.models.common import dense
 
 
+class Route(enum.Enum):
+    """How a request is served, chosen from its available modalities."""
+
+    MULTIMODAL = "multimodal"
+    UNIMODAL_A = "unimodal_A"
+    UNIMODAL_B = "unimodal_B"
+    VFL_FALLBACK = "vfl_fallback"
+
+
+# deterministic ordering for engines that bucket requests by route
+ROUTES = (Route.MULTIMODAL, Route.UNIMODAL_A, Route.UNIMODAL_B,
+          Route.VFL_FALLBACK)
+
+
 @dataclasses.dataclass
 class InferenceRequest:
     x_a: np.ndarray | None  # (B, S_a, F_a) or None if modality missing
     x_b: np.ndarray | None
+    # vfl=True asks for conventional server-mediated (SplitNN) serving —
+    # the fallback for a client that holds no blended heads. Needs both
+    # modalities and a live server head.
+    vfl: bool = False
 
 
-def local_predict(models: dict, req: InferenceRequest, ecfg: EncoderConfig, kind: str):
-    """Decentralized inference on a client's own blended models."""
+@dataclasses.dataclass
+class PredictResult:
+    """One served request: scores plus how (and at what cost) it ran.
+
+    ``messages``/``bytes`` are the network cost of THIS request served
+    alone (0 for the local routes; 2 feature uploads + 1 score download
+    for ``VFL_FALLBACK``, priced per sample row through the wire codec).
+    """
+
+    scores: jnp.ndarray  # (B, out_dim) probability scores
+    route: Route
+    messages: int
+    bytes: int
+
+
+def request_rows(req: InferenceRequest) -> int:
+    """Sample rows a request carries (its present modalities must agree)."""
+    na = None if req.x_a is None else len(req.x_a)
+    nb = None if req.x_b is None else len(req.x_b)
+    if na is not None and nb is not None and na != nb:
+        raise ValueError(f"request modalities disagree on rows: x_a has "
+                         f"{na}, x_b has {nb}")
+    n = na if na is not None else nb
+    if n is None:
+        raise ValueError("request carries no modality")
+    return n
+
+
+def route_for(req: InferenceRequest) -> Route:
+    """Route selection: VFL when asked for (and possible), else local by
+    modality presence. Raises ``ValueError`` on an unservable request."""
+    request_rows(req)  # raises on the no-modality / ragged cases
+    if req.vfl:
+        if req.x_a is None or req.x_b is None:
+            raise ValueError(
+                "VFL serving needs both parties: the server head fuses "
+                "h_A and h_B, so a request missing a modality can only be "
+                "served by the decentralized unimodal routes")
+        return Route.VFL_FALLBACK
     if req.x_a is not None and req.x_b is not None:
-        h_a = encoder_apply(models["f_A"], jnp.asarray(req.x_a), ecfg)
-        h_b = encoder_apply(models["f_B"], jnp.asarray(req.x_b), ecfg)
-        return task_scores(fusion_apply(models["g_M"], h_a, h_b), kind), "multimodal"
-    if req.x_a is not None:
-        h = encoder_apply(models["f_A"], jnp.asarray(req.x_a), ecfg)
-        return task_scores(dense(models["g_A"], h), kind), "unimodal_A"
-    if req.x_b is not None:
-        h = encoder_apply(models["f_B"], jnp.asarray(req.x_b), ecfg)
-        return task_scores(dense(models["g_B"], h), kind), "unimodal_B"
-    raise ValueError("request carries no modality")
+        return Route.MULTIMODAL
+    return Route.UNIMODAL_A if req.x_a is not None else Route.UNIMODAL_B
 
 
-def vfl_server_inference(client_models: dict, server_gmv: dict, req: InferenceRequest,
-                         ecfg: EncoderConfig, kind: str):
-    """Conventional-VFL serving: client(s) push latent features to the
-    server, the server head predicts. Requires both modalities and a live
-    server — the baseline BlendFL's decentralized path removes."""
-    assert req.x_a is not None and req.x_b is not None, "VFL serving needs both parties"
-    h_a = encoder_apply(client_models["f_A"], jnp.asarray(req.x_a), ecfg)  # msg 1 up
-    h_b = encoder_apply(client_models["f_B"], jnp.asarray(req.x_b), ecfg)  # msg 2 up
-    return task_scores(fusion_apply(server_gmv, h_a, h_b), kind), 3  # 2 up + 1 down
+def route_scores(models: dict, route: Route, x_a, x_b, ecfg: EncoderConfig,
+                 kind: str, *, server_gmv=None, codec: wire.CodecConfig | None = None):
+    """Pure forward for one route (jit-safe jnp ops only).
+
+    This is THE forward both ``predict`` and the batched
+    ``repro.core.serving`` engine trace, so a padded engine batch and a
+    single-request call compile the same math and their per-row scores
+    stay bit-identical. The VFL route round-trips its feature uploads
+    and score download through the wire codec (per-row messages:
+    ``encode_decode_stacked`` gives every sample row its own scale and
+    top-k threshold, so zero-padded rows never perturb live ones).
+    """
+    if route is Route.MULTIMODAL:
+        h_a = encoder_apply(models["f_A"], x_a, ecfg)
+        h_b = encoder_apply(models["f_B"], x_b, ecfg)
+        return task_scores(fusion_apply(models["g_M"], h_a, h_b), kind)
+    if route is Route.UNIMODAL_A:
+        return task_scores(dense(models["g_A"], encoder_apply(models["f_A"], x_a, ecfg)), kind)
+    if route is Route.UNIMODAL_B:
+        return task_scores(dense(models["g_B"], encoder_apply(models["f_B"], x_b, ecfg)), kind)
+    if route is Route.VFL_FALLBACK:
+        h_a = encoder_apply(models["f_A"], x_a, ecfg)  # feature msg up
+        h_b = encoder_apply(models["f_B"], x_b, ecfg)  # feature msg up
+        if codec is not None and codec.enabled:
+            h_a = wire.encode_decode_stacked(h_a, codec)
+            h_b = wire.encode_decode_stacked(h_b, codec)
+        scores = task_scores(fusion_apply(server_gmv, h_a, h_b), kind)
+        if codec is not None and codec.enabled:  # score msg down
+            scores = wire.encode_decode_stacked(scores, codec)
+        return scores
+    raise ValueError(f"unknown route {route!r}")
+
+
+# Single-sample calls execute padded to 2 rows: XLA lowers a 1-row
+# batch to matrix-vector products whose reduction order differs from the
+# matrix-matrix lowering every batch >= 2 shares, so batch-1 scores
+# drift by an ulp from the same row served in any batch. Padding the
+# lone row keeps predict bit-identical to the serving engine's
+# micro-batches (whose capacity ladder floors at 2 for the same reason).
+MIN_COMPILED_ROWS = 2
+
+
+@functools.lru_cache(maxsize=None)
+def _predict_fn(route: Route, ecfg: EncoderConfig, kind: str,
+                codec: wire.CodecConfig | None):
+    """One compiled program per (route, encoder config, task kind, codec)
+    — compiled once per input shape. Compiling (rather than running op by
+    op) is what makes single-request ``predict`` bit-identical to the
+    serving engine's padded batches: XLA's fusion decisions differ
+    between eager and jitted execution, while compiled per-row math is
+    invariant to batch size (>= MIN_COMPILED_ROWS), padding, and row
+    offset."""
+    if route is Route.VFL_FALLBACK:
+        def fn(models, server_gmv, x_a, x_b):
+            return route_scores(models, route, x_a, x_b, ecfg, kind,
+                                server_gmv=server_gmv, codec=codec)
+    else:
+        def fn(models, x_a, x_b):
+            return route_scores(models, route, x_a, x_b, ecfg, kind)
+    return jax.jit(fn)
+
+
+def predict(models: dict, req: InferenceRequest, ecfg: EncoderConfig,
+            kind: str, *, server_gmv: dict | None = None,
+            codec: wire.CodecConfig | str | None = None) -> PredictResult:
+    """Serve one request: route by available modalities, run the compiled
+    forward, report the network cost.
+
+    ``server_gmv`` (the server's split-training head) is required only
+    when the request asks for ``vfl=True``. ``codec`` (a name or
+    ``repro.core.codec.CodecConfig``) applies the wire codec to the VFL
+    route's messages — both the lossy payload round-trip and the byte
+    pricing; local routes never touch the network.
+    """
+    route = route_for(req)
+    if isinstance(codec, str):
+        codec = wire.make_codec(codec)
+    n = request_rows(req)
+    pad = max(0, MIN_COMPILED_ROWS - n)
+
+    def prep(x):
+        if x is None:
+            return None
+        x = jnp.asarray(x)
+        # pad rows are sliced off below; they never mix into live rows
+        # (all routes are row-parallel), so no mask is needed here
+        return jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]) if pad else x
+
+    x_a, x_b = prep(req.x_a), prep(req.x_b)
+    if route is Route.VFL_FALLBACK:
+        if server_gmv is None:
+            raise ValueError("VFL serving needs the server head: pass "
+                             "server_gmv= (see Federation.server_gmv)")
+        fn = _predict_fn(route, ecfg, kind, codec)
+        scores = fn(models, server_gmv, x_a, x_b)[:n]
+        cost = communication_cost(n, ecfg.d_hidden, "vfl",
+                                  int(scores.shape[-1]), codec=codec)
+        return PredictResult(scores, route, cost["messages"], cost["bytes"])
+    fn = _predict_fn(route, ecfg, kind, None)
+    scores = fn(models, x_a, x_b)[:n]
+    return PredictResult(scores, route, 0, 0)
 
 
 def communication_cost(batch: int, d_hidden: int, mode: str, out_dim: int,
                        *, dtype_bytes: int = 4, codec=None) -> dict:
-    """Bytes over the network per inference batch.
+    """Analytic bytes over the network per inference batch.
 
     decentralized: 0 — the blended models are local.
-    vfl: two feature uploads (batch * d_hidden values each) + one score
-    download (batch * out_dim values) per batch — all 3 messages the
-    ``vfl_server_inference`` exchange reports are counted.
+    vfl: two feature uploads + one score download per batch, each sample
+    row its own wire message (per-row scale/indices under a lossy codec
+    — the same convention as ``codec.encode_decode_stacked``, and what
+    the serving engine's measured byte counts reconcile against):
+
+        bytes = batch * (2 * row_bytes(d_hidden) + row_bytes(out_dim))
 
     ``dtype_bytes`` sizes a dense payload value (4 = fp32 default, 2 =
     bf16 activations); ``codec`` (a ``repro.core.codec.CodecConfig`` or
-    codec name) prices each message through the wire codec's format
-    instead, so codec savings show up in the decentralized-inference gap
+    codec name) prices each row through the wire codec's format instead,
+    so codec savings show up in the decentralized-inference gap
     quantity, not just in training rounds.
     """
     if mode == "decentralized":
@@ -78,7 +240,32 @@ def communication_cost(batch: int, d_hidden: int, mode: str, out_dim: int,
         codec = wire.make_codec(codec)
     if codec is None:
         codec = wire.CodecConfig()  # "none": dense dtype_bytes payloads
-    feat_bytes = 2 * wire.leaf_payload_bytes(batch * d_hidden, codec,
-                                             dtype_bytes)
-    score_bytes = wire.leaf_payload_bytes(batch * out_dim, codec, dtype_bytes)
+    feat_bytes = 2 * batch * wire.leaf_payload_bytes(d_hidden, codec,
+                                                     dtype_bytes)
+    score_bytes = batch * wire.leaf_payload_bytes(out_dim, codec, dtype_bytes)
     return {"messages": 3, "bytes": feat_bytes + score_bytes}
+
+
+# ------------------------------------------------- deprecated wrappers -----
+
+def local_predict(models: dict, req: InferenceRequest, ecfg: EncoderConfig, kind: str):
+    """Deprecated: use ``predict`` (returns a typed ``PredictResult``)."""
+    warnings.warn(
+        "local_predict is deprecated: use repro.core.inference.predict, "
+        "which returns a PredictResult (scores / Route / messages / bytes)",
+        DeprecationWarning, stacklevel=2)
+    res = predict(models, dataclasses.replace(req, vfl=False), ecfg, kind)
+    return res.scores, res.route.value
+
+
+def vfl_server_inference(client_models: dict, server_gmv: dict, req: InferenceRequest,
+                         ecfg: EncoderConfig, kind: str):
+    """Deprecated: use ``predict(..., server_gmv=...)`` on a request with
+    ``vfl=True``."""
+    warnings.warn(
+        "vfl_server_inference is deprecated: use repro.core.inference."
+        "predict with InferenceRequest(vfl=True) and server_gmv=",
+        DeprecationWarning, stacklevel=2)
+    res = predict(client_models, dataclasses.replace(req, vfl=True), ecfg,
+                  kind, server_gmv=server_gmv)
+    return res.scores, res.messages

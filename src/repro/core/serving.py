@@ -1,0 +1,442 @@
+"""Decentralized serving engine: jitted micro-batched request execution.
+
+The millions-of-users path for the paper's third pillar. A
+``ServingEngine`` takes a stream of heterogeneous ``InferenceRequest``s
+— any mix of modality-presence combos — and turns Python-loop per-request
+serving into four compiled programs fed with padded micro-batches:
+
+1. **Route bucketing.** Each request is routed by
+   ``inference.route_for`` (multimodal / unimodal_A / unimodal_B /
+   vfl_fallback) and its rows coalesced with same-route neighbours from
+   the same assembly window into one micro-batch.
+2. **Capacity padding.** A micro-batch pads up to the smallest
+   configured capacity that holds it (the ``core.state.capacity_for``
+   idiom, with an explicit capacity ladder instead of one bucket size),
+   so arbitrary request mixes replay a tiny set of static shapes:
+   compile cache stays EXACTLY 1 per (route, capacity) forever.
+3. **Donated-buffer execution.** One jitted function per (route,
+   capacity); the padded input and mask buffers are donated — they are
+   per-batch scratch, so XLA may reuse their memory for the scores.
+   Padded rows are masked (``scores * mask[:, None]``) and the live
+   rows are bit-identical to single-request ``inference.predict`` calls:
+   both trace the same ``route_scores`` forward, and row-parallel
+   compiled math doesn't change with batch padding.
+4. **Double-buffered assembly.** Host-side window assembly (routing,
+   chunking, padding — numpy only) runs on a daemon worker thread
+   feeding a bounded queue, the ``data.pipeline`` prefetch idiom, so
+   batch assembly overlaps device execution. ``stall_seconds`` is
+   assembly time the overlap failed to hide.
+
+The VFL fallback route threads its per-row feature/score messages
+through the wire codec (``core.codec``), and the engine meters actual
+bytes per executed micro-batch — ``stats["wire_bytes"]`` is a MEASURED
+quantity that reconciles exactly against the analytic
+``inference.communication_cost`` formula (bytes are per-row, so
+coalescing changes message counts, never byte totals).
+
+Requests larger than the top capacity are chunked into parts and
+reassembled in arrival order, so one engine serves single-sample lookups
+and bulk scoring batches through the same four compiled programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec as wire
+from repro.core import inference
+from repro.core.encoders import EncoderConfig
+from repro.core.inference import (InferenceRequest, Route, ROUTES,
+                                  communication_cost, request_rows,
+                                  route_for, route_scores)
+
+_SENTINEL = object()  # end-of-stream marker for the assembly queue
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Engine shape/wire policy. Frozen: it keys compiled programs.
+
+    ``capacities`` is the padded-batch ladder (ascending); its maximum
+    is also the micro-batch coalescing limit. The ladder floors at 2:
+    XLA lowers 1-row batches to matrix-vector products whose reduction
+    order drifts an ulp from the matrix-matrix lowering all batches
+    >= 2 share (``inference.MIN_COMPILED_ROWS``), which would break the
+    engine's bit-parity with ``predict``. ``codec`` applies the wire
+    codec to the VFL route's messages. ``window`` is how many requests
+    one assembly pass may coalesce; ``prefetch`` is how many assembled
+    windows the worker may stage ahead (0 = synchronous assembly).
+    """
+
+    capacities: tuple = (2, 4, 16, 64)
+    codec: str = "none"
+    topk_frac: float = 0.25
+    window: int = 32
+    prefetch: int = 2
+
+    def __post_init__(self):
+        caps = tuple(int(c) for c in self.capacities)
+        if not caps or list(caps) != sorted(set(caps)):
+            raise ValueError(f"capacities must be ascending unique ints, got {self.capacities}")
+        if caps[0] < inference.MIN_COMPILED_ROWS:
+            raise ValueError(
+                f"capacities floor at {inference.MIN_COMPILED_ROWS} (got "
+                f"{caps[0]}): 1-row batches lower to matrix-vector math "
+                "whose bits drift from every batched shape, breaking "
+                "parity with inference.predict")
+        object.__setattr__(self, "capacities", caps)
+        if self.codec not in wire.CODECS:
+            raise ValueError(f"codec {self.codec!r} not in {wire.CODECS}")
+        if self.window < 1:
+            raise ValueError(f"window={self.window} must be >= 1")
+        if self.prefetch < 0:
+            raise ValueError(f"prefetch={self.prefetch} must be >= 0")
+
+
+def bucket_for(n: int, capacities: tuple) -> int:
+    """Smallest configured capacity holding ``n`` rows (the
+    ``core.state.capacity_for`` idiom over an explicit ladder)."""
+    if n < 1:
+        raise ValueError(f"n={n} must be >= 1")
+    for c in capacities:
+        if n <= c:
+            return c
+    raise ValueError(f"n={n} rows exceed the top capacity {capacities[-1]}; "
+                     "chunk before bucketing")
+
+
+@dataclasses.dataclass
+class ServedResult:
+    """One completed request.
+
+    ``messages``/``bytes`` are the request's own logical network cost
+    (``communication_cost`` of its rows; 0 on local routes) — what this
+    request would cost served alone. The engine's *actual* coalesced
+    wire traffic is metered in ``ServingEngine.stats`` (same byte total,
+    fewer messages).
+    """
+
+    index: int
+    scores: jnp.ndarray
+    route: Route
+    messages: int
+    bytes: int
+    latency_s: float
+
+
+# One part of one request inside an assembly window: requests larger
+# than the top capacity are split into parts, served independently, and
+# reassembled in offset order.
+@dataclasses.dataclass
+class _Part:
+    index: int  # request index in the stream
+    offset: int  # row offset inside the request
+    x_a: np.ndarray | None
+    x_b: np.ndarray | None
+
+    @property
+    def rows(self) -> int:
+        return len(self.x_a) if self.x_a is not None else len(self.x_b)
+
+
+@dataclasses.dataclass
+class _Batch:
+    """One padded micro-batch ready to execute: static (route, cap)
+    shape, numpy host buffers, and the spans mapping padded rows back to
+    request parts."""
+
+    route: Route
+    cap: int
+    x_a: np.ndarray | None
+    x_b: np.ndarray | None
+    mask: np.ndarray  # (cap,) float 1=live 0=padding
+    spans: list  # [(index, offset, start_row, n_rows)]
+    n_live: int
+
+
+class ServingEngine:
+    """Batched request engine over one client's blended models.
+
+    ``server_gmv`` (the VFL server head) is only needed when the stream
+    may carry ``vfl=True`` requests. ``stats`` accumulates across calls;
+    compiled programs are lazy — only (route, capacity) pairs the
+    traffic actually exercises are built.
+    """
+
+    def __init__(self, models: dict, ecfg: EncoderConfig, kind: str, *,
+                 server_gmv: dict | None = None,
+                 cfg: ServingConfig | None = None):
+        self.models = models
+        self.ecfg = ecfg
+        self.kind = kind
+        self.server_gmv = server_gmv
+        self.cfg = cfg if cfg is not None else ServingConfig()
+        self._codec = wire.make_codec(self.cfg.codec, self.cfg.topk_frac)
+        self._fns: dict = {}  # (Route, cap) -> jitted fn
+        self.stats = {
+            "requests": 0, "rows": 0, "batches": 0,
+            "batches_by_route": {r.value: 0 for r in ROUTES},
+            "wire_messages": 0, "wire_bytes": 0,
+            "build_seconds": 0.0, "stall_seconds": 0.0,
+            "execute_seconds": 0.0,
+        }
+
+    # ------------------------------------------------ compiled programs ---
+
+    def _fn(self, route: Route, cap: int):
+        key = (route, cap)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._build_fn(route)
+            self._fns[key] = fn
+        return fn
+
+    def _build_fn(self, route: Route):
+        import jax  # local: keep module import light for host-only use
+
+        ecfg, kind = self.ecfg, self.kind
+        codec = self._codec if (route is Route.VFL_FALLBACK and self._codec.enabled) else None
+        # The padded x/mask buffers are per-batch scratch — donate them
+        # so XLA can reuse their memory. Model params are NOT donated
+        # (they persist across every batch).
+        if route is Route.VFL_FALLBACK:
+            def fn(models, server_gmv, x_a, x_b, mask):
+                s = route_scores(models, route, x_a, x_b, ecfg, kind,
+                                 server_gmv=server_gmv, codec=codec)
+                return s * mask[:, None]
+            return jax.jit(fn, donate_argnums=(2, 3, 4))
+        if route is Route.MULTIMODAL:
+            def fn(models, x_a, x_b, mask):
+                s = route_scores(models, route, x_a, x_b, ecfg, kind)
+                return s * mask[:, None]
+            return jax.jit(fn, donate_argnums=(1, 2, 3))
+
+        def fn(models, x, mask):
+            xa, xb = (x, None) if route is Route.UNIMODAL_A else (None, x)
+            s = route_scores(models, route, xa, xb, ecfg, kind)
+            return s * mask[:, None]
+        return jax.jit(fn, donate_argnums=(1, 2))
+
+    def cache_counts(self) -> dict:
+        """{(route_value, capacity): compile-cache size}. The engine's
+        standing invariant: every entry is exactly 1 — each (route,
+        capacity) pair compiles once, no matter the request mix."""
+        return {(route.value, cap): fn._cache_size()
+                for (route, cap), fn in sorted(
+                    self._fns.items(), key=lambda kv: (kv[0][0].value, kv[0][1]))}
+
+    # ------------------------------------------------- window assembly ----
+
+    def _plan_window(self, window: list) -> tuple:
+        """Assemble one window of (index, request) into padded
+        micro-batches (host-side numpy only — runs on the worker
+        thread). Returns (meta, batches): meta maps request index to
+        (route, n_parts, rows)."""
+        top = self.cfg.capacities[-1]
+        parts_by_route: dict = {r: [] for r in ROUTES}
+        meta: dict = {}
+        for index, req in window:
+            route = route_for(req)
+            if route is Route.VFL_FALLBACK and self.server_gmv is None:
+                raise ValueError("stream carries vfl=True requests but the "
+                                 "engine has no server_gmv head")
+            n = request_rows(req)
+            n_parts = 0
+            for off in range(0, n, top):
+                end = min(off + top, n)
+                parts_by_route[route].append(_Part(
+                    index, off,
+                    None if req.x_a is None else np.asarray(req.x_a[off:end]),
+                    None if req.x_b is None else np.asarray(req.x_b[off:end])))
+                n_parts += 1
+            meta[index] = (route, n_parts, n)
+
+        batches = []
+        for route in ROUTES:
+            cur, cur_rows = [], 0
+            for part in parts_by_route[route]:
+                if cur and cur_rows + part.rows > top:
+                    batches.append(self._pack(route, cur, cur_rows))
+                    cur, cur_rows = [], 0
+                cur.append(part)
+                cur_rows += part.rows
+            if cur:
+                batches.append(self._pack(route, cur, cur_rows))
+        return meta, batches
+
+    def _pack(self, route: Route, parts: list, n_live: int) -> _Batch:
+        """Pad one coalesced run of same-route parts up to its capacity
+        bucket. Padding rows are zeros with mask 0 — under the per-row
+        wire codec they're independent messages, so they never perturb
+        the live rows' scores."""
+        cap = bucket_for(n_live, self.cfg.capacities)
+
+        def pad(blocks):
+            first = blocks[0]
+            out = np.zeros((cap,) + first.shape[1:], first.dtype)
+            row = 0
+            for b in blocks:
+                out[row:row + len(b)] = b
+                row += len(b)
+            return out
+
+        x_a = pad([p.x_a for p in parts]) if parts[0].x_a is not None else None
+        x_b = pad([p.x_b for p in parts]) if parts[0].x_b is not None else None
+        mask = np.zeros(cap, np.float32)
+        mask[:n_live] = 1.0
+        spans, row = [], 0
+        for p in parts:
+            spans.append((p.index, p.offset, row, p.rows))
+            row += p.rows
+        return _Batch(route, cap, x_a, x_b, mask, spans, n_live)
+
+    # -------------------------------------------------------- execution ---
+
+    def _execute(self, batch: _Batch) -> jnp.ndarray:
+        """Run one padded micro-batch through its compiled program and
+        meter the wire traffic it actually generated."""
+        fn = self._fn(batch.route, batch.cap)
+        mask = jnp.asarray(batch.mask)
+        t0 = time.perf_counter()
+        with warnings.catch_warnings():
+            # Donation pays on accelerators, where the padded input slab
+            # aliases the output allocation; CPU XLA can't use these
+            # donations ((cap, S, F) inputs never alias (cap, out_dim)
+            # scores) and says so once per compile — expected, not a bug.
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            if batch.route is Route.VFL_FALLBACK:
+                scores = fn(self.models, self.server_gmv,
+                            jnp.asarray(batch.x_a), jnp.asarray(batch.x_b),
+                            mask)
+            elif batch.route is Route.MULTIMODAL:
+                scores = fn(self.models, jnp.asarray(batch.x_a),
+                            jnp.asarray(batch.x_b), mask)
+            else:
+                x = batch.x_a if batch.route is Route.UNIMODAL_A else batch.x_b
+                scores = fn(self.models, jnp.asarray(x), mask)
+        scores.block_until_ready()
+        self.stats["execute_seconds"] += time.perf_counter() - t0
+        self.stats["batches"] += 1
+        self.stats["batches_by_route"][batch.route.value] += 1
+        self.stats["rows"] += batch.n_live
+        if batch.route is Route.VFL_FALLBACK:
+            # Measured bytes: this micro-batch moved n_live per-row
+            # feature messages up (x2) and score rows down, priced by
+            # the wire codec — the quantity the analytic
+            # communication_cost formula must reconcile against.
+            cost = communication_cost(batch.n_live, self.ecfg.d_hidden,
+                                      "vfl", int(scores.shape[-1]),
+                                      codec=self._codec)
+            self.stats["wire_messages"] += cost["messages"]
+            self.stats["wire_bytes"] += cost["bytes"]
+        return scores
+
+    def _request_cost(self, route: Route, rows: int, out_dim: int) -> tuple:
+        if route is not Route.VFL_FALLBACK:
+            return 0, 0
+        cost = communication_cost(rows, self.ecfg.d_hidden, "vfl", out_dim,
+                                  codec=self._codec)
+        return cost["messages"], cost["bytes"]
+
+    def _serve_window(self, meta: dict, batches: list):
+        """Execute one assembled window; yield each request's
+        ServedResult as its last part completes."""
+        t_w0 = time.perf_counter()
+        pending = {index: {} for index in meta}  # index -> offset -> scores
+        for batch in batches:
+            scores = self._execute(batch)
+            for index, offset, start, n in batch.spans:
+                pending[index][offset] = scores[start:start + n]
+                route, n_parts, rows = meta[index]
+                if len(pending[index]) == n_parts:
+                    got = pending.pop(index)
+                    full = (got[0] if n_parts == 1 else
+                            jnp.concatenate([got[k] for k in sorted(got)]))
+                    msgs, nbytes = self._request_cost(
+                        route, rows, int(full.shape[-1]))
+                    self.stats["requests"] += 1
+                    yield ServedResult(index, full, route, msgs, nbytes,
+                                       time.perf_counter() - t_w0)
+
+    # -------------------------------------------------------- public API --
+
+    def serve_stream(self, requests):
+        """Serve an iterable of ``InferenceRequest``s, yielding
+        ``ServedResult``s in completion order (same-window requests can
+        reorder across routes; use ``run`` for stream-order results).
+
+        Window assembly (routing + chunking + padding; pure numpy) runs
+        on a daemon worker thread staging up to ``cfg.prefetch`` windows
+        ahead of device execution — the ``data.pipeline`` double-buffer
+        idiom, including its error propagation: an assembly error (e.g.
+        a no-modality request) is re-raised here, not swallowed.
+        """
+        def windows():
+            buf = []
+            for index, req in enumerate(requests):
+                buf.append((index, req))
+                if len(buf) >= self.cfg.window:
+                    yield buf
+                    buf = []
+            if buf:
+                yield buf
+
+        if self.cfg.prefetch <= 0:
+            for win in windows():
+                t0 = time.perf_counter()
+                plan = self._plan_window(win)
+                self.stats["build_seconds"] += time.perf_counter() - t0
+                yield from self._serve_window(*plan)
+            return
+
+        q: queue.Queue = queue.Queue(maxsize=self.cfg.prefetch)
+        stop_evt = threading.Event()
+
+        def _feed(item) -> bool:
+            while not stop_evt.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def worker():
+            try:
+                for win in windows():
+                    t0 = time.perf_counter()
+                    plan = self._plan_window(win)
+                    self.stats["build_seconds"] += time.perf_counter() - t0
+                    if stop_evt.is_set() or not _feed(plan):
+                        return
+                _feed(_SENTINEL)
+            except BaseException as e:  # surface assembly errors to the
+                _feed(e)  # consumer instead of hanging it on q.get()
+
+        t = threading.Thread(target=worker, daemon=True,
+                             name="serving-engine-assembly")
+        t.start()
+        try:
+            while True:
+                t0 = time.perf_counter()
+                item = q.get()
+                self.stats["stall_seconds"] += time.perf_counter() - t0
+                if item is _SENTINEL:
+                    return
+                if isinstance(item, BaseException):
+                    raise item
+                yield from self._serve_window(*item)
+        finally:
+            stop_evt.set()
+
+    def run(self, requests) -> list:
+        """Serve a request list; results in stream order."""
+        return sorted(self.serve_stream(list(requests)),
+                      key=lambda r: r.index)

@@ -9,8 +9,10 @@ compile-cache counts < 1, wire-codec compression fields (ratio < 1,
 zero byte counts; null ``bytes_to_target`` stays valid), and
 convergence fields (``rounds_to_target`` null-or-int>=1, AUROCs inside
 the unit interval), scenario event counts (``n_join`` / ``n_leave`` /
-``n_corrupt`` int >= 0), and attack accounting
-(``backdoor_success_rate`` a number in [0, 1]).
+``n_corrupt`` int >= 0), attack accounting
+(``backdoor_success_rate`` a number in [0, 1]), and serving accounting
+(``p50_ms`` / ``p99_ms`` >= 0 with p50 <= p99 per record, ``rps`` /
+``rows_per_s`` > 0, ``bytes_per_request`` >= 0).
 """
 import json
 import os
@@ -174,6 +176,52 @@ def test_attack_matrix_record_conforms(tmp_path):
                          "rounds_to_target": 7, "target_auroc": 0.8,
                          "final_auroc": 0.85, "best_auroc": 0.85,
                          "backdoor_success_rate": 1.0, "compile_cache": 1}]})
+    r = _run(tmp_path)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_latency_fields_validated(tmp_path):
+    _write(tmp_path, "BENCH_lat.json",
+           {"bench": "serve", "backend": "cpu",
+            "records": [{"mix": "all_multimodal", "p50_ms": -1.0},
+                        {"mix": "vfl_heavy", "p99_ms": "fast"}]})
+    _write(tmp_path, "BENCH_tp.json",
+           {"bench": "serve", "backend": "cpu",
+            "records": [{"rps": 0}, {"rows_per_s": -3.2}]})
+    _write(tmp_path, "BENCH_breq.json",
+           {"bench": "serve", "backend": "cpu",
+            "record": {"bytes_per_request": -8}})
+    r = _run(tmp_path)
+    assert r.returncode == 1
+    assert r.stdout.count("latency must be a number >= 0 ms") == 2
+    assert r.stdout.count("throughput must be a number > 0") == 2
+    assert "byte count must be a number >= 0" in r.stdout
+
+
+def test_inverted_percentiles_flagged(tmp_path):
+    """p50 > p99 in the same record means the percentile bookkeeping
+    broke, even though both values are individually valid."""
+    _write(tmp_path, "BENCH_pinv.json",
+           {"bench": "serve", "backend": "cpu",
+            "records": [{"mix": "vfl_heavy", "p50_ms": 40.0,
+                         "p99_ms": 12.0, "rps": 55.0}]})
+    r = _run(tmp_path)
+    assert r.returncode == 1
+    assert "exceeds p99_ms" in r.stdout
+
+
+def test_serve_record_conforms(tmp_path):
+    """A full BENCH_serve record — zero bytes/request on an all-local
+    mix is a measurement, not a violation (unlike round-traffic bytes)."""
+    _write(tmp_path, "BENCH_serve.json",
+           {"bench": "serve_engine", "backend": "cpu",
+            "records": [{"mix": "all_multimodal", "codec": "none",
+                         "p50_ms": 2.4, "p99_ms": 6.1, "rps": 4100.0,
+                         "rows_per_s": 24500.0, "bytes_per_request": 0.0},
+                        {"mix": "vfl_heavy", "codec": "int8_topk",
+                         "p50_ms": 38.0, "p99_ms": 122.0, "rps": 61.0,
+                         "rows_per_s": 370.0, "bytes_per_request": 160.4}],
+            "record_extra": {"caches": [1, 1, 1, 1]}})
     r = _run(tmp_path)
     assert r.returncode == 0, r.stdout + r.stderr
 

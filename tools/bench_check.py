@@ -34,7 +34,12 @@ schema documented in ``docs/benchmarks.md``:
   scenario bookkeeping broke);
 - attack accounting (``BENCH_attack.json``): ``backdoor_success_rate``
   is a number in [0, 1] (a rate outside the unit interval means the
-  triggered-eval bookkeeping broke).
+  triggered-eval bookkeeping broke);
+- serving accounting (``BENCH_serve.json``): ``p50_ms`` / ``p99_ms``
+  are numbers >= 0 with ``p50_ms <= p99_ms`` wherever both appear in
+  one record (inverted percentiles mean the latency bookkeeping broke),
+  ``rps`` / ``rows_per_s`` are numbers > 0, and ``bytes_per_request``
+  is a number >= 0 (an all-local mix legitimately moves zero bytes).
 
 ``benchmarks/results/`` is gitignored, so a fresh checkout has nothing
 to validate — that's a pass (the checker guards whatever records the
@@ -68,6 +73,14 @@ _AUROC_KEYS = ("target_auroc", "final_auroc", "best_auroc")
 _EVENT_KEYS = ("n_join", "n_leave", "n_corrupt")
 # attack accounting (BENCH_attack.json): a success rate is a fraction
 _RATE_KEYS = ("backdoor_success_rate",)
+# serving accounting (BENCH_serve.json): latencies are non-negative
+# milliseconds with p50 <= p99 wherever both appear in one record,
+# throughputs are strictly positive, and bytes/request is >= 0 (an
+# all-local request mix legitimately moves zero wire bytes — unlike the
+# _BYTES_KEYS round traffic, where zero means broken accounting)
+_LATENCY_KEYS = ("p50_ms", "p99_ms")
+_THROUGHPUT_KEYS = ("rps", "rows_per_s")
+_FREE_BYTES_KEYS = ("bytes_per_request",)
 
 
 def _walk_numbers(node, path, errors):
@@ -93,6 +106,10 @@ def _is_number(v):
 
 def _check_caches(node, path, errors):
     if isinstance(node, dict):
+        p50, p99 = node.get("p50_ms"), node.get("p99_ms")
+        if _is_number(p50) and _is_number(p99) and p50 > p99:
+            errors.append(f"{path}: p50_ms {p50!r} exceeds p99_ms {p99!r} "
+                          "— percentile accounting broke")
         for k, v in node.items():
             p = f"{path}.{k}"
             if k in _CACHE_KEYS:
@@ -126,6 +143,18 @@ def _check_caches(node, path, errors):
                 if not (_is_number(v) and 0.0 <= v <= 1.0):
                     errors.append(f"{p}: attack success rate must be a "
                                   f"number in [0, 1], got {v!r}")
+            elif k in _LATENCY_KEYS:
+                if not (_is_number(v) and v >= 0):
+                    errors.append(f"{p}: latency must be a number >= 0 ms, "
+                                  f"got {v!r}")
+            elif k in _THROUGHPUT_KEYS:
+                if not (_is_number(v) and v > 0):
+                    errors.append(f"{p}: throughput must be a number > 0, "
+                                  f"got {v!r}")
+            elif k in _FREE_BYTES_KEYS:
+                if not (_is_number(v) and v >= 0):
+                    errors.append(f"{p}: byte count must be a number >= 0, "
+                                  f"got {v!r}")
             else:
                 _check_caches(v, p, errors)
     elif isinstance(node, list):
